@@ -1,0 +1,99 @@
+"""Micro-benchmarks: wall-time per call for the hot paths on this host
+(CPU container — the numbers calibrate the harness, not the TPU target)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, n=3) -> float:
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def micro_train_steps() -> List[Row]:
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    rows = []
+    for arch in ("qwen3-14b", "deepseek-v3-671b", "rwkv6-1.6b",
+                 "recurrentgemma-2b"):
+        cfg = get_tiny_config(arch)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        B, S = 2, 64
+        k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+        tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab_size) \
+            if cfg.embed_inputs else jax.random.normal(
+                k1, (B, S, cfg.d_model))
+        batch = {"tokens": tokens,
+                 "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size),
+                 "mask": jnp.ones((B, S), jnp.float32)}
+        if cfg.mrope_sections is not None:
+            batch["positions"] = lm.default_positions(cfg, B, S)
+        f = jax.jit(jax.grad(lambda p: lm.loss_fn(p, cfg, batch)[0]))
+        us = _timeit(lambda: jax.block_until_ready(f(params)))
+        tok_s = B * S / (us / 1e6)
+        rows.append((f"micro/train_grad_{arch}", us, f"{tok_s:.0f} tok/s"))
+    return rows
+
+
+def micro_kernels() -> List[Row]:
+    from repro.kernels import ops
+    rows = []
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 3)
+    B, S, H, hd = 1, 512, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    kk = jax.random.normal(ks[1], (B, S, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, hd), jnp.float32)
+    us = _timeit(lambda: jax.block_until_ready(
+        ops.flash_attention(q, kk, v, block_q=128, block_kv=128)))
+    flops = 4 * B * H * S * S * hd
+    rows.append(("micro/flash_attention_512", us,
+                 f"{flops/us*1e-3:.2f} GFLOP/s-interp"))
+    E, C, D, F = 4, 128, 256, 512
+    x = jax.random.normal(ks[0], (E, C, D))
+    w = jax.random.normal(ks[1], (E, D, F))
+    us = _timeit(lambda: jax.block_until_ready(ops.moe_gemm(x, w)))
+    rows.append(("micro/moe_gemm_4x128x256x512", us,
+                 f"{2*E*C*D*F/us*1e-3:.2f} GFLOP/s-interp"))
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (2, 512, 256))) * 0.2 + 0.79
+    b = jax.random.normal(ks[1], (2, 512, 256)) * 0.1
+    h0 = jnp.zeros((2, 256))
+    us = _timeit(lambda: jax.block_until_ready(ops.rglru_scan(a, b, h0)))
+    rows.append(("micro/rglru_scan_512x256", us, "seq-scan"))
+    return rows
+
+
+def micro_data_pipeline() -> List[Row]:
+    from repro.data import pipeline as dl
+    cfg = dl.DataConfig(vocab_size=151936, seq_len=4096, global_batch=16)
+    src = dl.make_source(cfg)
+    us = _timeit(lambda: src.batch(3), n=3)
+    rows = [("micro/data_batch_16x4096", us,
+             f"{16*4096/(us/1e6)/1e6:.2f} Mtok/s")]
+    return rows
+
+
+def micro_checkpoint(tmp="/tmp/bench_ckpt") -> List[Row]:
+    import shutil
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    from repro.runtime import checkpoint as ckpt
+    cfg = get_tiny_config("qwen3-14b").replace(d_model=256, d_ff=512,
+                                               n_layers=4)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    n_bytes = sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(params))
+    shutil.rmtree(tmp, ignore_errors=True)
+    us = _timeit(lambda: ckpt.save(tmp, 1, {"params": params}), n=3)
+    rows = [("micro/checkpoint_save", us,
+             f"{n_bytes/(us/1e6)/1e9:.2f} GB/s")]
+    shutil.rmtree(tmp, ignore_errors=True)
+    return rows

@@ -1,0 +1,45 @@
+"""§Roofline: the full per-cell table from the dry-run sweep results."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def load(path="results/dryrun.json"):
+    if not os.path.exists(path):
+        return []
+    return [r for r in json.load(open(path)) if "roofline" in r]
+
+
+def roofline_rows(path="results/dryrun.json") -> List[Row]:
+    rows: List[Row] = []
+    for r in sorted(load(path), key=lambda r: (r["arch"], r["shape"],
+                                               r["mesh"])):
+        rl = r["roofline"]
+        name = f"roofline/{r['arch']}.{r['shape']}.{r['mesh']}"
+        rows.append((name, rl["step_time_bound"] * 1e6,
+                     f"dom={rl['dominant']};frac={rl['roofline_fraction']:.3f}"
+                     f";useful={rl['useful_ratio']:.3f}"))
+    return rows
+
+
+def print_full_table(path="results/dryrun.json"):
+    recs = load(path)
+    if not recs:
+        print("no dry-run results found")
+        return
+    hdr = (f"{'arch':<18} {'shape':<12} {'mesh':<8} {'t_comp':>8} "
+           f"{'t_mem':>8} {'t_coll':>8} {'bound':>8} {'dom':>6} "
+           f"{'useful':>7} {'frac':>6}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(recs, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        rl = r["roofline"]
+        print(f"{r['arch']:<18} {r['shape']:<12} {r['mesh']:<8} "
+              f"{rl['t_compute']:>8.4f} {rl['t_memory']:>8.4f} "
+              f"{rl['t_collective']:>8.4f} {rl['step_time_bound']:>8.4f} "
+              f"{rl['dominant']:>6.6s} {rl['useful_ratio']:>7.3f} "
+              f"{rl['roofline_fraction']:>6.3f}")

@@ -1,0 +1,51 @@
+"""Benchmark driver: one section per paper table/figure + micro timings +
+the roofline table.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, "src")
+    sys.path.insert(0, ".")
+    from benchmarks import paper_tables as pt
+    from benchmarks import perf_micro as pm
+    from benchmarks import roofline_table as rt
+
+    sections = [
+        ("Table II (link energies)", pt.table2_link_energy),
+        ("Table III (e/c, E/C)", pt.table3_ec_ratio),
+        ("Table IV (power/core)", pt.table4_power),
+        ("Fig 3 (memory/task)", pt.fig3_memory_per_task),
+        ("Fig 5 (thread throughput)", pt.fig5_thread_throughput),
+        ("Fig 9/10 (DVFS)", pt.fig9_fig10_dvfs),
+        ("Fig 11 (neuron scaling)", pt.fig11_neuron_scaling),
+        ("micro: train grad", pm.micro_train_steps),
+        ("micro: kernels", pm.micro_kernels),
+        ("micro: data", pm.micro_data_pipeline),
+        ("micro: checkpoint", pm.micro_checkpoint),
+        ("roofline table", rt.roofline_rows),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    print("# --- full roofline table ---")
+    try:
+        rt.print_full_table()
+    except Exception:
+        traceback.print_exc()
+        failures += 1
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Case study I (Swallow §X-A): Izhikevich spiking-network simulation.
+
+Event-driven spiking neurons with 10% random connectivity; spikes are
+"messages" (here: a masked matmul against the connectivity table — on a
+mesh, neurons shard over devices and the spike vector is the all-gathered
+message multicast the paper describes).
+
+Also reproduces the Fig. 11 scaling analysis: per-neuron state is ~18 B
+but the 10% connectivity table costs N bits *per neuron*, so neurons per
+64 kB core shrink as N grows and the processors needed grow ~N^2 — the
+paper's conclusion (run many modest sims, not one huge one) falls out of
+``scaling_curve``.
+
+Run:  PYTHONPATH=src python examples/neuron_sim.py [--neurons 512]
+"""
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+CORE_BYTES = 64 * 1024
+STATE_BYTES = 18          # 8 B state + 10 B event buffer (paper)
+CODE_STACK = 1100 + 336   # shared code + stack
+
+
+def max_neurons_per_core(total_neurons: int,
+                         connectivity: float = 0.10) -> int:
+    """Paper's memory model: state + N-bit connectivity row per neuron."""
+    table_bytes = total_neurons / 8.0
+    per_neuron = STATE_BYTES + table_bytes
+    avail = CORE_BYTES - CODE_STACK
+    return max(int(avail // per_neuron), 0)
+
+
+def scaling_curve(max_procs: int = 100_000):
+    """(neurons_per_core, total_neurons) pairs — Fig. 11's red line."""
+    out = []
+    for n_per_core in (1, 2, 4, 8, 16, 32, 64, 128, 191):
+        # solve total = procs * n_per_core with the table constraint
+        # table for total neurons must fit: n_per_core*(18 + total/8) < 63k
+        total = (CORE_BYTES - CODE_STACK) / n_per_core - STATE_BYTES
+        total *= 8.0                       # bits -> neurons
+        procs = total / n_per_core
+        if procs > max_procs:
+            total = max_procs * n_per_core
+        out.append((n_per_core, total))
+    return out
+
+
+def simulate(n_neurons: int = 512, steps: int = 200, seed: int = 0,
+             connectivity: float = 0.10, dt: float = 1.0):
+    """Izhikevich regular-spiking network with random 10% connectivity."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # heterogeneous parameters (Izhikevich 2003)
+    r = jax.random.uniform(k1, (n_neurons,))
+    exc = jax.random.uniform(k2, (n_neurons,)) < 0.8
+    a = jnp.where(exc, 0.02, 0.02 + 0.08 * r)
+    b = jnp.where(exc, 0.2, 0.25 - 0.05 * r)
+    c = jnp.where(exc, -65.0 + 15 * r ** 2, -65.0)
+    d = jnp.where(exc, 8.0 - 6 * r ** 2, 2.0)
+    W = (jax.random.uniform(k3, (n_neurons, n_neurons)) < connectivity)
+    Wv = jnp.where(W, jnp.where(exc[None, :], 0.5, -1.0), 0.0)
+
+    def step(state, key):
+        v, u = state
+        I = 5.0 * jax.random.normal(key, (n_neurons,))
+        fired = v >= 30.0
+        I = I + Wv @ fired.astype(jnp.float32)   # spike multicast
+        v = jnp.where(fired, c, v)
+        u = jnp.where(fired, u + d, u)
+        v = v + dt * (0.04 * v * v + 5.0 * v + 140.0 - u + I)
+        v = jnp.minimum(v, 30.0)
+        u = u + dt * a * (b * v - u)
+        return (v, u), fired.sum()
+
+    keys = jax.random.split(key, steps)
+    v0 = jnp.full((n_neurons,), -65.0)
+    u0 = b * v0
+    (_, _), spikes = jax.lax.scan(step, (v0, u0), keys)
+    total = int(spikes.sum())
+    return {"total_spikes": total,
+            "rate_hz": total / n_neurons / (steps * dt / 1000.0)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--neurons", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    res = simulate(args.neurons, args.steps)
+    print(f"simulated {args.neurons} neurons x {args.steps} ms: "
+          f"{res['total_spikes']} spikes ({res['rate_hz']:.1f} Hz/neuron)")
+
+    print("\nFig. 11 scaling (64 kB cores, 10% connectivity):")
+    print(f"{'neurons/core':>14} {'total neurons':>14} {'procs needed':>14}")
+    for npc, total in scaling_curve():
+        print(f"{npc:>14} {total:>14.0f} {total / npc:>14.0f}")
+    print(f"\nmax neurons/core at N=100k: {max_neurons_per_core(100_000)}"
+          f" (the paper's hard-limit regime: P ~ N^2)")
+
+
+if __name__ == "__main__":
+    main()

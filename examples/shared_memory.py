@@ -1,0 +1,67 @@
+"""Case study II (Swallow §X-B): shared memory emulated on distributed
+memory — single controller vs address%n striping.
+
+Runs batches of random reads/writes against both stores, checks they
+implement the same memory semantics, and prints the traffic/contention
+model that makes the paper prefer striping.
+
+Run:  PYTHONPATH=src python examples/shared_memory.py
+"""
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, "src")
+
+from repro.core.memory_server import (SingleController, StripedStore,
+                                      striped_owner)
+
+
+def main():
+    size = 1 << 16
+    n_nodes = 16
+    n_access = 4096
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    addrs = jax.random.randint(k1, (n_access,), 0, size)
+    vals = jax.random.normal(k2, (n_access,))
+
+    single = SingleController(size)
+    striped = StripedStore(size)
+
+    single.write(addrs, vals)
+    striped.write(addrs, vals)
+    r1 = single.read(addrs)
+    r2 = striped.read(addrs)
+    assert jnp.allclose(r1, r2), "stores disagree"
+    print(f"semantics check OK over {n_access} random accesses")
+
+    print("\nowner mapping (address % n):",
+          [int(striped_owner(a, n_nodes)) for a in range(8)])
+
+    tm_s = single.traffic_model(n_access, n_nodes)
+    tm_d = striped.traffic_model(n_access, n_nodes)
+    print("\n                      single-controller   striped")
+    print(f"remote fraction       {tm_s['remote_fraction']:<19.3f}"
+          f"{tm_d['remote_fraction']:.3f}")
+    print(f"contention points     {tm_s['contention_points']:<19d}"
+          f"{tm_d['contention_points']}")
+    print("\n-> striping removes the serialization point: remote traffic is "
+          "the same,\n   but it spreads over n controllers instead of one "
+          "(the paper's argument).")
+
+    # micro-timing
+    for name, store in (("single", single), ("striped", striped)):
+        f = jax.jit(lambda a: store.read(a))
+        f(addrs)
+        t0 = time.perf_counter()
+        for _ in range(10):
+            jax.block_until_ready(f(addrs))
+        dt = (time.perf_counter() - t0) / 10
+        print(f"{name:>8}: {n_access / dt / 1e6:.1f} M reads/s")
+
+
+if __name__ == "__main__":
+    main()

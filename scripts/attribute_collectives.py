@@ -1,0 +1,39 @@
+"""Attribute collective wire bytes to model ops via HLO metadata op_name."""
+import re
+import sys
+from collections import defaultdict
+
+sys.path.insert(0, "src")
+from repro.analysis import hlo  # noqa: E402
+
+
+def main(path):
+    text = open(path).read()
+    mod = hlo.parse(text)
+    mult = hlo._multipliers(mod)
+
+    # re-scan for metadata on collective lines
+    meta_by_name = {}
+    for line in text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?%([\w\.\-]+) = ", line)
+        if not m:
+            continue
+        om = re.search(r'op_name="([^"]+)"', line)
+        if om:
+            meta_by_name[m.group(1)] = om.group(1)
+
+    agg = defaultdict(float)
+    cnt = defaultdict(int)
+    for c in mod.collectives:
+        meta = meta_by_name.get(c.name, "?")
+        # trim to the interesting tail
+        key = (c.op + " | " + "/".join(meta.split("/")[-3:]))[:140]
+        mul = mult.get(c.comp, 1.0)
+        agg[key] += mul * c.wire_bytes()
+        cnt[key] += int(mul)
+    for k, v in sorted(agg.items(), key=lambda x: -x[1])[:35]:
+        print(f"{v/1e9:10.2f} GB  n={cnt[k]:6d}  {k}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1])

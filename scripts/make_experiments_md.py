@@ -1,0 +1,52 @@
+"""Generate the §Dry-run / §Roofline tables in EXPERIMENTS.md from
+results/dryrun.json (run after sweeps; keeps the hand-written sections)."""
+import json
+import sys
+
+
+def main(path="results/dryrun.json"):
+    recs = [r for r in json.load(open(path)) if "roofline" in r]
+    recs.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+
+    dry = []
+    dry.append("| arch | shape | mesh | lower(s) | compile(s) | "
+               "args GB/dev | temp GB/dev | wire GB/dev | collectives |")
+    dry.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        m = r.get("memory", {})
+        c = r.get("collectives", {})
+        counts = c.get("op_counts", {})
+        dry.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r.get('lower_s', 0):.0f} | {r.get('compile_s', 0):.0f} "
+            f"| {m.get('argument_size_in_bytes', 0)/1e9:.2f} "
+            f"| {m.get('temp_size_in_bytes', 0)/1e9:.2f} "
+            f"| {c.get('total_wire_bytes_per_device', 0)/1e9:.1f} "
+            f"| {sum(counts.values())} |")
+
+    roof = []
+    roof.append("| arch | shape | t_compute | t_memory | t_collective | "
+                "bound(s) | dominant | MODEL/HLO | roofline frac |")
+    roof.append("|---|---|---|---|---|---|---|---|---|")
+    for r in recs:
+        if r["mesh"] != "16x16":
+            continue
+        rl = r["roofline"]
+        roof.append(
+            f"| {r['arch']} | {r['shape']} | {rl['t_compute']:.4f} "
+            f"| {rl['t_memory']:.4f} | {rl['t_collective']:.4f} "
+            f"| {rl['step_time_bound']:.4f} | {rl['dominant']} "
+            f"| {rl['useful_ratio']:.3f} | {rl['roofline_fraction']:.3f} |")
+
+    text = open("EXPERIMENTS.md").read()
+    for marker, table in (("DRYRUN_TABLE", dry), ("ROOFLINE_TABLE", roof)):
+        start = text.index(f"<!-- {marker} -->")
+        end = text.index(f"<!-- /{marker} -->")
+        text = text[:start] + f"<!-- {marker} -->\n" + "\n".join(table) \
+            + "\n" + text[end:]
+    open("EXPERIMENTS.md", "w").write(text)
+    print(f"wrote {len(recs)} cells")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

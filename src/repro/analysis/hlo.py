@@ -1,0 +1,202 @@
+"""Parse compiled HLO text: collective bytes with while-loop trip counts.
+
+``compiled.cost_analysis()`` counts a while body exactly once, and jax
+scans lower to whiles — so a naive sum over the HLO text undercounts every
+per-layer collective by the layer count.  This parser:
+
+  1. splits the HLO module into computations,
+  2. records every instruction's result byte-size,
+  3. builds the call graph (while body/cond, fusion calls, to_apply,
+     conditionals) with multipliers from ``known_trip_count`` attributes,
+  4. sums *wire bytes per device* for every collective, scaled by the
+     product of enclosing trip counts.
+
+Wire-byte model (ring algorithms, g = replica-group size):
+  all-gather        (g-1)/g * output_bytes
+  reduce-scatter    (g-1)/g * input_bytes
+  all-reduce        2(g-1)/g * input_bytes
+  all-to-all        (g-1)/g * input_bytes
+  collective-permute  input_bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+"
+                       r"([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:\s*\{\s*"n"\s*:\s*"?(\d+)')
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([\d,]+)\]<=\[")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "collective-broadcast")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type (tuples summed)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class Collective:
+    comp: str
+    op: str
+    name: str
+    result_bytes: int
+    operand_bytes: int
+    group_size: int
+    attrs: str
+
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        f = (g - 1) / g
+        if self.op == "all-gather":
+            return f * self.result_bytes
+        if self.op == "reduce-scatter":
+            return f * self.operand_bytes
+        if self.op == "all-reduce":
+            return 2 * f * self.operand_bytes
+        if self.op == "all-to-all":
+            return f * self.operand_bytes
+        if self.op in ("collective-permute", "collective-broadcast"):
+            return float(self.operand_bytes)
+        return 0.0
+
+
+@dataclass
+class HLOModule:
+    comp_instr_bytes: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    collectives: List[Collective] = field(default_factory=list)
+    calls: Dict[str, List[Tuple[str, int]]] = field(default_factory=dict)
+    entry: Optional[str] = None
+
+
+def parse(hlo_text: str) -> HLOModule:
+    mod = HLOModule()
+    cur = None
+    for raw in hlo_text.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        # computation header: "name (params...) -> type {" (no '=' before '(')
+        if stripped.endswith("{") and "->" in stripped:
+            head = stripped.split("(")[0]
+            if "=" not in head:
+                m = _COMP_RE.match(stripped)
+                if m:
+                    cur = m.group(1)
+                    mod.comp_instr_bytes.setdefault(cur, {})
+                    mod.calls.setdefault(cur, [])
+                    if stripped.startswith("ENTRY"):
+                        mod.entry = cur
+                    continue
+        if cur is None:
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, type_str, op, rest = mi.groups()
+        rbytes = shape_bytes(type_str)
+        mod.comp_instr_bytes[cur][name] = rbytes
+
+        if op == "while":
+            body = re.search(r"body=%?([\w\.\-]+)", rest)
+            cond = re.search(r"condition=%?([\w\.\-]+)", rest)
+            trip = _TRIP_RE.search(rest)
+            n = int(trip.group(1)) if trip else 1
+            if body:
+                mod.calls[cur].append((body.group(1), n))
+            if cond:
+                mod.calls[cur].append((cond.group(1), n + 1))
+        elif op in ("fusion", "call", "custom-call", "reduce", "sort",
+                    "map", "scatter", "select-and-scatter", "reduce-window",
+                    "all-reduce", "reduce-scatter"):
+            for cm in re.finditer(r"(?:calls|to_apply)=%?([\w\.\-]+)", rest):
+                mod.calls[cur].append((cm.group(1), 1))
+        elif op == "conditional":
+            for cm in re.finditer(r"%([\w\.\-]+)", rest):
+                pass  # branch computations contribute ~no collectives
+
+        if op in COLLECTIVES:
+            # operand bytes: look up operand instruction sizes
+            args = rest.split("),")[0]
+            operand_bytes = 0
+            for om in re.finditer(r"%([\w\.\-]+)", args.split("channel_id")[0]):
+                operand_bytes += mod.comp_instr_bytes[cur].get(om.group(1), 0)
+            g = 1
+            gb = _GROUPS_BRACE_RE.search(rest)
+            gi = _GROUPS_IOTA_RE.search(rest)
+            if gb:
+                g = len(gb.group(1).split(","))
+            elif gi:
+                dims = [int(x) for x in gi.group(1).split(",")]
+                # iota format [n_groups, group_size(, ...)]: product of all
+                # dims after the first = group size
+                g = 1
+                for d in dims[1:]:
+                    g *= d
+                if len(dims) == 1:
+                    g = dims[0]
+            mod.collectives.append(Collective(
+                comp=cur, op=op, name=name, result_bytes=rbytes,
+                operand_bytes=operand_bytes, group_size=g, attrs=rest[:200]))
+    return mod
+
+
+def _multipliers(mod: HLOModule) -> Dict[str, float]:
+    """Execution-count multiplier per computation (from ENTRY)."""
+    mult: Dict[str, float] = defaultdict(float)
+    if mod.entry is None:
+        return {c: 1.0 for c in mod.comp_instr_bytes}
+    stack = [(mod.entry, 1.0)]
+    seen_depth = 0
+    while stack and seen_depth < 100000:
+        seen_depth += 1
+        comp, m = stack.pop()
+        mult[comp] += m
+        for callee, n in mod.calls.get(comp, []):
+            if callee in mod.comp_instr_bytes:
+                stack.append((callee, m * n))
+    return dict(mult)
+
+
+def collective_summary(hlo_text: str) -> dict:
+    """Total per-device collective wire bytes, trip-count-aware."""
+    mod = parse(hlo_text)
+    mult = _multipliers(mod)
+    per_op: Dict[str, float] = defaultdict(float)
+    raw_operand: Dict[str, float] = defaultdict(float)
+    count: Dict[str, int] = defaultdict(int)
+    for c in mod.collectives:
+        m = mult.get(c.comp, 1.0)
+        per_op[c.op] += m * c.wire_bytes()
+        raw_operand[c.op] += m * max(c.operand_bytes, c.result_bytes)
+        count[c.op] += int(m) if m >= 1 else 1
+    return {
+        "wire_bytes_per_device": dict(per_op),
+        "operand_bytes_per_device": dict(raw_operand),
+        "op_counts": dict(count),
+        "total_wire_bytes_per_device": float(sum(per_op.values())),
+        "total_operand_bytes_per_device": float(sum(raw_operand.values())),
+    }

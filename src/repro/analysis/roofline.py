@@ -1,0 +1,103 @@
+"""Three-term roofline from a dry-run cell (Swallow Eqn. 1 at pod scale).
+
+    compute    = HLO_FLOPs / (chips * peak)
+    memory     = HBM_bytes_per_chip / HBM_bw
+    collective = wire_bytes_per_device / link_bw
+
+The collective term *is* the paper's E/C methodology: Swallow Tab. III
+reports communication-to-computation ratios; here the same ratio appears
+as t_collective / t_compute, derived from the compiled HLO instead of
+link datasheets.  MODEL_FLOPS / HLO_FLOPs exposes remat/padding waste
+exactly as the paper's e/c exposes injection overhead.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+from typing import Dict, Optional
+
+from repro.analysis import flops as flops_mod, hlo as hlo_mod
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # terms (seconds)
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    dominant: str
+    # counters
+    hlo_flops_global: float
+    hlo_flops_raw_costanalysis: Optional[float]
+    hbm_bytes_per_chip: float
+    wire_bytes_per_device: float
+    model_flops: float
+    useful_ratio: float            # MODEL_FLOPS / HLO_FLOPs
+    roofline_fraction: float       # t_model / max(term) — the score
+    step_time_bound: float         # max of the three terms
+    collective_detail: Dict[str, float]
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(cfg: ModelConfig, shape: ShapeConfig, mesh_name: str,
+            n_chips: int, tp: int, hlo_text: Optional[str] = None,
+            cost_analysis: Optional[dict] = None,
+            memory_analysis=None) -> Roofline:
+    cost = flops_mod.step_costs(cfg, shape, n_chips, tp=tp)
+
+    wire = 0.0
+    detail: Dict[str, float] = {}
+    if hlo_text is not None:
+        summ = hlo_mod.collective_summary(hlo_text)
+        wire = summ["total_wire_bytes_per_device"]
+        detail = dict(summ["wire_bytes_per_device"])
+        detail["op_counts"] = summ["op_counts"]
+
+    t_compute = cost.flops_total / (n_chips * PEAK_FLOPS_BF16)
+    t_memory = cost.hbm_bytes_per_chip / HBM_BW
+    t_collective = wire / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    t_model = cost.model_flops / (n_chips * PEAK_FLOPS_BF16)
+
+    raw = None
+    if cost_analysis:
+        raw = float(cost_analysis.get("flops", 0.0))
+
+    return Roofline(
+        arch=cfg.name, shape=shape.name, mesh=mesh_name, chips=n_chips,
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        dominant=dominant,
+        hlo_flops_global=cost.flops_total,
+        hlo_flops_raw_costanalysis=raw,
+        hbm_bytes_per_chip=cost.hbm_bytes_per_chip,
+        wire_bytes_per_device=wire,
+        model_flops=cost.model_flops,
+        useful_ratio=cost.model_flops / max(cost.flops_total, 1.0),
+        roofline_fraction=t_model / max(bound, 1e-12),
+        step_time_bound=bound,
+        collective_detail=detail)
+
+
+def format_table(rows) -> str:
+    hdr = (f"{'arch':<18} {'shape':<12} {'mesh':<7} "
+           f"{'t_comp(s)':>10} {'t_mem(s)':>10} {'t_coll(s)':>10} "
+           f"{'bound':>10} {'dom':>6} {'useful':>7} {'roofline':>9}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:<18} {r.shape:<12} {r.mesh:<7} "
+            f"{r.t_compute:>10.4f} {r.t_memory:>10.4f} "
+            f"{r.t_collective:>10.4f} {r.step_time_bound:>10.4f} "
+            f"{r.dominant:>6.6s} {r.useful_ratio:>7.3f} "
+            f"{r.roofline_fraction:>9.3f}")
+    return "\n".join(lines)

@@ -1,0 +1,12 @@
+"""Swallow's contributions (C1-C10, see DESIGN.md §1) as composable modules.
+
+  principles     — §II-A scale-free property checks
+  ratio          — §II-B/V-D e/c & E/C methodology (Tab. III)
+  topology       — §V-A 2.5-D lattice + dimension-ordered routing
+  network        — §V-B/C packet vs circuit link model
+  energy         — §VI-VII energy transparency & proportionality
+  memory_server  — §III-A/X-B nodes-as-storage, address%n striping
+  overlays       — §III-B overlays -> remat/weight-streaming planner
+  paradigms      — §III farmer-worker / streaming pipelines
+  nos            — §VIII nOS: multi-tenant mesh-slice scheduler
+"""

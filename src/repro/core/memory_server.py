@@ -1,0 +1,104 @@
+"""Swallow §III-A + §X-B: nodes as remote data storage / shared-memory
+emulation over distributed memory.
+
+Two strategies, exactly as the paper frames them:
+  * ``SingleController`` — one node owns the whole store; every access is
+    a message to it (simple, a contention point).
+  * ``StripedStore`` — address space striped ``address % n`` over n
+    per-node controllers (the paper's "more elegant strategy").
+
+On the mesh this is a real distributed object store: a fixed-size fp32
+slab sharded over every device; reads/writes are gather/scatter
+collectives issued per batch of addresses.  The same striping rule is
+what the LM stack uses for vocab-sharded embeddings and expert tables —
+``striped_owner`` is the single source of truth for the mapping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import current_env
+
+
+def striped_owner(address, n_nodes: int):
+    """address % n — the paper's distribution rule."""
+    return address % n_nodes
+
+
+@dataclass
+class StripedStore:
+    """address space striped over devices along one mesh axis."""
+    size: int                   # total words
+    axis: str = "model"
+
+    def __post_init__(self):
+        env = current_env()
+        self.env = env
+        self.n = env.mesh.shape[self.axis] if env is not None else 1
+        assert self.size % max(self.n, 1) == 0
+        spec = P(self.axis) if env is not None else P()
+        if env is not None:
+            self.slab = jax.device_put(
+                jnp.zeros((self.size,), jnp.float32),
+                NamedSharding(env.mesh, spec))
+        else:
+            self.slab = jnp.zeros((self.size,), jnp.float32)
+
+    # Stripe layout: word w lives on node w % n at local offset w // n.
+    # jnp layout trick: reshape (n, size/n) puts node stripes contiguous.
+    def _to_slab_index(self, addr):
+        node = addr % self.n
+        local = addr // self.n
+        return node * (self.size // self.n) + local
+
+    def read(self, addresses):
+        """Gather a batch of words (collective when owners are remote)."""
+        return self.slab[self._to_slab_index(addresses)]
+
+    def write(self, addresses, values):
+        self.slab = self.slab.at[self._to_slab_index(addresses)].set(values)
+        return self.slab
+
+    def traffic_model(self, n_accesses: int,
+                      n_nodes: Optional[int] = None) -> dict:
+        """Expected fraction of remote accesses (paper: (n-1)/n of reads
+        leave the node under uniform addressing)."""
+        n = n_nodes if n_nodes is not None else self.n
+        remote = (n - 1) / max(n, 1)
+        return {"remote_fraction": remote,
+                "expected_remote_words": n_accesses * remote,
+                "contention_points": 0}
+
+
+@dataclass
+class SingleController:
+    """One owner node: every access is remote for everyone else."""
+    size: int
+
+    def __post_init__(self):
+        self.slab = jnp.zeros((self.size,), jnp.float32)
+
+    def read(self, addresses):
+        return self.slab[addresses]
+
+    def write(self, addresses, values):
+        self.slab = self.slab.at[addresses].set(values)
+        return self.slab
+
+    def traffic_model(self, n_accesses: int, n_nodes: int) -> dict:
+        remote = (n_nodes - 1) / max(n_nodes, 1)
+        return {"remote_fraction": remote,
+                "expected_remote_words": n_accesses * remote,
+                "contention_points": 1}
+
+
+def memory_per_task(n_procs: int, tasks: int,
+                    node_kb: float = 64.0) -> float:
+    """Fig. 3: memory available per task (kB) when ``tasks`` tasks share
+    ``n_procs`` nodes (idle nodes become storage)."""
+    return n_procs * node_kb / max(tasks, 1)

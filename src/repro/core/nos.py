@@ -1,0 +1,105 @@
+"""Swallow §VIII: nOS — a nano-OS for many-core, as a mesh-slice scheduler.
+
+nOS abstracts thread creation, mapping, network configuration and energy
+optimisation.  At pod scale the analogous runtime owns: mesh slicing
+(placement), job admission (the paper's "multiple non-interacting
+applications"), per-slice energy accounting, and restart orchestration.
+The scheduler is pure host-side logic — unit-testable, no devices
+needed — and produces placements that ``jax.make_mesh`` sub-meshes can
+realise.
+
+Placement policy (paper-faithful): jobs are independent (C1), so slices
+never share chips; allocation is first-fit over whole "data" rows so the
+"model" axis (the high-bandwidth dimension) is never split between
+tenants — locality exactly as §II-B argues.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import energy as energy_mod
+
+
+@dataclass
+class Job:
+    name: str
+    rows_needed: int                   # data-axis rows (model axis is whole)
+    steps: int = 0
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    rows: Tuple[int, ...] = ()
+    state: str = "pending"             # pending|running|done|failed
+
+
+@dataclass
+class NOS:
+    """First-fit row scheduler over a (data x model) pod."""
+    data_rows: int = 16
+    model_cols: int = 16
+    jobs: Dict[str, Job] = field(default_factory=dict)
+    _free: List[int] = field(default_factory=list)
+
+    def __post_init__(self):
+        self._free = list(range(self.data_rows))
+
+    # -- admission -----------------------------------------------------------
+    def submit(self, job: Job) -> bool:
+        job.submitted_at = job.submitted_at or time.time()
+        self.jobs[job.name] = job
+        return self._try_place(job)
+
+    def _try_place(self, job: Job) -> bool:
+        if job.state != "pending" or job.rows_needed > len(self._free):
+            return False
+        job.rows = tuple(sorted(self._free[:job.rows_needed]))
+        self._free = self._free[job.rows_needed:]
+        job.state = "running"
+        job.started_at = time.time()
+        return True
+
+    def finish(self, name: str, state: str = "done"):
+        job = self.jobs[name]
+        self._free = sorted(self._free + list(job.rows))
+        job.rows = ()
+        job.state = state
+        # admit pending jobs in FIFO order
+        for j in sorted(self.jobs.values(), key=lambda j: j.submitted_at):
+            if j.state == "pending":
+                self._try_place(j)
+
+    def fail_rows(self, rows: List[int]):
+        """Hardware failure: evict jobs touching the rows, quarantine them."""
+        evicted = []
+        for job in self.jobs.values():
+            if job.state == "running" and set(job.rows) & set(rows):
+                job.state = "pending"
+                self._free = sorted(set(self._free) | set(job.rows))
+                job.rows = ()
+                evicted.append(job.name)
+        self._free = [r for r in self._free if r not in rows]
+        for j in sorted(self.jobs.values(), key=lambda j: j.submitted_at):
+            if j.state == "pending":
+                self._try_place(j)
+        return evicted
+
+    # -- accounting -----------------------------------------------------------
+    def utilisation(self) -> float:
+        used = self.data_rows - len(self._free)
+        return used / self.data_rows
+
+    def power_estimate_w(self, active_w: float = 200.0,
+                         idle_w: float = 60.0) -> float:
+        """Fleet power (Fig. 8/9 logic): active slices at TDP-ish, free
+        rows idle — energy proportionality at the allocation level."""
+        used = self.data_rows - len(self._free)
+        return (used * active_w + len(self._free) * idle_w) * self.model_cols
+
+    def placement_table(self) -> str:
+        rows = []
+        for j in self.jobs.values():
+            rows.append(f"{j.name:<16} {j.state:<8} rows={list(j.rows)}")
+        rows.append(f"free rows: {self._free}")
+        return "\n".join(rows)

@@ -1,0 +1,76 @@
+"""Swallow §III / Fig. 2: the target computational paradigms.
+
+  farmer-worker (scatter-gather)  — a coordinator splits work over
+      identical workers and reduces the results.  At pod scale this *is*
+      data parallelism: ``farmer_worker`` shards a batch over an axis,
+      maps, and psum-reduces.
+  pipelined / streaming — stages own disjoint program parts and stream
+      activations (parallel/pipeline.py implements 1F1B over "pod").
+  multiple independent applications — disjoint mesh slices, one job per
+      slice (core/nos.py schedules them).
+
+These wrappers exist so examples/benchmarks can exercise the paradigm
+shapes directly, with explicit shard_map communication.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import current_env
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def farmer_worker(work_fn: Callable, data, *, reduce: str = "sum",
+                  axis: str = "data"):
+    """Scatter ``data`` over ``axis``, apply ``work_fn`` per shard, gather
+    or reduce the results (Fig. 2a).  Off-mesh it degrades to work_fn."""
+    env = current_env()
+    if env is None or axis not in env.mesh.axis_names:
+        out = work_fn(data)
+        return out
+
+    from jax.sharding import PartitionSpec as P
+
+    def body(shard):
+        out = work_fn(shard)
+        if reduce == "sum":
+            out = jax.lax.psum(out, axis)
+        elif reduce == "mean":
+            out = jax.lax.pmean(out, axis)
+        return out
+
+    n = env.mesh.shape[axis]
+    assert data.shape[0] % n == 0, (data.shape, n)
+    in_spec = P(axis)
+    out_spec = P() if reduce in ("sum", "mean") else P(axis)
+    return _shard_map(body, mesh=env.mesh, in_specs=(in_spec,),
+                      out_specs=out_spec, check_vma=False)(data)
+
+
+def streaming_pipeline(stage_fns: Sequence[Callable], x,
+                       *, microbatches: int = 1):
+    """Fig. 2b: composed stages with bounded per-stage storage.  On one
+    host this runs the stages over microbatch slices — the scheduling
+    skeleton the pipeline-parallel runtime uses (parallel/pipeline.py
+    distributes the same structure over the "pod"/"stage" axis)."""
+    if microbatches == 1:
+        for f in stage_fns:
+            x = f(x)
+        return x
+    assert x.shape[0] % microbatches == 0
+    parts = jnp.split(x, microbatches, axis=0)
+    outs = []
+    for mb in parts:
+        y = mb
+        for f in stage_fns:
+            y = f(y)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=0)

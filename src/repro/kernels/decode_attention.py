@@ -1,0 +1,99 @@
+"""Pallas TPU decode attention (single query vs KV cache), GQA-aware.
+
+Grid (B, Kv, nT): for each kv head, its G query heads attend to the cache
+in (block_t, hd) tiles with an online softmax carried in VMEM scratch.
+The cache stays in its native (B, T, Kv, hd) layout — no H-expansion copy
+in HBM (decode is memory-bound; the cache read is the roofline term).
+Slots beyond ``pos`` are masked (ring/global semantics handled by the
+caller's mask offset).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def _dec_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                *, scale, softcap, block_t, nt):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    t_start = ti * block_t
+
+    @pl.when(t_start <= pos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (bt, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        slots = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(slots <= pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ti == nt - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l_ref[...], 1e-37)[:, None]
+                            ).astype(o_ref.dtype)
+
+
+def decode_attention(q, k, v, pos, *, scale=None, softcap=None,
+                     block_t=512, interpret=True):
+    """q (B,H,hd); k,v (B,T,Kv,hd); pos () int32. Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    scale = hd ** -0.5 if scale is None else scale
+    bt = min(block_t, T)
+    while T % bt:
+        bt -= 1
+    nt = T // bt
+    qg = q.reshape(B, Kv, G, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_dec_kernel, scale=scale, softcap=softcap,
+                               block_t=bt, nt=nt)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Kv, nt),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, t: (b, kv, 0, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, kv, t: (b, t, kv, 0)),
+            pl.BlockSpec((1, bt, 1, hd), lambda b, kv, t: (b, t, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, kv, t: (b, kv, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(pos_arr, qg, k, v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are deliberately naive — materialize full score matrices, step the
+recurrences one timestep at a time — and are the ground truth for the
+kernel allclose sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    softcap=None):
+    """q,k,v (B,S,H,hd) (k/v pre-expanded to H). Full-scores oracle."""
+    B, S, H, hd = q.shape
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqhd,bthd->bhqt", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= j <= i
+    if window is not None:
+        ok &= (i - j) < window
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", w, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention(q, k, v, pos, *, scale=None, softcap=None):
+    """q (B,H,hd); k,v (B,T,Kv,hd); pos scalar. Valid slots are <= pos."""
+    B, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = jnp.arange(k.shape[1]) <= pos
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
+def rglru_scan(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t, stepwise. a,b (B,S,W) f32; h0 (B,W)."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    hT, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                     jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def rwkv6_scan(r, k, v, lw, u, S0):
+    """Stepwise RWKV-6 wkv. r,k,v,lw (B,S,H,K); u (H,K); S0 (B,H,K,V)."""
+    def step(S, inp):
+        rt, kt, vt, lwt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, o
+    seq = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+                for t in (r, k, v, lw))
+    S_T, os = jax.lax.scan(step, S0.astype(jnp.float32), seq)
+    return jnp.moveaxis(os, 0, 1), S_T
+
+
+def moe_gemm(x, w):
+    """Grouped GEMM: x (E,C,D) @ w (E,D,F) -> (E,C,F), fp32 accumulate."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+    " --xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each runnable cell this lowers the right step function (train_step /
+prefill_step / serve_step) against ShapeDtypeStruct inputs (no
+allocation), compiles it for the 16x16 single-pod mesh and the 2x16x16
+multi-pod mesh, prints memory_analysis / cost_analysis, parses the
+compiled HLO for collective wire bytes, and appends a JSON record per
+cell to --out (incremental, restartable).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh both
+  python -m repro.launch.dryrun --all --out results/dryrun.json
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.analysis import hlo as hlo_mod
+from repro.analysis import roofline as roofline_mod
+from repro.configs import SHAPES, cell_is_runnable, get_config, runnable_cells
+from repro.launch.mesh import make_production_mesh
+from repro import steps as steps_mod
+from repro.parallel.sharding import use_sharding
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules=None, dump_hlo: str = None, impl: str = None) -> dict:
+    cfg = get_config(arch)
+    if impl:
+        cfg = cfg.replace(impl=impl)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    n_chips = mesh.devices.size
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+              "chips": int(n_chips)}
+    t0 = time.time()
+
+    # long_500k-style shapes (global_batch=1) cannot shard the batch axis:
+    # replicate batch, parallelism comes from the model axis only.
+    batch_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    batch_div = 1
+    for a in batch_axes:
+        batch_div *= mesh.shape[a]
+    if shape.global_batch % batch_div:
+        rules = dict(rules or {}, batch=None)
+        record["rules_override"] = {"batch": None}
+
+    with use_sharding(mesh, rules) as env:
+        adam_cfg = steps_mod.adam_config_for(cfg)
+        shardings_of = lambda tree: jax.tree.map(
+            lambda s: s.sharding, tree,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        if shape.kind == "train":
+            params, opt = steps_mod.make_state_structs(cfg, adam_cfg, mesh, env)
+            batch = steps_mod.make_batch_struct(cfg, shape, mesh, env)
+            step = steps_mod.make_train_step(cfg, adam_cfg)
+            # explicit out shardings so donated params/opt alias exactly
+            jf = jax.jit(step, donate_argnums=(0, 1),
+                         out_shardings=(shardings_of(params),
+                                        shardings_of(opt), None))
+            lowered = jf.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            params, _ = steps_mod.make_state_structs(cfg, adam_cfg, mesh, env)
+            batch = steps_mod.make_batch_struct(cfg, shape, mesh, env)
+            step = steps_mod.make_prefill_step(cfg, max_len=shape.seq_len)
+            args = (params, batch["tokens"])
+            if cfg.mrope_sections is not None:
+                args = args + (batch["positions"],)
+            jf = jax.jit(step)
+            lowered = jf.lower(*args)
+        else:  # decode
+            params, _ = steps_mod.make_state_structs(cfg, adam_cfg, mesh, env)
+            tok, caches, pos = steps_mod.make_decode_structs(cfg, shape, mesh,
+                                                             env)
+            step = steps_mod.make_serve_step(cfg)
+            jf = jax.jit(step, donate_argnums=(2,),
+                         out_shardings=(None, None, shardings_of(caches)))
+            lowered = jf.lower(params, tok, caches, pos)
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        print(f"[{arch} x {shape_name} x {mesh_name}] memory_analysis:")
+        print(mem)
+        ca = compiled.cost_analysis() or {}
+        print(f"[{arch} x {shape_name} x {mesh_name}] cost_analysis: "
+              f"flops={ca.get('flops')} bytes={ca.get('bytes accessed')}")
+        record["memory"] = {
+            k: int(getattr(mem, k)) for k in
+            ("temp_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "generated_code_size_in_bytes",
+             "alias_size_in_bytes")
+            if hasattr(mem, k)}
+        record["cost_analysis"] = {
+            k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and k in
+            ("flops", "bytes accessed", "transcendentals",
+             "utilization operand 0 {}", "optimal_seconds")}
+
+        hlo_text = compiled.as_text()
+        if dump_hlo:
+            with open(dump_hlo, "w") as f:
+                f.write(hlo_text)
+        record["collectives"] = hlo_mod.collective_summary(hlo_text)
+
+        tp = mesh.shape["model"]
+        rl = roofline_mod.analyze(cfg, shape, mesh_name, n_chips, tp,
+                                  hlo_text=hlo_text, cost_analysis=ca,
+                                  memory_analysis=mem)
+        record["roofline"] = rl.to_dict()
+        print(f"[{arch} x {shape_name} x {mesh_name}] roofline: "
+              f"compute={rl.t_compute:.4f}s memory={rl.t_memory:.4f}s "
+              f"collective={rl.t_collective:.4f}s dominant={rl.dominant} "
+              f"fraction={rl.roofline_fraction:.3f}")
+    return record
+
+
+def append_record(path: str, record: dict):
+    recs = []
+    if os.path.exists(path):
+        with open(path) as f:
+            recs = json.load(f)
+    recs = [r for r in recs
+            if not (r.get("arch") == record["arch"]
+                    and r.get("shape") == record["shape"]
+                    and r.get("mesh") == record.get("mesh"))]
+    recs.append(record)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(recs, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.json")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--dump-hlo", default=None)
+    ap.add_argument("--impl", default=None)
+    ap.add_argument("--moe-ep", action="store_true",
+                    help="expert-parallel MoE (experts striped over "
+                         "'model') instead of expert-TP")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    cells = list(runnable_cells()) if args.all else [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    existing = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for r in json.load(f):
+                if "error" not in r and "skipped" not in r:
+                    existing.add((r["arch"], r["shape"], r.get("mesh")))
+
+    failures = 0
+    for arch, shape_name in cells:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            if (arch, shape_name, mesh_name) in existing:
+                print(f"skip existing {arch} x {shape_name} x {mesh_name}")
+                continue
+            try:
+                rules = {"expert": "model", "expert_ff": None} \
+                    if args.moe_ep else None
+                rec = run_cell(arch, shape_name, multi, rules=rules,
+                               dump_hlo=args.dump_hlo, impl=args.impl)
+            except Exception as e:  # noqa
+                traceback.print_exc()
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                       "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            append_record(args.out, rec)
+    print(f"done; failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Defined as functions (not module constants) so importing never touches jax
+device state.  The production target is a TPU v5e pod: 16 x 16 = 256 chips
+("data" x "model"), and two pods (2 x 16 x 16 = 512) for the multi-pod
+dry-run, with the "pod" axis crossing the inter-pod (DCN/optical) boundary.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4, pod: int = 1):
+    """Small mesh for CPU multi-device tests (needs XLA host-device flag)."""
+    n = len(jax.devices())
+    assert pod * data * model <= n, (pod, data, model, n)
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# Hardware constants for the roofline (TPU v5e-class chip).
+PEAK_FLOPS_BF16 = 197e12      # per chip
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW = 50e9                 # bytes/s per link (~usable)

@@ -1,0 +1,56 @@
+"""CLI trainer.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tiny-100m \
+      --seq 512 --batch 8 --steps 200 --ckpt-dir /tmp/ck
+
+Use --tiny to run the reduced smoke config of any assigned arch, and
+--devices N (with --data D --model M) to train on N fake CPU devices.
+"""
+import argparse
+import os
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny-100m")
+    ap.add_argument("--tiny", action="store_true",
+                    help="use the reduced smoke config of --arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--metrics", default=None)
+    ap.add_argument("--impl", default=None)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="fake CPU device count (0 = real devices)")
+    ap.add_argument("--data", type=int, default=1)
+    ap.add_argument("--model", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.devices:
+        os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
+            f" --xla_force_host_platform_device_count={args.devices}"
+
+    from repro.configs import get_config, get_tiny_config
+    from repro.configs.base import ShapeConfig
+    from repro.launch.mesh import make_test_mesh
+    from repro.runtime import train_loop
+
+    cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
+    shape = ShapeConfig("cli", args.seq, args.batch, "train")
+    mesh = None
+    if args.data * args.model > 1:
+        mesh = make_test_mesh(args.data, args.model)
+
+    job = train_loop.TrainJobConfig(
+        steps=args.steps, ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every, peak_lr=args.lr,
+        metrics_path=args.metrics)
+    out = train_loop.run(cfg, shape, mesh=mesh, job=job, impl=args.impl)
+    print("final:", {k: v for k, v in out["final_metrics"].items()})
+
+
+if __name__ == "__main__":
+    main()

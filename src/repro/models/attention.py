@@ -1,0 +1,425 @@
+"""GQA attention: reference, blocked-flash (lax.scan), and decode paths.
+
+Sharding strategy (chosen from dry-run HLO attribution, see EXPERIMENTS.md
+§Perf): the attention core runs in *H-space* — q sharded on query heads
+over the "model" axis, k/v all-gathered (replicated) and expanded to H
+before the core.  All block-scan einsums are then shard-local: zero
+collectives inside the flash loops (one AG for k/v + the Megatron-SP
+AG/RS per layer remain).  Non-divisible head counts (40, 28, 10 over
+TP=16) pad intermediates only.
+
+Three implementations (cfg.impl):
+  ref     — naive (S,S) scores; oracle for tests.
+  blocked — q-block x kv-block online-softmax scan; bounded memory; the
+            dry-run lowers this one.  Sliding-window layers slice only the
+            kv window per q block (sub-quadratic compute in the HLO).
+  pallas  — TPU kernel (kernels/flash_attention.py) via kernels.ops.
+
+Caches are stored FLAT (B, T, Kv*hd) so the "model" axis always divides
+top-level cache shardings (kv-head counts like 8 don't divide TP=16).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.parallel.sharding import logical_constraint
+
+NEG_INF = -2.0 ** 30  # large-negative that survives bf16 arithmetic
+
+
+class AttnCache(NamedTuple):
+    # FLAT (B, T, Kv*hd); T = max len (global) or window (local)
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def init(key, cfg, dtype):
+    ks = jax.random.split(key, 6)
+    d, hd = cfg.d_model, cfg.head_dim
+    p = {
+        "wq": nn.dense_init(ks[0], d, cfg.n_heads * hd, dtype),
+        "wk": nn.dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype),
+        "wv": nn.dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype),
+        "wo": nn.dense_init(ks[3], cfg.n_heads * hd, d, dtype,
+                            scale=1.0 / max(1, cfg.n_layers) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _scale(cfg) -> float:
+    return cfg.attn_logit_scale if cfg.attn_logit_scale is not None \
+        else cfg.head_dim ** -0.5
+
+
+def expand_kv(k, n_heads: int):
+    """(B,T,Kv,hd) -> (B,T,H,hd) by repeating each kv head G times."""
+    B, T, Kv, hd = k.shape
+    G = n_heads // Kv
+    if G == 1:
+        return k
+    k = jnp.broadcast_to(k[:, :, :, None, :], (B, T, Kv, G, hd))
+    return k.reshape(B, T, n_heads, hd)
+
+
+def _qkv(p, cfg, x, angles):
+    """Project (fused column-parallel) + head-split + qk-norm + rope.
+
+    x arrives sequence-sharded; one AG inside column_parallel.  Returns
+    q (B,S,H,hd) sharded on heads, k/v (B,S,Kv,hd) replicated over the
+    model axis so the blocked core stays shard-local.
+    """
+    from repro.parallel.collectives import column_parallel
+    qf, kf, vf = column_parallel(x, [p["wq"], p["wk"], p["wv"]])
+    q = _split_heads(qf, cfg.n_heads, cfg.head_dim)
+    k = _split_heads(kf, cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(vf, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = nn.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = nn.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.rope and angles is not None:
+        q = nn.apply_rope(q, angles)
+        k = nn.apply_rope(k, angles)
+    q = logical_constraint(q, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, None, None)
+    v = logical_constraint(v, "batch", None, None, None)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# reference implementation — full (S, S) scores, H-space
+# ---------------------------------------------------------------------------
+def _mask_bias(S: int, causal: bool, window: Optional[int]) -> jnp.ndarray:
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= j <= i
+    if window is not None:
+        ok &= (i - j) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend_ref(q, k, v, *, causal, window, scale, softcap):
+    """q (B,S,H,hd); k,v (B,S,H,hd) pre-expanded -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    s = jnp.einsum("bqhd,bthd->bhqt", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = nn.softcap(s, softcap)
+    s = s + _mask_bias(S, causal, window)[None, None]
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bhqt,bthd->bqhd", w.astype(q.dtype), v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# blocked flash — bounded memory, scan over q and kv blocks (H-space)
+# ---------------------------------------------------------------------------
+def attend_blocked(q, k, v, *, causal, window, scale, softcap,
+                   block_q: int, block_kv: int):
+    B, S, H, hd = q.shape
+    bq = min(block_q, S)
+    while S % bq:
+        bq -= 1
+    bkv = min(block_kv, S)
+    while S % bkv:
+        bkv -= 1
+    nq, nkv = S // bq, S // bkv
+
+    if window is not None and window + bq < S and causal:
+        # sliding-window fast path: slices just the kv window per q block
+        return _attend_local_blocked(q, k, v, causal=causal, window=window,
+                                     scale=scale, softcap=softcap, bq=bq)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, hd), 1, 0)     # (nq,B,bq,H,hd)
+    kb = jnp.moveaxis(k.reshape(B, nkv, bkv, H, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nkv, bkv, H, hd), 1, 0)
+
+    def q_block(qi, q_blk):
+        m0 = jnp.full((B, H, bq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, hd), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, k_blk, v_blk = inputs
+            s = jnp.einsum("bqhd,bthd->bhqt", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            s = nn.softcap(s, softcap)
+            iq = qi * bq + jnp.arange(bq)
+            jk = ki * bkv + jnp.arange(bkv)
+            ok = jnp.ones((bq, bkv), bool)
+            if causal:
+                ok &= jk[None, :] <= iq[:, None]
+            if window is not None:
+                ok &= (iq[:, None] - jk[None, :]) < window
+            s = jnp.where(ok[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqt,bthd->bhqd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      (jnp.arange(nkv), kb, vb))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        return jnp.moveaxis(out, 1, 2)  # (B, bq, H, hd)
+
+    def scan_q(_, inputs):
+        qi, q_blk = inputs
+        return None, q_block(qi, q_blk)
+
+    _, outs = jax.lax.scan(scan_q, None, (jnp.arange(nq), qb))
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+    return o.astype(q.dtype)
+
+
+def _attend_local_blocked(q, k, v, *, causal, window, scale, softcap, bq):
+    """Sliding-window attention: per q block, slice only the kv window.
+
+    Compute in the HLO is O(S * (window + bq)) — genuinely sub-quadratic,
+    which is what makes recurrentgemma long_500k-eligible.
+    """
+    B, S, H, hd = q.shape
+    nq = S // bq
+    span = window + bq
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, hd), 1, 0)
+
+    def q_block(carry, inputs):
+        qi, q_blk = inputs
+        start = jnp.clip(qi * bq + bq - span, 0, S - span)
+        k_w = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        v_w = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        s = jnp.einsum("bqhd,bthd->bhqt", q_blk, k_w,
+                       preferred_element_type=jnp.float32) * scale
+        s = nn.softcap(s, softcap)
+        iq = qi * bq + jnp.arange(bq)
+        jk = start + jnp.arange(span)
+        ok = jnp.ones((bq, span), bool)
+        if causal:
+            ok &= jk[None, :] <= iq[:, None]
+        ok &= (iq[:, None] - jk[None, :]) < window
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqt,bthd->bqhd", w.astype(v_w.dtype), v_w,
+                       preferred_element_type=jnp.float32)
+        return carry, o
+
+    _, outs = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    o = jnp.moveaxis(outs, 0, 1).reshape(B, S, H, hd)
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode — one query against the cache
+# ---------------------------------------------------------------------------
+# The production cache is sharded over the "model" axis on the TIME dim
+# (split-T / flash-decoding): each shard scans its slice and the partial
+# online-softmax stats (m, l, acc) merge with (B,H)-sized psums — the
+# cache bytes never move.  (The first layout — flat features — made GSPMD
+# repartition gigabytes of cache per token whenever kv_heads < TP; see
+# EXPERIMENTS.md §Perf iteration 5.)
+
+def _decode_partial(q, k, v, valid, *, scale, softcap, n_kv):
+    """Partial attention over a cache slice. q (B,1,H,hd);
+    k/v (B,Tl,Kv*hd); valid (Tl,) bool. Returns (m, l, acc)."""
+    B, _, H, hd = q.shape
+    Tl = k.shape[1]
+    Kv = n_kv
+    kk = k.reshape(B, Tl, Kv, hd)
+    vv = v.reshape(B, Tl, Kv, hd)
+    qg = q.reshape(B, Kv, H // Kv, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kk,
+                   preferred_element_type=jnp.float32) * scale
+    s = nn.softcap(s, softcap)
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    m = s.max(-1)                                       # (B,Kv,G)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bkgt,btkd->bkgd", p.astype(vv.dtype), vv,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def attend_decode_sharded(q, cache: AttnCache, pos, *, window, scale,
+                          softcap, n_kv: int, env):
+    """Split-T decode via shard_map (cache time-sharded over "model")."""
+    from repro.models.moe import _shard_map
+    axes = env.resolve("seq_sp")
+    axes = (axes,) if isinstance(axes, str) else tuple(axes or ())
+    B, _, H, hd = q.shape
+    T = cache.k.shape[1]
+
+    def body(q_l, k_l, v_l):
+        idx = jax.lax.axis_index(axes[0])
+        Tl = k_l.shape[1]
+        slots = idx * Tl + jnp.arange(Tl)
+        if window is None:
+            valid = slots <= pos
+        else:
+            abs_pos = pos - ((pos - slots) % T)
+            valid = (abs_pos >= 0) & (abs_pos > pos - window)
+        m, l, acc = _decode_partial(q_l, k_l, v_l, valid, scale=scale,
+                                    softcap=softcap, n_kv=n_kv)
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axes)
+        acc_g = jax.lax.psum(acc * corr[..., None], axes)
+        o = acc_g / jnp.maximum(l_g[..., None], 1e-37)
+        return o.astype(q_l.dtype).reshape(q_l.shape[0], 1, H * hd)
+
+    return _shard_map(
+        body, mesh=env.mesh,
+        in_specs=(env.spec("batch", None, None, None),
+                  env.spec("batch", "seq_sp", None),
+                  env.spec("batch", "seq_sp", None)),
+        out_specs=env.spec("batch", None, None),
+        check_vma=False)(q, cache.k, cache.v)
+
+
+def _split_t_applicable(env, T: int) -> bool:
+    if env is None:
+        return False
+    axes = env.resolve("seq_sp")
+    axes = (axes,) if isinstance(axes, str) else tuple(axes or ())
+    if len(axes) != 1:
+        return False
+    n = env.mesh.shape[axes[0]]
+    return n > 1 and T % n == 0
+
+
+def attend_decode(q, cache: AttnCache, pos, *, window, scale, softcap,
+                  n_kv: int):
+    """q (B,1,H,hd); cache.k/v FLAT (B,T,Kv*hd); pos scalar int32.
+
+    Global cache: slot = t, valid slots are <= pos.
+    Local (ring) cache: slot = t % W; valid = slot abs-position in window.
+    """
+    from repro.parallel.sharding import current_env
+    env = current_env()
+    if _split_t_applicable(env, cache.k.shape[1]):
+        return attend_decode_sharded(q, cache, pos, window=window,
+                                     scale=scale, softcap=softcap,
+                                     n_kv=n_kv, env=env)
+    B, _, H, hd = q.shape
+    T = cache.k.shape[1]
+    Kv = n_kv
+    G = H // Kv
+    k = cache.k.reshape(B, T, Kv, hd)
+    v = cache.v.reshape(B, T, Kv, hd)
+    qg = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = nn.softcap(s, softcap)
+    slots = jnp.arange(T)
+    if window is None:
+        ok = slots <= pos
+    else:
+        abs_pos = pos - ((pos - slots) % T)  # T == window for ring caches
+        ok = (abs_pos >= 0) & (abs_pos > pos - window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o.reshape(B, 1, H * hd)
+
+
+def cache_init(cfg, batch: int, max_len: int, window: Optional[int], dtype):
+    T = min(window, max_len) if window is not None else max_len
+    shape = (batch, T, cfg.n_kv_heads * cfg.head_dim)
+    return AttnCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_update_decode(cache: AttnCache, k_new, v_new, pos, window):
+    """Write the step-t k/v into slot t (global) or t % W (ring).
+
+    k_new/v_new arrive as (B, 1, Kv, hd); the cache stores them flat.
+    """
+    B = k_new.shape[0]
+    k_new = k_new.reshape(B, 1, -1)
+    v_new = v_new.reshape(B, 1, -1)
+    T = cache.k.shape[1]
+    slot = pos % T if window is not None else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    return AttnCache(k, v)
+
+
+def cache_from_prefill(k, v, window, max_len):
+    """Build the flat decode cache from prefill k/v (B,S,Kv,hd)."""
+    B, S, Kv, hd = k.shape
+    k = k.reshape(B, S, Kv * hd)
+    v = v.reshape(B, S, Kv * hd)
+    if window is None:
+        pad = max_len - S
+        if pad > 0:
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        return AttnCache(k, v)
+    W = min(window, max_len)
+    if S >= W:
+        tail_k, tail_v = k[:, S - W:], v[:, S - W:]
+        slots = (jnp.arange(S - W, S)) % W
+        ck = jnp.zeros((B, W, Kv * hd), k.dtype).at[:, slots].set(tail_k)
+        cv = jnp.zeros((B, W, Kv * hd), v.dtype).at[:, slots].set(tail_v)
+        return AttnCache(ck, cv)
+    ck = jnp.zeros((B, W, Kv * hd), k.dtype).at[:, :S].set(k)
+    cv = jnp.zeros((B, W, Kv * hd), v.dtype).at[:, :S].set(v)
+    return AttnCache(ck, cv)
+
+
+# ---------------------------------------------------------------------------
+# full layer entry points
+# ---------------------------------------------------------------------------
+def apply(p, cfg, x, *, kind: str, angles, impl: Optional[str] = None):
+    """Train/prefill path. Returns (out, (k, v))."""
+    impl = impl or cfg.impl
+    window = cfg.sliding_window if kind == "local" else None
+    q, k, v = _qkv(p, cfg, x, angles)
+    kh = expand_kv(k, cfg.n_heads)
+    vh = expand_kv(v, cfg.n_heads)
+    kh = logical_constraint(kh, "batch", None, "heads", None)
+    vh = logical_constraint(vh, "batch", None, "heads", None)
+    kw = dict(causal=cfg.causal, window=window, scale=_scale(cfg),
+              softcap=cfg.attn_softcap)
+    if impl == "ref":
+        o = attend_ref(q, kh, vh, **kw)
+    elif impl == "blocked":
+        o = attend_blocked(q, kh, vh, block_q=cfg.attn_block_q,
+                           block_kv=cfg.attn_block_kv, **kw)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.flash_attention(q, kh, vh, block_q=cfg.attn_block_q,
+                                 block_kv=cfg.attn_block_kv, **kw)
+    else:
+        raise ValueError(impl)
+    o = o.reshape(*x.shape[:-1], cfg.n_heads * cfg.head_dim)
+    from repro.parallel.collectives import row_parallel
+    out = row_parallel(o, p["wo"])
+    return out, (k, v)
+
+
+def apply_decode(p, cfg, x, cache: AttnCache, pos, *, kind: str, angles):
+    """Decode path: x (B,1,D). Returns (out, new_cache)."""
+    window = cfg.sliding_window if kind == "local" else None
+    q, k_new, v_new = _qkv(p, cfg, x, angles)
+    cache = cache_update_decode(cache, k_new, v_new, pos, window)
+    o = attend_decode(q, cache, pos, window=window, scale=_scale(cfg),
+                      softcap=cfg.attn_softcap, n_kv=cfg.n_kv_heads)
+    out = nn.matmul(o, p["wo"])
+    return out, cache

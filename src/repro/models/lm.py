@@ -1,0 +1,453 @@
+"""Unified LM: init / forward / loss / prefill / decode over layer segments.
+
+Layers are grouped into homogeneous *segments* (same cycle of layer kinds,
+same FFN type) and scanned with ``lax.scan`` — the layer-streaming
+structure that keeps the compiled HLO small and gives FSDP its
+gather-per-layer (Swallow C3 "overlays") behaviour.  Heterogeneous
+patterns (gemma2 local/global, recurrentgemma 2:1) scan whole cycles;
+remainder layers form their own segments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks, modules as nn
+from repro.parallel.sharding import logical_constraint
+
+LOSS_CHUNK = 512  # sequence chunk for the fused/chunked cross-entropy
+
+
+class SegmentSpec(NamedTuple):
+    kinds: Tuple[str, ...]
+    is_moe: bool
+    n_cycles: int
+    scanned: bool
+    start_layer: int
+
+
+def make_segments(cfg: ModelConfig) -> List[SegmentSpec]:
+    kinds = cfg.layer_kinds
+    moe_flags = [cfg.moe is not None and i >= cfg.first_k_dense
+                 for i in range(cfg.n_layers)]
+    p = len(cfg.layer_pattern)
+    segs: List[SegmentSpec] = []
+    i = 0
+    while i < cfg.n_layers:
+        if i % p == 0 and i + p <= cfg.n_layers \
+                and len(set(moe_flags[i:i + p])) == 1:
+            # count consecutive full cycles with the same MoE signature
+            n = 0
+            j = i
+            while j + p <= cfg.n_layers \
+                    and kinds[j:j + p] == cfg.layer_pattern \
+                    and len(set(moe_flags[j:j + p])) == 1 \
+                    and moe_flags[j] == moe_flags[i]:
+                n += 1
+                j += p
+            segs.append(SegmentSpec(cfg.layer_pattern, moe_flags[i], n,
+                                    n > 1, i))
+            i = j
+        else:
+            # remainder: group consecutive same-(kind, moe) layers
+            k0, m0 = kinds[i], moe_flags[i]
+            n = 0
+            while i + n < cfg.n_layers and kinds[i + n] == k0 \
+                    and moe_flags[i + n] == m0:
+                n += 1
+            segs.append(SegmentSpec((k0,), m0, n, n > 1, i))
+            i += n
+    assert sum(s.n_cycles * len(s.kinds) for s in segs) == cfg.n_layers
+    return segs
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(key, cfg: ModelConfig):
+    dtype = nn.dt(cfg.param_dtype)
+    segs = make_segments(cfg)
+    n_keys = len(segs) + 4
+    ks = jax.random.split(key, n_keys)
+    params: dict = {}
+    if cfg.embed_inputs:
+        params["embed"] = {"embed_table": nn.embed_init(
+            ks[0], cfg.vocab_size, cfg.d_model, dtype)}
+
+    def cycle_init(k, seg: SegmentSpec):
+        kk = jax.random.split(k, len(seg.kinds))
+        return [blocks.init(kk[j], cfg, seg.kinds[j], seg.is_moe, dtype)
+                for j in range(len(seg.kinds))]
+
+    seg_params = []
+    for si, seg in enumerate(segs):
+        if seg.scanned:
+            seg_keys = jax.random.split(ks[1 + si], seg.n_cycles)
+            seg_params.append(jax.vmap(
+                functools.partial(cycle_init, seg=seg))(seg_keys))
+        else:
+            seg_params.append(cycle_init(ks[1 + si], seg))
+    params["segments"] = seg_params
+    params["final_norm"] = nn.rmsnorm_init(cfg.d_model)
+    if not cfg.tie_embeddings or not cfg.embed_inputs:
+        params["head"] = {"head_w": nn.dense_init(
+            ks[-1], cfg.d_model, cfg.vocab_size, dtype)}
+    if cfg.mtp_depth:
+        kk = jax.random.split(ks[-2], 2 + cfg.mtp_depth)
+        last_seg = segs[-1]
+        params["mtp"] = {
+            "mtp_proj": nn.dense_init(kk[0], 2 * cfg.d_model, cfg.d_model,
+                                      dtype),
+            "norm_h": nn.rmsnorm_init(cfg.d_model),
+            "norm_e": nn.rmsnorm_init(cfg.d_model),
+            "final_norm": nn.rmsnorm_init(cfg.d_model),
+            "block": blocks.init(kk[1], cfg, last_seg.kinds[-1],
+                                 last_seg.is_moe, dtype),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _rope_dim(cfg) -> int:
+    return cfg.mla.qk_rope_head_dim if cfg.mla is not None else cfg.head_dim
+
+
+def _angles(cfg, positions):
+    if not cfg.rope:
+        return None
+    return nn.rope_angles(positions, _rope_dim(cfg), cfg.rope_theta,
+                          cfg.mrope_sections)
+
+
+def default_positions(cfg, batch: int, seq: int, offset: int = 0):
+    pos = jnp.arange(offset, offset + seq, dtype=jnp.int32)[None]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def embed_tokens(params, cfg, tokens):
+    if cfg.embed_inputs:
+        table = params["embed"]["embed_table"]
+        x = jnp.take(table, tokens, axis=0).astype(nn.dt(cfg.activation_dtype))
+    else:
+        x = tokens.astype(nn.dt(cfg.activation_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def head_logits(params, cfg, h):
+    """h (..., D) -> fp32 logits (..., V), with final softcap."""
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        w = params["embed"]["embed_table"]  # (V, D)
+        logits = jax.lax.dot_general(
+            h, w, (((h.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        logits = jax.lax.dot_general(
+            h, params["head"]["head_w"], (((h.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    logits = logical_constraint(logits, "batch", None, "vocab")
+    if cfg.logit_softcap is not None:
+        logits = nn.softcap(logits, cfg.logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens, *, mode: str,
+            positions=None, impl: Optional[str] = None):
+    """tokens: (B,S) int32 ids or (B,S,D) embeddings (stub frontends).
+
+    Returns (h_final (B,S,D) pre-final-norm, caches, aux).
+    caches is None in train mode; in prefill mode it is the raw per-segment
+    cache pytree (convert with ``caches_from_prefill``).
+    """
+    assert mode in ("train", "prefill")
+    x = embed_tokens(params, cfg, tokens)
+    B, S = x.shape[:2]
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    angles = _angles(cfg, positions)
+    x = logical_constraint(x, "batch", "seq_sp", None)
+
+    segs = make_segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+
+    for seg, seg_p in zip(segs, params["segments"]):
+        def cycle_apply(cyc_p, x):
+            cache_list = []
+            aux_c = jnp.zeros((), jnp.float32)
+            for j, kind in enumerate(seg.kinds):
+                x, c, a = blocks.apply(cyc_p[j], cfg, kind, x,
+                                       angles=angles, mode=mode, impl=impl)
+                if mode == "prefill":
+                    cache_list.append(c)
+                aux_c = aux_c + a
+            x = logical_constraint(x, "batch", "seq_sp", None)
+            return x, (tuple(cache_list) if mode == "prefill" else None), aux_c
+
+        if seg.scanned:
+            def scan_body(carry, cyc_p):
+                x, aux = carry
+                x, cache_c, aux_c = cycle_apply(cyc_p, x)
+                return (x, aux + aux_c), cache_c
+
+            if cfg.remat and mode == "train":
+                scan_body = jax.checkpoint(scan_body)
+            (x, aux_total), cache_seg = jax.lax.scan(
+                scan_body, (x, aux_total), seg_p)
+        else:
+            x, cache_seg, aux_c = cycle_apply(seg_p, x)
+            aux_total = aux_total + aux_c
+        caches.append(cache_seg)
+
+    return x, (caches if mode == "prefill" else None), aux_total
+
+
+# ---------------------------------------------------------------------------
+# loss (chunked fused cross-entropy over the sequence)
+# ---------------------------------------------------------------------------
+def _head_weight(params, cfg):
+    """(D, V) head matrix (transposed embedding when tied)."""
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        return params["embed"]["embed_table"].T
+    return params["head"]["head_w"]
+
+
+def _local_ce(logits, labels_c, mask_c, v_offset, v_local, softcap,
+              axes=()):
+    """Vocab-parallel CE on local logits (B,Sc,v_local) fp32.
+
+    With ``axes`` (mesh axis names of the vocab shards) the reductions are
+    explicit psums — exact, and only (B,Sc)-sized traffic on the wire.
+    """
+    if softcap is not None:
+        logits = nn.softcap(logits, softcap)
+    # stop_gradient on the max: pmax has no VJP, and d(lse)/d(logits) is
+    # exactly softmax either way (the max terms cancel analytically)
+    m = jax.lax.stop_gradient(logits.max(-1))
+    if axes:
+        m = jax.lax.stop_gradient(jax.lax.pmax(m, axes))
+    s = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
+    if axes:
+        s = jax.lax.psum(s, axes)
+    lse = m + jnp.log(s)
+    loc = labels_c - v_offset
+    in_range = (loc >= 0) & (loc < v_local)
+    loc = jnp.clip(loc, 0, v_local - 1)
+    correct = jnp.take_along_axis(logits, loc[..., None], axis=-1)[..., 0]
+    correct = jnp.where(in_range, correct, 0.0)
+    if axes:
+        correct = jax.lax.psum(correct, axes)
+    nll = (lse - correct) * mask_c
+    return nll.sum(), mask_c.sum()
+
+
+def _chunk_ce(params, cfg, h_c, labels_c, mask_c):
+    """One sequence chunk of CE.  Under a mesh this is a shard_map with
+    vocab-parallel logits: each shard computes (B,Sc,V/tp) locally and the
+    only collectives are (B,Sc)-sized psums — never logits-sized."""
+    from repro.parallel.sharding import current_env
+    env = current_env()
+    w = _head_weight(params, cfg)
+    vocab_axes = env.resolve("vocab") if env is not None else None
+    if env is None or vocab_axes is None:
+        logits = jax.lax.dot_general(
+            h_c, w, (((h_c.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return _local_ce(logits, labels_c, mask_c, 0, cfg.vocab_size,
+                         cfg.logit_softcap)
+
+    axes = (vocab_axes,) if isinstance(vocab_axes, str) else tuple(vocab_axes)
+    tp = 1
+    for a in axes:
+        tp *= env.mesh.shape[a]
+    if cfg.vocab_size % tp:
+        logits = head_logits(params, cfg, h_c)
+        return _local_ce(logits, labels_c, mask_c, 0, cfg.vocab_size,
+                         None)  # softcap applied in head_logits
+
+    v_local = cfg.vocab_size // tp
+
+    def body(h_l, w_l, lab_l, mask_l):
+        idx = jax.lax.axis_index(axes[0]) if len(axes) == 1 else 0
+        logits = jax.lax.dot_general(
+            h_l, w_l, (((h_l.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        tot, cnt = _local_ce(logits, lab_l, mask_l, idx * v_local, v_local,
+                             cfg.logit_softcap, axes)
+        batch_axes = [a for a in env.mesh.axis_names if a not in axes]
+        if batch_axes:
+            tot = jax.lax.psum(tot, tuple(batch_axes))
+            cnt = jax.lax.psum(cnt, tuple(batch_axes))
+        return tot, cnt
+
+    from repro.models.moe import _shard_map
+    tot, cnt = _shard_map(
+        body, mesh=env.mesh,
+        in_specs=(env.spec("batch", None, None),   # h replicated over model
+                  env.spec(None, "vocab"),
+                  env.spec("batch", None),
+                  env.spec("batch", None)),
+        out_specs=(env.spec(), env.spec()),
+        check_vma=False)(h_c, w, labels_c, mask_c)
+    return tot, cnt
+
+
+def cross_entropy(params, cfg, h, labels, mask):
+    """Chunked CE: never materializes (B,S,V) for the whole sequence."""
+    B, S, D = h.shape
+    c = min(LOSS_CHUNK, S)
+    while S % c:
+        c -= 1
+    n = S // c
+    if n == 1:
+        tot, cnt = _chunk_ce(params, cfg, h, labels, mask)
+        return tot / jnp.maximum(cnt, 1.0)
+
+    hs = jnp.moveaxis(h.reshape(B, n, c, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, c), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, c), 1, 0)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        tot, cnt = carry
+        h_c, l_c, m_c = inp
+        t, k = _chunk_ce(params, cfg, h_c, l_c, m_c)
+        return (tot + t, cnt + k), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, impl=None):
+    """batch: tokens/embeds, labels (B,S), mask (B,S). Returns (loss, metrics)."""
+    tokens = batch["tokens"]
+    h, _, aux = forward(params, cfg, tokens, mode="train",
+                        positions=batch.get("positions"), impl=impl)
+    hn = nn.rmsnorm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    ce = cross_entropy(params, cfg, hn, batch["labels"], batch["mask"])
+    loss = ce
+    metrics = {"ce": ce, "moe_aux": aux}
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_loss_coef * aux
+    if cfg.mtp_depth and "mtp" in params:
+        mtp_ce = _mtp_loss(params, cfg, h, tokens, batch["labels"],
+                           batch["mask"], impl=impl)
+        loss = loss + 0.3 * mtp_ce
+        metrics["mtp_ce"] = mtp_ce
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _mtp_loss(params, cfg, h, tokens, labels, mask, *, impl=None):
+    """DeepSeek multi-token prediction: one extra block predicts t+2."""
+    p = params["mtp"]
+    B, S = labels.shape
+    # embedding of the next token (teacher-forced)
+    e_next = embed_tokens(params, cfg, labels)          # (B,S,D) token t+1
+    hn = nn.rmsnorm(h, p["norm_h"]["scale"], cfg.norm_eps)
+    en = nn.rmsnorm(e_next, p["norm_e"]["scale"], cfg.norm_eps)
+    h_in = nn.matmul(jnp.concatenate([hn, en], -1), p["mtp_proj"])
+    positions = default_positions(cfg, B, S)
+    angles = _angles(cfg, positions)
+    seg = make_segments(cfg)[-1]
+    h_mtp, _, _ = blocks.apply(p["block"], cfg, seg.kinds[-1], h_in,
+                               angles=angles, mode="train", impl=impl)
+    h_mtp = nn.rmsnorm(h_mtp, p["final_norm"]["scale"], cfg.norm_eps)
+    # targets: token t+2 = labels shifted left by one
+    labels2 = jnp.concatenate([labels[:, 1:], labels[:, -1:]], 1)
+    mask2 = jnp.concatenate([mask[:, 1:], jnp.zeros_like(mask[:, -1:])], 1)
+    return cross_entropy(params, cfg, h_mtp, labels2, mask2)
+
+
+# ---------------------------------------------------------------------------
+# prefill / decode
+# ---------------------------------------------------------------------------
+def caches_from_prefill(cfg, raw_caches, max_len: int):
+    segs = make_segments(cfg)
+    out = []
+    for seg, seg_c in zip(segs, raw_caches):
+        def conv_cycle(cyc):
+            return tuple(blocks.cache_from_prefill(cfg, seg.kinds[j], cyc[j],
+                                                   max_len)
+                         for j in range(len(seg.kinds)))
+        if seg.scanned:
+            out.append(jax.vmap(conv_cycle)(seg_c))
+        else:
+            out.append(conv_cycle(seg_c))
+    return out
+
+
+def prefill(params, cfg, tokens, *, max_len: int, positions=None, impl=None):
+    """Returns (next-token logits (B,1,V), decode caches)."""
+    h, raw, _ = forward(params, cfg, tokens, mode="prefill",
+                        positions=positions, impl=impl)
+    caches = caches_from_prefill(cfg, raw, max_len)
+    h_last = h[:, -1:]
+    h_last = nn.rmsnorm(h_last, params["final_norm"]["scale"], cfg.norm_eps)
+    return head_logits(params, cfg, h_last), caches
+
+
+def init_caches(cfg, batch: int, max_len: int):
+    dtype = nn.dt(cfg.activation_dtype)
+    segs = make_segments(cfg)
+    out = []
+    for seg in segs:
+        cyc = tuple(blocks.cache_init(cfg, k, batch, max_len, dtype)
+                    for k in seg.kinds)
+        if seg.scanned:
+            cyc = jax.tree.map(
+                lambda l: jnp.zeros((seg.n_cycles,) + l.shape, l.dtype), cyc)
+        out.append(cyc)
+    return out
+
+
+def decode_step(params, cfg, tokens, caches, pos, *, impl=None):
+    """One decode step. tokens (B,1) ids or (B,1,D) embeds; pos scalar.
+
+    Returns (logits (B,1,V), new caches).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    B = x.shape[0]
+    if cfg.mrope_sections is not None:
+        positions = jnp.full((3, B, 1), pos, jnp.int32)
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    angles = _angles(cfg, positions)
+
+    segs = make_segments(cfg)
+    new_caches = []
+    for seg, seg_p, seg_c in zip(segs, params["segments"], caches):
+        def cycle_decode(cyc_p, cyc_c, x):
+            new_c = []
+            for j, kind in enumerate(seg.kinds):
+                x, c = blocks.apply_decode(cyc_p[j], cfg, kind, x, cyc_c[j],
+                                           pos, angles=angles)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        if seg.scanned:
+            def scan_body(x, inp):
+                cyc_p, cyc_c = inp
+                x, new_c = cycle_decode(cyc_p, cyc_c, x)
+                return x, new_c
+            x, new_seg = jax.lax.scan(scan_body, x, (seg_p, seg_c))
+        else:
+            x, new_seg = cycle_decode(seg_p, seg_c, x)
+        new_caches.append(new_seg)
+
+    h = nn.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return head_logits(params, cfg, h), new_caches

@@ -1,0 +1,225 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3) with weight-absorbed decode.
+
+Prefill/train: latents are up-projected to per-head k/v and attention runs
+as usual (blocked-flash).  Decode: the cache stores only the compressed
+latent c_kv (kv_lora) + the shared rope key (qk_rope_head_dim); queries are
+absorbed through kv_b so scores/outputs are computed directly in latent
+space — cache is O(kv_lora + rope) per token instead of O(H * head_dim).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import modules as nn
+from repro.parallel.sharding import logical_constraint
+
+NEG_INF = attn.NEG_INF
+
+
+class MLACache(NamedTuple):
+    ckv: jnp.ndarray     # (B, T, kv_lora)
+    k_rope: jnp.ndarray  # (B, T, rope_dim)
+
+
+def init(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "q_a": nn.dense_init(ks[0], d, m.q_lora_rank, dtype),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), jnp.float32),
+        "q_b": nn.dense_init(ks[1], m.q_lora_rank, H * qd, dtype),
+        "kv_a": nn.dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                              dtype),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), jnp.float32),
+        "kv_b": nn.dense_init(ks[3], m.kv_lora_rank,
+                              H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": nn.dense_init(ks[4], H * m.v_head_dim, d, dtype,
+                            scale=1.0 / max(1, cfg.n_layers) ** 0.5),
+    }
+    return p
+
+
+def _project_q(p, cfg, x, angles):
+    m = cfg.mla
+    H = cfg.n_heads
+    cq = nn.rmsnorm(nn.matmul(x, p["q_a"]), p["q_a_norm"], cfg.norm_eps)
+    q = nn.matmul(cq, p["q_b"]).reshape(
+        *x.shape[:-1], H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    if angles is not None:
+        q_rope = nn.apply_rope(q_rope, angles)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p, cfg, x, angles):
+    m = cfg.mla
+    lat = nn.matmul(x, p["kv_a"])
+    ckv, k_rope = lat[..., :m.kv_lora_rank], lat[..., m.kv_lora_rank:]
+    ckv = nn.rmsnorm(ckv, p["kv_a_norm"], cfg.norm_eps)
+    if angles is not None:
+        k_rope = nn.apply_rope(k_rope[..., None, :], angles)[..., 0, :]
+    return ckv, k_rope
+
+
+def _scale(cfg) -> float:
+    m = cfg.mla
+    return (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+
+def apply(p, cfg, x, *, angles, impl=None):
+    """Train/prefill. Returns (out, (ckv, k_rope)) for cache building."""
+    m = cfg.mla
+    H = cfg.n_heads
+    B, S, _ = x.shape
+    impl = impl or cfg.impl
+
+    q_nope, q_rope = _project_q(p, cfg, x, angles)
+    ckv, k_rope = _project_kv_latent(p, cfg, x, angles)
+    kv = nn.matmul(ckv, p["kv_b"]).reshape(
+        B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (B, S, H, m.qk_rope_head_dim))], axis=-1)
+    # H-space core: all operands sharded on heads (H=128 divides TP)
+    q = logical_constraint(q, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, "heads", None)
+    v = logical_constraint(v, "batch", None, "heads", None)
+
+    kw = dict(causal=cfg.causal, window=None, scale=_scale(cfg),
+              softcap=cfg.attn_softcap)
+    if impl == "ref":
+        o = attn.attend_ref(q, k, v_pad(v, q.shape[-1]), **kw)
+    elif impl in ("blocked", "pallas"):
+        o = attn.attend_blocked(q, k, v_pad(v, q.shape[-1]),
+                                block_q=cfg.attn_block_q,
+                                block_kv=cfg.attn_block_kv, **kw)
+    else:
+        raise ValueError(impl)
+    o = o[..., :m.v_head_dim]  # un-pad v
+    from repro.parallel.collectives import row_parallel
+    out = row_parallel(o.reshape(B, S, H * m.v_head_dim), p["wo"])
+    return out, (ckv, k_rope)
+
+
+def v_pad(v, d):
+    """Pad v head-dim so the generic attention helpers can be reused."""
+    if v.shape[-1] == d:
+        return v
+    return jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, d - v.shape[-1]),))
+
+
+# ---------------------------------------------------------------------------
+# decode with absorbed weights + latent cache
+# ---------------------------------------------------------------------------
+def _kv_b_split(p, cfg):
+    m = cfg.mla
+    H = cfg.n_heads
+    kv_b = p["kv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = kv_b[..., :m.qk_nope_head_dim]   # (lora, H, nope)
+    w_uv = kv_b[..., m.qk_nope_head_dim:]   # (lora, H, v)
+    return w_uk, w_uv
+
+
+def cache_init(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return MLACache(
+        ckv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype))
+
+
+def cache_from_prefill(ckv, k_rope, max_len):
+    B, S = ckv.shape[:2]
+    pad = max_len - S
+    if pad > 0:
+        ckv = jnp.pad(ckv, ((0, 0), (0, pad), (0, 0)))
+        k_rope = jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0)))
+    return MLACache(ckv, k_rope)
+
+
+def _decode_scores_local(q_lat, q_rope, ckv, k_rope, valid, cfg):
+    """Partial absorbed-attention over a latent-cache slice.
+    Returns (m, l, acc_lat (B,H,lora))."""
+    s = jnp.einsum("bhl,btl->bht", q_lat.astype(ckv.dtype), ckv,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhd,btd->bht", q_rope, k_rope,
+                       preferred_element_type=jnp.float32)
+    s = s * _scale(cfg)
+    s = nn.softcap(s, cfg.attn_softcap)
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    m = s.max(-1)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(-1)
+    acc = jnp.einsum("bht,btl->bhl", p.astype(ckv.dtype), ckv,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def apply_decode(p, cfg, x, cache: MLACache, pos, *, angles):
+    """x (B,1,D). Absorbed-weight decode in latent space.
+
+    With a mesh, the latent cache is time-sharded over "model" (split-T)
+    and the partial softmax stats merge with (B,H)-sized psums.
+    """
+    m = cfg.mla
+    H = cfg.n_heads
+    B = x.shape[0]
+
+    q_nope, q_rope = _project_q(p, cfg, x, angles)       # (B,1,H,nope/rope)
+    ckv_new, k_rope_new = _project_kv_latent(p, cfg, x, angles)
+    ckv = jax.lax.dynamic_update_slice_in_dim(cache.ckv, ckv_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope_new, pos, axis=1)
+
+    w_uk, w_uv = _kv_b_split(p, cfg)
+    # absorb: q_lat[h] = q_nope[h] @ w_uk[:,h,:]^T  -> latent-space query
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0], w_uk,
+                       preferred_element_type=jnp.float32)  # (B,H,lora)
+
+    from repro.models.attention import _split_t_applicable
+    from repro.parallel.sharding import current_env
+    env = current_env()
+    T = ckv.shape[1]
+    if _split_t_applicable(env, T):
+        from repro.models.moe import _shard_map
+        axes = env.resolve("seq_sp")
+        axes = (axes,) if isinstance(axes, str) else tuple(axes)
+
+        def body(q_lat_l, q_rope_l, ckv_l, kr_l):
+            idx = jax.lax.axis_index(axes[0])
+            Tl = ckv_l.shape[1]
+            valid = idx * Tl + jnp.arange(Tl) <= pos
+            mm, ll, acc = _decode_scores_local(q_lat_l, q_rope_l[:, 0],
+                                               ckv_l, kr_l, valid, cfg)
+            m_g = jax.lax.pmax(mm, axes)
+            corr = jnp.exp(mm - m_g)
+            l_g = jax.lax.psum(ll * corr, axes)
+            acc_g = jax.lax.psum(acc * corr[..., None], axes)
+            return acc_g / jnp.maximum(l_g[..., None], 1e-37)
+
+        o_lat = _shard_map(
+            body, mesh=env.mesh,
+            in_specs=(env.spec("batch", None, None),
+                      env.spec("batch", None, None, None),
+                      env.spec("batch", "seq_sp", None),
+                      env.spec("batch", "seq_sp", None)),
+            out_specs=env.spec("batch", None, None),
+            check_vma=False)(q_lat, q_rope, ckv, k_rope)
+    else:
+        valid = jnp.arange(T) <= pos
+        mm, ll, acc = _decode_scores_local(q_lat, q_rope[:, 0], ckv,
+                                           k_rope, valid, cfg)
+        o_lat = acc / jnp.maximum(ll[..., None], 1e-37)
+
+    o = jnp.einsum("bhl,lhv->bhv", o_lat.astype(x.dtype), w_uv,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = nn.matmul(o.reshape(B, 1, H * m.v_head_dim), p["wo"])
+    return out, MLACache(ckv, k_rope)

@@ -1,0 +1,160 @@
+"""Griffin recurrent block: temporal conv1d + RG-LRU gated linear recurrence.
+
+Recurrence (Griffin, arXiv:2402.19427):
+    r_t = sigmoid(blockdiag(W_a) u_t + b_a)          (recurrence gate)
+    i_t = sigmoid(blockdiag(W_x) u_t + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The block: x -> [linear gate branch -> GeLU] * [linear -> conv1d -> RG-LRU]
+           -> linear out.
+
+Implementations: ref = lax.scan over time (oracle); blocked = log-depth
+``associative_scan`` over the sequence; pallas = chunked TPU kernel.
+State is O(width) per sequence — this is what makes recurrentgemma
+long_500k-eligible.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.parallel.sharding import logical_constraint
+
+C_FACTOR = 8.0
+
+
+class RGLRUCache(NamedTuple):
+    h: jnp.ndarray           # (B, W) recurrence state (fp32)
+    conv: jnp.ndarray        # (B, conv_width-1, W) trailing conv inputs
+
+
+def init(key, cfg, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    heads = cfg.n_heads
+    hd = w // heads
+    ks = jax.random.split(key, 8)
+    # Lambda init so that a ~ U[0.9, 0.999]^(1/c) style (Griffin app. A)
+    u = jax.random.uniform(ks[6], (w,), jnp.float32, 0.9, 0.999)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / C_FACTOR))  # inv-softplus
+    return {
+        "lru_in_x": nn.dense_init(ks[0], d, w, dtype),
+        "lru_in_gate": nn.dense_init(ks[1], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, w), jnp.float32)
+                   * (cfg.conv1d_width ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lru_a_gate_w": (jax.random.normal(ks[3], (heads, hd, hd), jnp.float32)
+                         * (hd ** -0.5)).astype(dtype),
+        "lru_a_gate_b": jnp.zeros((heads, hd), jnp.float32),
+        "lru_x_gate_w": (jax.random.normal(ks[4], (heads, hd, hd), jnp.float32)
+                         * (hd ** -0.5)).astype(dtype),
+        "lru_x_gate_b": jnp.zeros((heads, hd), jnp.float32),
+        "lru_a_param": a_param,
+        "lru_out": nn.dense_init(ks[5], w, d, dtype,
+                                 scale=1.0 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def _conv1d(p, x, state=None):
+    """Causal depthwise conv, width K. x (B,S,W); state (B,K-1,W) or None."""
+    K = p["conv_w"].shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * p["conv_w"][K - 1 - i]
+              for i in range(K))
+    return out + p["conv_b"].astype(x.dtype), xp[:, -(K - 1):]
+
+
+def _gates(p, cfg, u):
+    """u (B,S,W) -> log_a, gated_in (both fp32)."""
+    B, S, W = u.shape
+    heads = cfg.n_heads
+    hd = W // heads
+    uh = u.reshape(B, S, heads, hd)
+    r = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", uh, p["lru_a_gate_w"],
+                                  preferred_element_type=jnp.float32)
+                       + p["lru_a_gate_b"])
+    i = jax.nn.sigmoid(jnp.einsum("bshd,hde->bshe", uh, p["lru_x_gate_w"],
+                                  preferred_element_type=jnp.float32)
+                       + p["lru_x_gate_b"])
+    r = r.reshape(B, S, W)
+    i = i.reshape(B, S, W)
+    log_a = -C_FACTOR * jax.nn.softplus(p["lru_a_param"]) * r    # (B,S,W) fp32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u.astype(jnp.float32)
+    return a, gated
+
+
+def _scan_ref(a, b, h0):
+    """h_t = a_t h_{t-1} + b_t via lax.scan over time. a,b (B,S,W) fp32."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    hT, hs = jax.lax.scan(step, h0, (jnp.moveaxis(a, 1, 0),
+                                     jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hT
+
+
+def _scan_assoc(a, b, h0):
+    """Blelloch associative scan over the sequence axis (log-depth)."""
+    # fold h0 into the first step
+    b = b.at[:, 0].add(a[:, 0] * h0)
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+    As, Bs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return Bs, Bs[:, -1]
+
+
+def apply(p, cfg, x, *, impl=None, cache: RGLRUCache = None):
+    """Full-sequence path. x (B,S,D) -> (out, RGLRUCache)."""
+    impl = impl or cfg.impl
+    gate = jax.nn.gelu(nn.matmul(x, p["lru_in_gate"]), approximate=True)
+    ux = nn.matmul(x, p["lru_in_x"])
+    ux = logical_constraint(ux, "batch", None, "tp")
+    conv_state = cache.conv if cache is not None else None
+    u, conv_out = _conv1d(p, ux, conv_state)
+    a, b = _gates(p, cfg, u)
+    h0 = cache.h if cache is not None else jnp.zeros(
+        (x.shape[0], u.shape[-1]), jnp.float32)
+    if impl == "ref":
+        hs, hT = _scan_ref(a, b, h0)
+    elif impl == "blocked":
+        hs, hT = _scan_assoc(a, b, h0)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        hs, hT = kops.rglru_scan(a, b, h0)
+    else:
+        raise ValueError(impl)
+    out = (hs.astype(x.dtype) * gate)
+    from repro.parallel.collectives import row_parallel
+    out = row_parallel(out, p["lru_out"])
+    return out, RGLRUCache(h=hT, conv=conv_out)
+
+
+def apply_decode(p, cfg, x, cache: RGLRUCache):
+    """Single-step path. x (B,1,D)."""
+    gate = jax.nn.gelu(nn.matmul(x, p["lru_in_gate"]), approximate=True)
+    ux = nn.matmul(x, p["lru_in_x"])
+    u, conv_state = _conv1d(p, ux, cache.conv)
+    a, b = _gates(p, cfg, u)
+    h = a[:, 0] * cache.h + b[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate)
+    out = nn.matmul(out, p["lru_out"])
+    return out, RGLRUCache(h=h, conv=conv_state)
+
+
+def cache_init(cfg, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return RGLRUCache(h=jnp.zeros((batch, w), jnp.float32),
+                      conv=jnp.zeros((batch, cfg.conv1d_width - 1, w), dtype))

@@ -1,0 +1,241 @@
+"""RWKV-6 "Finch" layer: time-mix with data-dependent decay + channel-mix.
+
+Time-mix recurrence per head (K = V = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with data-dependent per-channel decay w_t = exp(-exp(dd_t)) and token-shift
+low-rank interpolation for the five projections (w,k,v,r,g).
+
+Implementations: ref = lax.scan over time; blocked = chunked algorithm with
+exact log-space intra-chunk decays (scan over chunks of length L, inside
+each chunk an (L,L,K) masked-decay product — bounded memory, no 1/A
+overflow); pallas = same chunk math as a TPU kernel.
+
+The layer bundles its own channel-mix (squared-ReLU with token shift), so
+blocks.py treats kind=="rwkv6" as a complete layer.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import modules as nn
+from repro.parallel.sharding import logical_constraint
+
+LORA_MIX = 32
+LORA_DECAY = 64
+CHUNK = 32
+
+
+class RWKVCache(NamedTuple):
+    state: jnp.ndarray    # (B, H, K, V) fp32 time-mix state
+    x_tm: jnp.ndarray     # (B, D) previous token (time-mix shift)
+    x_cm: jnp.ndarray     # (B, D) previous token (channel-mix shift)
+
+
+def init(key, cfg, dtype):
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 14)
+    scale_o = 1.0 / max(1, cfg.n_layers) ** 0.5
+    p = {
+        "rwkv_mix_x": jnp.zeros((d,), jnp.float32),
+        "rwkv_mix_base": jnp.zeros((5, d), jnp.float32),
+        "rwkv_mix_lora_a": (jax.random.normal(ks[0], (d, 5, LORA_MIX),
+                                              jnp.float32) * d ** -0.5
+                            ).astype(dtype),
+        "rwkv_mix_lora_b": (jax.random.normal(ks[1], (5, LORA_MIX, d),
+                                              jnp.float32) * LORA_MIX ** -0.5
+                            ).astype(dtype),
+        "rwkv_decay_base": jnp.full((d,), -1.0, jnp.float32),
+        "rwkv_decay_lora_a": (jax.random.normal(ks[2], (d, LORA_DECAY),
+                                                jnp.float32) * d ** -0.5
+                              ).astype(dtype),
+        "rwkv_decay_lora_b": (jax.random.normal(ks[3], (LORA_DECAY, d),
+                                                jnp.float32)
+                              * LORA_DECAY ** -0.5).astype(dtype),
+        "rwkv_u": (jax.random.normal(ks[4], (H, hd), jnp.float32) * 0.1),
+        "rwkv_wr": nn.dense_init(ks[5], d, d, dtype),
+        "rwkv_wk": nn.dense_init(ks[6], d, d, dtype),
+        "rwkv_wv": nn.dense_init(ks[7], d, d, dtype),
+        "rwkv_wg": nn.dense_init(ks[8], d, d, dtype),
+        "rwkv_wo": nn.dense_init(ks[9], d, d, dtype, scale=scale_o),
+        "rwkv_ln_scale": jnp.ones((d,), jnp.float32),
+        "rwkv_ln_bias": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "rwkv_cm_mix_k": jnp.full((d,), 0.5, jnp.float32),
+        "rwkv_cm_mix_r": jnp.full((d,), 0.5, jnp.float32),
+        "rwkv_cm_wk": nn.dense_init(ks[10], d, cfg.d_ff, dtype),
+        "rwkv_cm_wv": nn.dense_init(ks[11], cfg.d_ff, d, dtype, scale=scale_o),
+        "rwkv_cm_wr": nn.dense_init(ks[12], d, d, dtype),
+    }
+    return p
+
+
+def _shift(x, x_prev):
+    """x (B,S,D); x_prev (B,D) -> previous-token tensor (B,S,D)."""
+    return jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]], 1)
+
+
+def _time_mix_inputs(p, x, x_prev):
+    """Token-shift interpolation -> (xw, xk, xv, xr, xg), each (B,S,D)."""
+    sx = _shift(x, x_prev) - x
+    xxx = x + sx * p["rwkv_mix_x"].astype(x.dtype)
+    h = jnp.tanh(jnp.einsum("bsd,dfk->bsfk", xxx, p["rwkv_mix_lora_a"],
+                            preferred_element_type=jnp.float32))
+    deltas = jnp.einsum("bsfk,fkd->bsfd", h.astype(x.dtype),
+                        p["rwkv_mix_lora_b"],
+                        preferred_element_type=jnp.float32)
+    mix = p["rwkv_mix_base"][None, None].astype(jnp.float32) + deltas
+    outs = x.astype(jnp.float32)[:, :, None] \
+        + sx.astype(jnp.float32)[:, :, None] * mix
+    outs = outs.astype(x.dtype)
+    return tuple(outs[:, :, i] for i in range(5))
+
+
+def _decay(p, xw):
+    """Per-channel log-decay lw = -exp(dd) (B,S,D) fp32; w = exp(lw)."""
+    dd = p["rwkv_decay_base"].astype(jnp.float32) + jnp.einsum(
+        "bsd,dk,ke->bse", xw, p["rwkv_decay_lora_a"], p["rwkv_decay_lora_b"],
+        preferred_element_type=jnp.float32).astype(jnp.float32)
+    return -jnp.exp(dd)
+
+
+def _group_norm(p, o, eps=64e-5):
+    """Per-head layernorm on (B,S,H,hd), then (D,) scale/bias."""
+    B, S, H, hd = o.shape
+    mu = o.mean(-1, keepdims=True)
+    var = o.var(-1, keepdims=True)
+    y = (o - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(B, S, H * hd)
+    return y * p["rwkv_ln_scale"] + p["rwkv_ln_bias"]
+
+
+# ---------------------------------------------------------------------------
+# wkv recurrence
+# ---------------------------------------------------------------------------
+def _wkv_ref(r, k, v, lw, u, S0):
+    """lax.scan oracle. r,k,v (B,S,H,K); lw (B,S,H,K) log decay; u (H,K);
+    S0 (B,H,K,V). Returns (o (B,S,H,V), S_T)."""
+    def step(S, inp):
+        rt, kt, vt, lwt = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt,
+                        preferred_element_type=jnp.float32)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv,
+                       preferred_element_type=jnp.float32)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, o
+    seq = (jnp.moveaxis(r, 1, 0).astype(jnp.float32),
+           jnp.moveaxis(k, 1, 0).astype(jnp.float32),
+           jnp.moveaxis(v, 1, 0).astype(jnp.float32),
+           jnp.moveaxis(lw, 1, 0))
+    S_T, os = jax.lax.scan(step, S0, seq)
+    return jnp.moveaxis(os, 0, 1), S_T
+
+
+def _wkv_chunked(r, k, v, lw, u, S0, chunk=CHUNK):
+    """Chunked algorithm, exact in fp32 log space.
+
+    Within a chunk of length L (la = inclusive cumsum of lw):
+      inter:  o_t += (r_t * exp(la_{t-1})) @ S0
+      intra:  o_t += sum_{s<t} (sum_K r k exp(la_{t-1}-la_s)) v_s
+      diag:   o_t += (r_t * u * k_t) @ v_t
+      state:  S' = diag(exp(la_L)) S0 + sum_s (k_s exp(la_L - la_s))^T v_s
+    All exponent differences are <= 0, so nothing overflows.
+    """
+    B, S, H, K = r.shape
+    V = v.shape[-1]
+    L = min(chunk, S)
+    while S % L:
+        L -= 1
+    n = S // L
+    rf = r.astype(jnp.float32).reshape(B, n, L, H, K)
+    kf = k.astype(jnp.float32).reshape(B, n, L, H, K)
+    vf = v.astype(jnp.float32).reshape(B, n, L, H, V)
+    lwf = lw.reshape(B, n, L, H, K)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)       # s < t
+
+    def chunk_step(S0, inp):
+        rc, kc, vc, lwc = inp                            # (B,L,H,*)
+        la = jnp.cumsum(lwc, axis=1)                     # inclusive
+        la_prev = la - lwc                               # la_{t-1}
+        q_int = rc * jnp.exp(la_prev)                    # (B,L,H,K)
+        o = jnp.einsum("blhk,bhkv->blhv", q_int, S0)
+        # intra-chunk: exponent la_prev[t] - la[s], masked s<t.  The mask
+        # must be applied to the EXPONENT (not the exp output): for s > t
+        # the difference is positive and exp overflows, and inf * 0 in the
+        # VJP of where() would poison the gradients with NaNs.
+        diff = la_prev[:, :, None] - la[:, None]         # (B,L,L,H,K) t,s
+        diff = jnp.where(mask[None, :, :, None, None], diff, -jnp.inf)
+        p = jnp.exp(diff)
+        A = jnp.einsum("blhk,bmhk,blmhk->blmh", rc, kc, p)
+        o = o + jnp.einsum("blmh,bmhv->blhv", A, vc)
+        # current-token bonus
+        du = jnp.einsum("blhk,blhk->blh", rc, u[None, None] * kc)
+        o = o + du[..., None] * vc
+        # state update
+        la_L = la[:, -1]                                 # (B,H,K)
+        k_dec = kc * jnp.exp(la_L[:, None] - la)
+        S1 = jnp.exp(la_L)[..., None] * S0 + jnp.einsum(
+            "blhk,blhv->bhkv", k_dec, vc)
+        return S1, o
+
+    seq = (jnp.moveaxis(rf, 1, 0), jnp.moveaxis(kf, 1, 0),
+           jnp.moveaxis(vf, 1, 0), jnp.moveaxis(lwf, 1, 0))
+    S_T, os = jax.lax.scan(chunk_step, S0, seq)          # os (n,B,L,H,V)
+    o = jnp.moveaxis(os, 0, 1).reshape(B, S, H, V)
+    return o, S_T
+
+
+# ---------------------------------------------------------------------------
+# layer entry points
+# ---------------------------------------------------------------------------
+def time_mix(p, cfg, x, cache: RWKVCache, *, impl=None):
+    impl = impl or cfg.impl
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    xw, xk, xv, xr, xg = _time_mix_inputs(p, x, cache.x_tm)
+    r = nn.matmul(xr, p["rwkv_wr"]).reshape(B, S, H, hd)
+    k = nn.matmul(xk, p["rwkv_wk"]).reshape(B, S, H, hd)
+    v = nn.matmul(xv, p["rwkv_wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(nn.matmul(xg, p["rwkv_wg"]))
+    lw = _decay(p, xw).reshape(B, S, H, hd)
+    r = logical_constraint(r, "batch", None, "heads", None)
+    k = logical_constraint(k, "batch", None, "heads", None)
+    v = logical_constraint(v, "batch", None, "heads", None)
+    u = p["rwkv_u"].astype(jnp.float32)
+    if impl == "ref":
+        o, S_T = _wkv_ref(r, k, v, lw, u, cache.state)
+    elif impl == "blocked":
+        o, S_T = _wkv_chunked(r, k, v, lw, u, cache.state)
+    elif impl == "pallas":
+        from repro.kernels import ops as kops
+        o, S_T = kops.rwkv6_scan(r, k, v, lw, u, cache.state)
+    else:
+        raise ValueError(impl)
+    o = _group_norm(p, o.astype(jnp.float32)).astype(x.dtype)
+    from repro.parallel.collectives import row_parallel
+    out = row_parallel(o * g, p["rwkv_wo"])
+    return out, RWKVCache(state=S_T, x_tm=x[:, -1], x_cm=cache.x_cm)
+
+
+def channel_mix(p, cfg, x, cache: RWKVCache):
+    sx = _shift(x, cache.x_cm) - x
+    xk = x + sx * p["rwkv_cm_mix_k"].astype(x.dtype)
+    xr = x + sx * p["rwkv_cm_mix_r"].astype(x.dtype)
+    h = jnp.square(jax.nn.relu(nn.matmul(xk, p["rwkv_cm_wk"])))
+    h = logical_constraint(h, "batch", None, "ffn")
+    from repro.parallel.collectives import row_parallel
+    out = jax.nn.sigmoid(nn.matmul(xr, p["rwkv_cm_wr"])) \
+        * row_parallel(h, p["rwkv_cm_wv"])
+    return out, RWKVCache(state=cache.state, x_tm=cache.x_tm, x_cm=x[:, -1])
+
+
+def cache_init(cfg, batch: int, dtype):
+    return RWKVCache(
+        state=jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim),
+                        jnp.float32),
+        x_tm=jnp.zeros((batch, cfg.d_model), dtype),
+        x_cm=jnp.zeros((batch, cfg.d_model), dtype))

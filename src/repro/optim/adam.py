@@ -1,0 +1,180 @@
+"""AdamW in pure JAX with per-arch state-dtype policies.
+
+opt_state_dtype: "float32" | "bfloat16" | "int8" (blockwise-quantized,
+see optim/quant.py).  Moments are stored as flat per-leaf lists so that
+int8 QTensor leaves coexist with arrays; quantized moments are *fully
+sharded* over every mesh axis (ZeRO-1-style) — the memory policy that
+lets deepseek-v3 fit a 256-chip pod.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.optim import quant
+
+
+@dataclass(frozen=True)
+class AdamConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    state_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: List[Any]     # per-leaf moments (arrays or QTensors), params order
+    v: List[Any]
+
+
+def _encode(x, dtype: str, *, second_moment: bool):
+    """Moments stay PARAM-SHAPED (sharded like the parameter plus extra
+    ZeRO sharding on a data-replicated dim — see state_specs).  A flat
+    fully-sharded layout was tried first and made GSPMD all-gather entire
+    moment tensors each step (6.5 TB/step for deepseek: EXPERIMENTS.md
+    §Perf iteration 6)."""
+    if dtype == "float32":
+        return x.astype(jnp.float32)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    if dtype == "int8":
+        if quant.aligned_ok(x.shape):
+            return quant.quantize_aligned(x, sqrt_encode=second_moment)
+        return quant.quantize(x, sqrt_encode=second_moment)
+    raise ValueError(dtype)
+
+
+def _decode(x, shape):
+    if isinstance(x, quant.QTensor):
+        return quant.dequantize(x)
+    return x.astype(jnp.float32)
+
+
+def init(params, cfg: AdamConfig) -> AdamState:
+    leaves = jax.tree.leaves(params)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    m = [_encode(zeros(p), cfg.state_dtype, second_moment=False)
+         for p in leaves]
+    v = [_encode(zeros(p), cfg.state_dtype, second_moment=True)
+         for p in leaves]
+    return AdamState(step=jnp.zeros((), jnp.int32), m=m, v=v)
+
+
+def _augment_spec(shape, spec: P, batch_axes) -> P:
+    """ZeRO-1: extend the param spec with the (grad-replicated) batch axes
+    on the largest still-unsharded, divisible dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for e in entries:
+        if isinstance(e, str):
+            used.add(e)
+        elif isinstance(e, tuple):
+            used.update(e)
+    batch_axes = {a: s for a, s in batch_axes.items() if a not in used}
+    n = 1
+    for a in batch_axes:
+        n *= batch_axes[a]
+    if n <= 1:
+        return P(*entries)
+    best, best_size = None, 0
+    for i, (d, e) in enumerate(zip(shape, entries)):
+        if e is None and d % n == 0 and d > best_size:
+            best, best_size = i, d
+    if best is not None:
+        entries[best] = tuple(batch_axes)
+    return P(*entries)
+
+
+def state_specs(params, cfg: AdamConfig, param_spec_tree):
+    """PartitionSpec pytree matching AdamState.
+
+    Moments are param-shaped with the param's spec AUGMENTED by the batch
+    ("pod","data") axes on a grad-replicated dim: the update math is then
+    completely local (grads are replicated over those axes), and only the
+    updated params are re-gathered — textbook ZeRO-1 without any moment
+    movement.
+    """
+    from repro.parallel.sharding import current_env
+    env = current_env()
+    if env is None:
+        batch_axes = {}
+    else:
+        batch_axes = {a: env.mesh.shape[a] for a in ("pod", "data")
+                      if a in env.mesh.axis_names}
+    all_axes = tuple(env.mesh.axis_names) if env is not None else ()
+    flat2d = P(all_axes, None) if all_axes else P()
+    flat1d = P(all_axes) if all_axes else P()
+
+    p_leaves = jax.tree.leaves(params)
+    s_leaves = jax.tree.leaves(param_spec_tree,
+                               is_leaf=lambda x: isinstance(x, P))
+
+    def moment_spec(p, s, sq):
+        aug = _augment_spec(p.shape, s, batch_axes)
+        if cfg.state_dtype == "int8":
+            if quant.aligned_ok(p.shape):
+                nb_scale_spec = P(*(list(aug)[:-1] + [None]))
+                return quant.QTensor(q=aug, scale=nb_scale_spec,
+                                     shape=p.shape, sqrt_encoded=sq,
+                                     mode="aligned")
+            return quant.QTensor(q=flat2d, scale=flat1d, shape=p.shape,
+                                 sqrt_encoded=sq, mode="flat")
+        return aug
+
+    m = [moment_spec(p, s, False) for p, s in zip(p_leaves, s_leaves)]
+    v = [moment_spec(p, s, True) for p, s in zip(p_leaves, s_leaves)]
+    return AdamState(step=P(), m=m, v=v)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def update(grads, state: AdamState, params, *, lr, cfg: AdamConfig):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = state.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    p_leaves, treedef = jax.tree_util.tree_flatten(params)
+    g_leaves = treedef.flatten_up_to(grads)
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m_enc, v_enc in zip(p_leaves, g_leaves, state.m, state.v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * _decode(m_enc, p.shape) + (1 - cfg.b1) * g
+        v = cfg.b2 * _decode(v_enc, p.shape) + (1 - cfg.b2) * jnp.square(g)
+        delta = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay and p.ndim >= 2:   # no decay on norms/biases
+            delta = delta + cfg.weight_decay * pf
+        new_p.append((pf - lr * delta).astype(p.dtype))
+        new_m.append(_encode(m, cfg.state_dtype, second_moment=False))
+        new_v.append(_encode(v, cfg.state_dtype, second_moment=True))
+
+    params_out = jax.tree_util.tree_unflatten(treedef, new_p)
+    return params_out, AdamState(step, new_m, new_v), {"grad_norm": gnorm}
+
+
+# -- schedules --------------------------------------------------------------
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int,
+                  min_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return peak_lr * jnp.where(s < warmup, warm, cos)

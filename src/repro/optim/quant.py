@@ -1,0 +1,105 @@
+"""Blockwise int8 quantization for optimizer state and gradient compression.
+
+Swallow's 64 kB-per-core memory pressure reappears at pod scale as
+HBM-per-chip pressure: deepseek-v3 (671B params) only fits a 256-chip pod
+with bf16 params + int8 Adam moments.  Blocks of 256 along the trailing
+dim share one fp32 absmax scale; second moments are stored as sqrt to
+tame their dynamic range.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+# block count padded to a multiple of this so the flat (n_blocks, BLOCK)
+# layout can be sharded over every mesh axis (512-chip multi-pod mesh)
+MAX_SHARDS = 512
+
+
+def _pad_blocks(n_blocks: int) -> int:
+    return -(-n_blocks // MAX_SHARDS) * MAX_SHARDS
+
+
+BLOCK_ALIGNED = 128   # last-dim block for the param-shaped layout
+
+
+class QTensor(NamedTuple):
+    # mode "flat": q (n_blocks, BLOCK) int8, scale (n_blocks,)
+    # mode "aligned": q = param-shaped int8, scale (..., last/BLOCK_ALIGNED)
+    #   — keeps the moment sharding identical to the parameter sharding so
+    #   the optimizer update is comms-free (see EXPERIMENTS.md §Perf it. 6)
+    q: jnp.ndarray
+    scale: jnp.ndarray
+    shape: tuple          # original shape (static)
+    sqrt_encoded: bool
+    mode: str = "flat"
+
+
+def flatten_blocks(x) -> jnp.ndarray:
+    """(any shape) -> fp32 (n_blocks_padded, BLOCK) fully-shardable layout."""
+    xf = x.astype(jnp.float32).reshape(-1)
+    n_blocks = _pad_blocks(-(-xf.size // BLOCK))
+    pad = n_blocks * BLOCK - xf.size
+    if pad:
+        xf = jnp.pad(xf, (0, pad))
+    return xf.reshape(n_blocks, BLOCK)
+
+
+def unflatten_blocks(xb, shape) -> jnp.ndarray:
+    n = 1
+    for s in shape:
+        n *= s
+    return xb.astype(jnp.float32).reshape(-1)[:n].reshape(shape)
+
+
+def quantize(x, *, sqrt_encode: bool = False) -> QTensor:
+    shape = x.shape
+    xf = x.astype(jnp.float32)
+    if sqrt_encode:
+        xf = jnp.sqrt(jnp.maximum(xf, 0.0))
+    xb = flatten_blocks(xf)
+    scale = jnp.max(jnp.abs(xb), axis=1)
+    q = jnp.round(xb / jnp.maximum(scale[:, None], 1e-12) * 127.0)
+    return QTensor(q.astype(jnp.int8), scale, shape, sqrt_encode, "flat")
+
+
+def aligned_ok(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] % BLOCK_ALIGNED == 0
+
+
+def quantize_aligned(x, *, sqrt_encode: bool = False) -> QTensor:
+    """Param-shaped int8 with per-(last-dim-block) scales — the moment
+    tensor shards exactly like the parameter."""
+    shape = x.shape
+    xf = x.astype(jnp.float32)
+    if sqrt_encode:
+        xf = jnp.sqrt(jnp.maximum(xf, 0.0))
+    nb = shape[-1] // BLOCK_ALIGNED
+    xb = xf.reshape(*shape[:-1], nb, BLOCK_ALIGNED)
+    scale = jnp.max(jnp.abs(xb), axis=-1)                   # (..., nb)
+    q = jnp.round(xb / jnp.maximum(scale[..., None], 1e-12) * 127.0)
+    return QTensor(q.reshape(shape).astype(jnp.int8), scale, shape,
+                   sqrt_encode, "aligned")
+
+
+def dequantize(qt: QTensor) -> jnp.ndarray:
+    if qt.mode == "aligned":
+        nb = qt.shape[-1] // BLOCK_ALIGNED
+        xb = qt.q.reshape(*qt.shape[:-1], nb, BLOCK_ALIGNED).astype(
+            jnp.float32) * (qt.scale[..., None] / 127.0)
+        xf = xb.reshape(qt.shape)
+    else:
+        xb = qt.q.astype(jnp.float32) * (qt.scale[:, None] / 127.0)
+        xf = unflatten_blocks(xb, qt.shape)
+    if qt.sqrt_encoded:
+        xf = jnp.square(xf)
+    return xf
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda t: ((t.q, t.scale), (t.shape, t.sqrt_encoded, t.mode)),
+    lambda aux, ch: QTensor(ch[0], ch[1], aux[0], aux[1], aux[2]))

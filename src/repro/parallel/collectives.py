@@ -1,0 +1,145 @@
+"""Explicit sequence-parallel collectives (Megatron-SP via shard_map).
+
+GSPMD's AllReduce->ReduceScatter rewrite is a backend optimization pass —
+the CPU pipeline we dry-run on doesn't apply it, and at 1000-node scale
+one does not want to *hope* the compiler halves the dominant wire term.
+These wrappers make the two Megatron-SP collectives explicit program
+text (the Swallow rule: every byte on the wire is visible):
+
+  gather_seq(x)        (B, S/tp, D) -> (B, S, D)      all-gather
+                       backward: psum_scatter          reduce-scatter
+  row_parallel(x, w)   partial dot -> (B, S/tp, N)     reduce-scatter
+                       backward: all-gather
+
+shard_map autodiff transposes all_gather <-> psum_scatter exactly, so the
+backward pass gets the optimal pattern too (this is what eliminated the
+fp32 (B,S,D) all-reduces the HLO attribution found — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import current_env
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _axes_tuple(a):
+    if a is None:
+        return ()
+    return (a,) if isinstance(a, str) else tuple(a)
+
+
+def _sp_axes(env):
+    return _axes_tuple(env.resolve("seq_sp")) if env is not None else ()
+
+
+def _applicable(x, env):
+    if env is None or x.ndim != 3 or x.shape[1] <= 1:
+        return ()
+    axes = _sp_axes(env)
+    n = 1
+    for a in axes:
+        n *= env.mesh.shape[a]
+    if n <= 1 or x.shape[1] % n:
+        return ()
+    return axes
+
+
+def gather_seq(x):
+    """(B, S, D) seq-sharded -> full sequence, replicated over "model".
+
+    Backward is a reduce-scatter of the cotangent.  No-op without a mesh
+    (or for decode-length sequences).
+    """
+    env = current_env()
+    axes = _applicable(x, env)
+    if not axes:
+        return x
+
+    def body(x_l):
+        for ax in axes:
+            x_l = jax.lax.all_gather(x_l, ax, axis=1, tiled=True)
+        return x_l
+
+    return _shard_map(
+        body, mesh=env.mesh,
+        in_specs=(env.spec("batch", "seq_sp", None),),
+        out_specs=env.spec("batch", None, None),
+        check_vma=False)(x)
+
+
+def column_parallel(x, ws, out_dtype=None):
+    """Fused column-parallel matmuls: one AG of the seq-sharded input, N
+    local dots against column-sharded weights.
+
+    The fusion matters for the backward pass: the transpose computes all
+    weight-gradient contractions *inside* the shard_map body and emits a
+    single reduce-scatter for the input cotangent — no partial-sum
+    all-reduces escape to GSPMD (the failure mode HLO attribution found).
+
+    x (B, S/tp, D); ws list of (D, N_i) sharded on N_i.
+    Returns list of (B, S, N_i/tp-sharded) activations.
+    """
+    env = current_env()
+    out_dtype = out_dtype or x.dtype
+    axes = _applicable(x, env)
+    if not axes:
+        return [jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(out_dtype)
+            for w in ws]
+
+    def body(x_l, *ws_l):
+        for ax in axes:
+            x_l = jax.lax.all_gather(x_l, ax, axis=1, tiled=True)
+        return tuple(
+            jax.lax.dot_general(x_l, w_l, (((2,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32
+                                ).astype(out_dtype)
+            for w_l in ws_l)
+
+    outs = _shard_map(
+        body, mesh=env.mesh,
+        in_specs=(env.spec("batch", "seq_sp", None),)
+        + tuple(env.spec(None, "tp") for _ in ws),
+        out_specs=tuple(env.spec("batch", None, "tp") for _ in ws),
+        check_vma=False)(x, *ws)
+    return list(outs)
+
+
+def row_parallel(x, w, out_dtype=None):
+    """Row-parallel matmul with explicit reduce-scatter output.
+
+    x (B, S, K) sharded on K over "model"; w (K, N) sharded on K.
+    Returns (B, S, N) sequence-sharded over "model".  Falls back to a
+    plain fp32-accum matmul (with an all-psum for decode) off-mesh.
+    """
+    env = current_env()
+    out_dtype = out_dtype or x.dtype
+    axes = _applicable(x, env)
+    if not axes:
+        y = jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        return y.astype(out_dtype)
+
+    def body(x_l, w_l):
+        y = jax.lax.dot_general(x_l, w_l, (((2,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        y = y.astype(out_dtype)   # reduce on the wire in activation dtype
+        for ax in axes:
+            y = jax.lax.psum_scatter(y, ax, scatter_dimension=1, tiled=True)
+        return y
+
+    return _shard_map(
+        body, mesh=env.mesh,
+        in_specs=(env.spec("batch", None, "tp"), env.spec("tp", None)),
+        out_specs=env.spec("batch", "seq_sp", None),
+        check_vma=False)(x, w)

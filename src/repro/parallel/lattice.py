@@ -1,0 +1,86 @@
+"""Dimension-ordered collectives — the Swallow lattice lesson (§V-A)
+applied to multi-pod all-reduce.
+
+Swallow's 2.5-D lattice routes one dimension per layer, crossing layers
+at most twice.  The pod-scale translation: decompose big collectives one
+mesh axis at a time, cheapest dimension last, so the slow (DCN) axis
+carries only 1/N_fast of the bytes:
+
+  lattice_all_reduce(x, ("data", "pod")):
+      reduce-scatter over "data"   (fast ICI, full bytes)
+      all-reduce over "pod"        (slow DCN, bytes / n_data)
+      all-gather over "data"
+
+vs a flat all-reduce over ("data","pod") which drags full gradients
+across the pod boundary.  ``dcn_bytes_saved`` quantifies the win; the
+equivalence tests prove numerical identity with psum.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import current_env
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _lattice_ar_local(x, fast_axes: Tuple[str, ...], slow_axis: str):
+    """Per-shard body: RS over fast axes, AR over slow, AG back."""
+    # flatten to 1-D so scatter dims always divide
+    shape = x.shape
+    flat = x.reshape(-1)
+    for ax in fast_axes:
+        flat = jax.lax.psum_scatter(flat, ax, scatter_dimension=0,
+                                    tiled=True)
+    if slow_axis is not None:
+        flat = jax.lax.psum(flat, slow_axis)
+    for ax in reversed(fast_axes):
+        flat = jax.lax.all_gather(flat, ax, axis=0, tiled=True)
+    return flat.reshape(shape)
+
+
+def lattice_all_reduce(x, fast_axes: Sequence[str] = ("data",),
+                       slow_axis: str = "pod"):
+    """Dimension-ordered all-reduce of a replicated array.
+
+    Numerically identical to psum over (fast + slow) axes; wire bytes on
+    the slow axis shrink by prod(fast sizes).
+    """
+    env = current_env()
+    if env is None:
+        return x
+    fast = tuple(a for a in fast_axes if a in env.mesh.axis_names
+                 and env.mesh.shape[a] > 1)
+    slow = slow_axis if (slow_axis in env.mesh.axis_names
+                         and env.mesh.shape[slow_axis] > 1) else None
+    if not fast and slow is None:
+        return x
+    n = 1
+    for a in fast:
+        n *= env.mesh.shape[a]
+    pad = (-x.size) % n
+    body = partial(_lattice_ar_local, fast_axes=fast, slow_axis=slow)
+    if pad:
+        orig = x.shape
+        xp = jnp.pad(x.reshape(-1), (0, pad))
+        out = _shard_map(body, mesh=env.mesh, in_specs=(P(),),
+                         out_specs=P(), check_vma=False)(xp)
+        return out[:x.size].reshape(orig)
+    return _shard_map(body, mesh=env.mesh, in_specs=(P(),), out_specs=P(),
+                      check_vma=False)(x)
+
+
+def dcn_bytes_saved(nbytes: float, n_fast: int, n_pods: int) -> dict:
+    """Wire bytes over the pod (DCN) boundary: flat vs dimension-ordered."""
+    flat = 2.0 * nbytes * (n_pods - 1) / n_pods          # full AR over DCN
+    lattice = 2.0 * (nbytes / n_fast) * (n_pods - 1) / n_pods
+    return {"flat_dcn_bytes": flat, "lattice_dcn_bytes": lattice,
+            "saving_factor": flat / max(lattice, 1e-12)}

@@ -1,0 +1,86 @@
+"""Pipeline parallelism over a mesh axis (Swallow Fig. 2b at pod scale).
+
+GPipe-style schedule via shard_map + ppermute: stage s holds its layer
+group's params (stacked dim sharded over the "stage" axis); microbatches
+enter at stage 0, flow through the ring, and leave at stage n-1.  The
+fill/drain bubble is the textbook (n_stages - 1) / (n_micro + n_stages - 1)
+overhead, reported by ``bubble_fraction``.  Differentiating through the
+shard_map transposes every ppermute, so the backward pass is the reverse
+pipeline automatically.
+
+The unit here is an arbitrary ``stage_fn(stage_params, x) -> x``; the
+benchmarks drive it with transformer-block stacks.  The collective-permute
+traffic this emits is the Swallow "streaming" pattern: activations only,
+no weights, nearest-neighbor.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import current_env
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x,
+                   *, n_micro: int, axis: str = "stage"):
+    """Run ``x`` through ``n_stages`` = mesh.shape[axis] stages.
+
+    stage_params: pytree with leading dim n_stages (sharded over ``axis``).
+    x: (batch, ...) — batch must divide n_micro.
+    Returns y with the same shape, replicated over the stage axis.
+    """
+    env = current_env()
+    if env is None or axis not in env.mesh.axis_names \
+            or env.mesh.shape[axis] == 1:
+        # degenerate: run all stages sequentially
+        n_stages = jax.tree.leaves(stage_params)[0].shape[0]
+        for s in range(n_stages):
+            p_s = jax.tree.map(lambda l: l[s], stage_params)
+            x = stage_fn(p_s, x)
+        return x
+
+    n_stages = env.mesh.shape[axis]
+    B = x.shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    mb = B // n_micro
+    xs = x.reshape(n_micro, mb, *x.shape[1:])
+    fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+    def body(p_local, xs_l):
+        p_s = jax.tree.map(lambda l: l[0], p_local)
+        idx = jax.lax.axis_index(axis)
+        is_first = idx == 0
+        is_last = idx == n_stages - 1
+        carry = jnp.zeros_like(xs_l[0])
+        outs = jnp.zeros_like(xs_l)
+        total = n_micro + n_stages - 1
+        for t in range(total):
+            inject = xs_l[min(t, n_micro - 1)]
+            x_in = jnp.where(is_first, inject, carry)
+            y = stage_fn(p_s, x_in)
+            o_idx = t - (n_stages - 1)
+            if o_idx >= 0:
+                outs = jnp.where(is_last,
+                                 outs.at[o_idx].set(y), outs)
+            carry = jax.lax.ppermute(y, axis, fwd_perm)
+        # deliver: only the last stage holds real outputs -> psum-mask
+        outs = jnp.where(is_last, outs, jnp.zeros_like(outs))
+        return jax.lax.psum(outs, axis)
+
+    in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
+    ys = _shard_map(body, mesh=env.mesh, in_specs=in_specs, out_specs=P(),
+                    check_vma=False)(stage_params, xs)
+    return ys.reshape(B, *x.shape[1:])

@@ -1,0 +1,157 @@
+"""Sharded, atomic, async checkpointing (restart is Swallow C1 at pod scale:
+any step can be recomputed from (seed, step) + the last checkpoint).
+
+Format: <dir>/step_<N>/
+    manifest.json   — pytree structure, leaf paths/shapes/dtypes, mesh info
+    arrays.npz      — leaf path -> ndarray (QTensor leaves flatten to q/scale)
+
+Atomicity: write to step_<N>.tmp, fsync, rename.  Async: a snapshot is
+taken synchronously (device_get) and written by a daemon thread so the
+train loop never blocks on disk.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.parallel.sharding import path_str
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out[path_str(path)] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def save(ckpt_dir: str, step: int, state: Any,
+         extra_meta: Optional[dict] = None) -> str:
+    """Synchronous atomic checkpoint. Returns final path."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    arrays = _flatten(state)
+    treedef = jax.tree_util.tree_structure(state)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+        "extra": extra_meta or {},
+        "time": time.time(),
+    }
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def restore(ckpt_dir: str, state_template: Any,
+            step: Optional[int] = None,
+            shardings: Any = None) -> Tuple[int, Any]:
+    """Restore into the structure of ``state_template``.
+
+    ``shardings`` (optional pytree of NamedShardings) re-places leaves onto
+    the current mesh — this is what makes restore *elastic*: the checkpoint
+    carries no mesh assumptions, only logical arrays.
+    """
+    path = latest(ckpt_dir) if step is None else os.path.join(
+        ckpt_dir, f"step_{step:08d}")
+    if path is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+
+    flat_tpl, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+    shard_leaves = None
+    if shardings is not None:
+        shard_leaves = jax.tree_util.tree_leaves(shardings)
+        assert len(shard_leaves) == len(flat_tpl)
+    leaves = []
+    for i, (p, tpl) in enumerate(flat_tpl):
+        key = path_str(p)
+        arr = data[key]
+        assert tuple(arr.shape) == tuple(tpl.shape), (key, arr.shape,
+                                                      tpl.shape)
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return manifest["step"], jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    return os.path.join(ckpt_dir, steps[-1]) if steps else None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    p = latest(ckpt_dir)
+    return int(p.rsplit("_", 1)[1]) if p else None
+
+
+class AsyncCheckpointer:
+    """Snapshot synchronously, write in a daemon thread; keep_last GC."""
+
+    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, state: Any, extra_meta: Optional[dict] = None):
+        self.wait()
+        arrays = _flatten(state)  # snapshot now (cheap: host copies)
+        treedef = jax.tree_util.tree_structure(state)
+
+        def _write():
+            try:
+                final = os.path.join(self.ckpt_dir, f"step_{step:08d}")
+                tmp = final + ".tmp"
+                os.makedirs(tmp, exist_ok=True)
+                np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+                manifest = {
+                    "step": step, "treedef": str(treedef),
+                    "leaves": {k: {"shape": list(v.shape),
+                                   "dtype": str(v.dtype)}
+                               for k, v in arrays.items()},
+                    "extra": extra_meta or {}, "time": time.time()}
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump(manifest, f, indent=1)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def _gc(self):
+        steps = sorted(d for d in os.listdir(self.ckpt_dir)
+                       if d.startswith("step_") and not d.endswith(".tmp"))
+        for d in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.ckpt_dir, d), ignore_errors=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e

@@ -1,0 +1,67 @@
+"""Elastic rescaling: restore a checkpoint onto a different mesh.
+
+Checkpoints store logical arrays only (runtime/checkpoint.py), and every
+sharding is derived from (mesh, rules) at restore time — so moving from
+16x16 to 12x16 after losing data rows is: build new mesh -> recompute
+specs -> device_put shards.  The only constraint is the global batch:
+``rebatch`` keeps tokens-per-step constant by raising grad-accumulation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro import steps as steps_mod
+from repro.optim import adam as adam_lib
+from repro.parallel.sharding import ShardingEnv, param_specs, use_sharding
+from repro.runtime import checkpoint as ckpt_lib
+
+
+def state_shardings(cfg, adam_cfg, env: ShardingEnv):
+    p_shape = steps_mod.abstract_params(cfg)
+    p_spec = param_specs(p_shape, env)
+    o_shape = steps_mod.abstract_opt_state(cfg, adam_cfg, p_shape)
+    o_spec = adam_lib.state_specs(p_shape, adam_cfg, p_spec)
+    mk = lambda s: jax.sharding.NamedSharding(env.mesh, s)
+    return (jax.tree.map(mk, p_spec,
+                         is_leaf=lambda x: isinstance(
+                             x, jax.sharding.PartitionSpec)),
+            jax.tree.map(mk, o_spec,
+                         is_leaf=lambda x: isinstance(
+                             x, jax.sharding.PartitionSpec)))
+
+
+def restore_elastic(ckpt_dir: str, cfg, adam_cfg, new_mesh,
+                    rules=None) -> Tuple[int, Any, Any]:
+    """Restore (step, params, opt_state) re-sharded for ``new_mesh``."""
+    with use_sharding(new_mesh, rules) as env:
+        p_shape = steps_mod.abstract_params(cfg)
+        o_shape = steps_mod.abstract_opt_state(cfg, adam_cfg, p_shape)
+        shardings = None
+        if env is not None:
+            p_shard, o_shard = state_shardings(cfg, adam_cfg, env)
+            shardings = {"params": p_shard, "opt": o_shard}
+        step, state = ckpt_lib.restore(
+            ckpt_dir, {"params": p_shape, "opt": o_shape},
+            shardings=shardings)
+    return step, state["params"], state["opt"]
+
+
+def rebatch(global_batch: int, old_data: int, new_data: int,
+            accum: int = 1) -> Tuple[int, int]:
+    """Keep the *optimizer* batch (global_batch x accum) constant when the
+    data axis changes: returns (per_step_batch, accum_steps).
+
+    Policy: per-step batch must divide by the new data axis; any remainder
+    of the optimizer batch is recovered by raising grad accumulation.
+    """
+    opt_tokens = global_batch * accum
+    per = (global_batch // new_data) * new_data
+    per = max(per, new_data)
+    new_accum = max(1, round(opt_tokens / per))
+    return per, new_accum
+
+
+__all__ = ["restore_elastic", "state_shardings", "rebatch"]

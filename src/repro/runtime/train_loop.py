@@ -1,0 +1,137 @@
+"""Fault-tolerant training loop: checkpoint/restart, health, stragglers.
+
+The loop is host-side nOS (Swallow C8): it owns placement, persistence and
+recovery so the model code never sees any of it.  Deterministic data
+(seed, step) + atomic checkpoints give exactly-once step semantics across
+restarts; an injectable failure hook lets tests exercise the full
+fail->detect->restore->reshard path on CPU.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro import steps as steps_mod
+from repro.data import pipeline as data_lib
+from repro.models import lm
+from repro.optim import adam as adam_lib
+from repro.parallel.sharding import use_sharding
+from repro.runtime import checkpoint as ckpt_lib
+from repro.runtime import elastic as elastic_lib
+from repro.runtime.health import (HeartbeatMonitor, RecoveryPolicy,
+                                  StragglerDetector)
+
+
+@dataclass
+class TrainJobConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_last: int = 3
+    peak_lr: float = 3e-4
+    warmup: int = 20
+    seed: int = 0
+    metrics_path: Optional[str] = None
+
+
+def run(cfg, shape, mesh=None, rules=None, job: TrainJobConfig = None,
+        failure_hook: Optional[Callable[[int], None]] = None,
+        impl: Optional[str] = None) -> Dict[str, Any]:
+    """Train ``cfg`` at ``shape`` on ``mesh`` (None = single device)."""
+    job = job or TrainJobConfig()
+    adam_cfg = steps_mod.adam_config_for(cfg)
+    schedule = lambda s: adam_lib.warmup_cosine(
+        s, peak_lr=job.peak_lr, warmup=job.warmup, total=job.steps)
+
+    data_cfg = data_lib.DataConfig(vocab_size=cfg.vocab_size,
+                                   seq_len=shape.seq_len,
+                                   global_batch=shape.global_batch,
+                                   seed=job.seed)
+    source = data_lib.make_source(data_cfg)
+
+    with use_sharding(mesh, rules) as env:
+        # --- state init / restore ----------------------------------------
+        start_step = 0
+        if job.ckpt_dir and ckpt_lib.latest(job.ckpt_dir):
+            p_shape = steps_mod.abstract_params(cfg)
+            o_shape = steps_mod.abstract_opt_state(cfg, adam_cfg, p_shape)
+            shardings = None
+            if env is not None:
+                ps, os_ = elastic_lib.state_shardings(cfg, adam_cfg, env)
+                shardings = {"params": ps, "opt": os_}
+            start_step, state = ckpt_lib.restore(
+                job.ckpt_dir, {"params": p_shape, "opt": o_shape},
+                shardings=shardings)
+            params, opt_state = state["params"], state["opt"]
+        else:
+            key = jax.random.PRNGKey(job.seed)
+            params = lm.init_params(key, cfg)
+            opt_state = adam_lib.init(params, adam_cfg)
+            if env is not None:
+                ps, os_ = elastic_lib.state_shardings(cfg, adam_cfg, env)
+                params = jax.device_put(params, ps)
+                opt_state = jax.device_put(opt_state, os_)
+
+        step_fn = jax.jit(
+            steps_mod.make_train_step(cfg, adam_cfg, schedule, impl=impl),
+            donate_argnums=(0, 1))
+
+        # --- runtime services ----------------------------------------------
+        nodes = [f"host{i}" for i in range(max(1, jax.process_count()))]
+        hb = HeartbeatMonitor(nodes, timeout_s=300.0)
+        straggler = StragglerDetector(nodes)
+        ckpt = ckpt_lib.AsyncCheckpointer(job.ckpt_dir, job.keep_last) \
+            if job.ckpt_dir else None
+        metrics_log = []
+        prefetch = data_lib.Prefetcher(source, start_step=start_step)
+
+        t_loop = time.time()
+        last = {}
+        try:
+            for step, host_batch in prefetch:
+                if step >= job.steps:
+                    break
+                if failure_hook is not None:
+                    failure_hook(step)   # tests: raise to simulate a crash
+                t0 = time.time()
+                batch = jax.tree.map(lambda a: jax.numpy.asarray(a),
+                                     host_batch)
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
+                dt = time.time() - t0
+                hb.beat(nodes[0])
+                evict = straggler.observe({nodes[0]: dt})
+                if evict:
+                    metrics["stragglers"] = len(evict)
+                if (step + 1) % job.log_every == 0 or step == start_step:
+                    last = {k: float(v) for k, v in metrics.items()}
+                    last.update(step=step, sec_per_step=dt)
+                    metrics_log.append(last)
+                    print(f"step {step:6d} loss={last.get('loss', 0):.4f} "
+                          f"gnorm={last.get('grad_norm', 0):.3f} "
+                          f"{dt:.2f}s/step")
+                if ckpt and (step + 1) % job.ckpt_every == 0:
+                    ckpt.save(step + 1,
+                              {"params": params, "opt": opt_state})
+        finally:
+            prefetch.close()
+            if ckpt:
+                ckpt.wait()
+
+        if ckpt and job.steps > 0:
+            ckpt.save(job.steps, {"params": params, "opt": opt_state})
+            ckpt.wait()
+        if job.metrics_path:
+            os.makedirs(os.path.dirname(job.metrics_path) or ".",
+                        exist_ok=True)
+            with open(job.metrics_path, "w") as f:
+                json.dump(metrics_log, f, indent=1)
+        return {"final_metrics": last, "history": metrics_log,
+                "params": params, "opt_state": opt_state,
+                "wall_s": time.time() - t_loop}

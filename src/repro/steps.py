@@ -1,0 +1,183 @@
+"""Step builders: train_step / prefill_step / serve_step + abstract specs.
+
+These are the units the launcher jits, the dry-run lowers, and the
+roofline analyzer reads.  Everything here works on ShapeDtypeStructs
+(no allocation) so a 671B-parameter model can be lowered on one CPU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ATTN, LOCAL, MLA, RGLRU, RWKV6, ModelConfig,
+                                ShapeConfig)
+from repro.models import lm, modules as nn
+from repro.optim import adam as adam_lib
+from repro.parallel.sharding import (ShardingEnv, current_env, param_specs)
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, adam_cfg: adam_lib.AdamConfig,
+                    schedule=None, impl: Optional[str] = None):
+    schedule = schedule or (lambda s: 3e-4)
+
+    def train_step(params, opt_state, batch):
+        def lf(p):
+            return lm.loss_fn(p, cfg, batch, impl=impl)
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        lr = schedule(opt_state.step)
+        params2, opt_state2, om = adam_lib.update(
+            grads, opt_state, params, lr=lr, cfg=adam_cfg)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["lr"] = lr
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      impl: Optional[str] = None):
+    def prefill_step(params, tokens, positions=None):
+        return lm.prefill(params, cfg, tokens, max_len=max_len,
+                          positions=positions, impl=impl)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, impl: Optional[str] = None):
+    """One decode step: greedy-sample next token given the KV cache."""
+    def serve_step(params, tokens, caches, pos):
+        logits, caches = lm.decode_step(params, cfg, tokens, caches, pos,
+                                        impl=impl)
+        if cfg.embed_inputs:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, caches
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract state + sharding specs
+# ---------------------------------------------------------------------------
+def abstract_params(cfg: ModelConfig):
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda k: lm.init_params(k, cfg), key)
+
+
+def abstract_opt_state(cfg: ModelConfig, adam_cfg, params_shape):
+    return jax.eval_shape(lambda p: adam_lib.init(p, adam_cfg), params_shape)
+
+
+def with_shardings(shape_tree, spec_tree, mesh):
+    """Attach NamedShardings to a ShapeDtypeStruct tree."""
+    def mk(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, shape_tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _prepend_none(spec: P, n: int = 1) -> P:
+    return P(*(((None,) * n) + tuple(spec)))
+
+
+def cache_specs(cfg: ModelConfig, env: ShardingEnv):
+    """PartitionSpec pytree mirroring lm.init_caches."""
+    def kind_spec(kind):
+        if kind in (ATTN, LOCAL):
+            # split-T layout: time dim sharded over "model" so decode scans
+            # the cache in place (flash-decoding; §Perf iteration 5)
+            s = env.spec("batch", "seq_sp", None)
+            from repro.models.attention import AttnCache
+            return AttnCache(k=s, v=s)
+        if kind == MLA:
+            from repro.models.mla import MLACache
+            return MLACache(ckv=env.spec("batch", "seq_sp", None),
+                            k_rope=env.spec("batch", "seq_sp", None))
+        if kind == RGLRU:
+            from repro.models.rglru import RGLRUCache
+            return RGLRUCache(h=env.spec("batch", "tp"),
+                              conv=env.spec("batch", None, "tp"))
+        if kind == RWKV6:
+            from repro.models.rwkv6 import RWKVCache
+            return RWKVCache(state=env.spec("batch", "heads", None, None),
+                             x_tm=env.spec("batch", None),
+                             x_cm=env.spec("batch", None))
+        raise ValueError(kind)
+
+    out = []
+    for seg in lm.make_segments(cfg):
+        cyc = tuple(kind_spec(k) for k in seg.kinds)
+        if seg.scanned:
+            cyc = jax.tree.map(lambda s: _prepend_none(s), cyc,
+                               is_leaf=lambda x: isinstance(x, P))
+        out.append(cyc)
+    return out
+
+
+def batch_specs(cfg: ModelConfig, env: ShardingEnv):
+    tok = env.spec("batch", None) if cfg.embed_inputs \
+        else env.spec("batch", None, None)
+    b = {"tokens": tok,
+         "labels": env.spec("batch", None),
+         "mask": env.spec("batch", None)}
+    if cfg.mrope_sections is not None:
+        b["positions"] = env.spec(None, "batch", None)
+    return b
+
+
+def make_batch_struct(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                      env: ShardingEnv):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs:
+        tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                   nn.dt(cfg.activation_dtype))
+    batch = {"tokens": tok,
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+    if cfg.mrope_sections is not None:
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    return with_shardings(batch, batch_specs(cfg, env), mesh)
+
+
+def make_decode_structs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                        env: ShardingEnv):
+    """(tokens, caches, pos) ShapeDtypeStructs for serve_step."""
+    B, T = shape.global_batch, shape.seq_len
+    if cfg.embed_inputs:
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        tok_spec = env.spec("batch", None)
+    else:
+        tok = jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                   nn.dt(cfg.activation_dtype))
+        tok_spec = env.spec("batch", None, None)
+    tok = with_shardings(tok, tok_spec, mesh)
+    caches_shape = jax.eval_shape(lambda: lm.init_caches(cfg, B, T))
+    caches = with_shardings(caches_shape, cache_specs(cfg, env), mesh)
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return tok, caches, pos
+
+
+def make_state_structs(cfg: ModelConfig, adam_cfg, mesh, env: ShardingEnv):
+    """(params, opt_state) ShapeDtypeStructs with shardings (no alloc)."""
+    p_shape = abstract_params(cfg)
+    p_spec = param_specs(p_shape, env)
+    params = with_shardings(p_shape, p_spec, mesh)
+    o_shape = abstract_opt_state(cfg, adam_cfg, p_shape)
+    o_spec = adam_lib.state_specs(p_shape, adam_cfg, p_spec)
+    opt = with_shardings(o_shape, o_spec, mesh)
+    return params, opt
+
+
+def adam_config_for(cfg: ModelConfig) -> adam_lib.AdamConfig:
+    return adam_lib.AdamConfig(state_dtype=cfg.opt_state_dtype)

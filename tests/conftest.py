@@ -1,0 +1,30 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device;
+multi-device behaviour is tested via subprocesses (test_multidevice.py)."""
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, S=64, seed=7):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    if cfg.embed_inputs:
+        tokens = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    else:
+        tokens = jax.random.normal(k1, (B, S, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": labels,
+             "mask": jnp.ones((B, S), jnp.float32)}
+    if cfg.mrope_sections is not None:
+        import repro.models.lm as lm
+        batch["positions"] = lm.default_positions(cfg, B, S)
+    return batch

@@ -1,0 +1,101 @@
+"""Per-arch smoke tests (deliverable f): reduced same-family configs run
+one forward/train step on CPU; output shapes and finiteness asserted."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import make_batch
+from repro.configs import ASSIGNED_ARCHS, get_config, get_tiny_config
+from repro.models import lm
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    loss, metrics = jax.jit(lambda p, b: lm.loss_fn(p, cfg, b))(params, batch)
+    assert jnp.isfinite(loss), arch
+    assert loss.shape == ()
+    grads = jax.jit(jax.grad(lambda p: lm.loss_fn(p, cfg, batch)[0]))(params)
+    gn = sum(jnp.sum(jnp.square(g)) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_forward_shapes(arch):
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    B, S = batch["labels"].shape
+    h, caches, aux = lm.forward(params, cfg, batch["tokens"], mode="train",
+                                positions=batch.get("positions"))
+    assert h.shape == (B, S, cfg.d_model)
+    assert caches is None
+    logits = lm.head_logits(params, cfg, h)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits).all(), arch
+
+
+@pytest.mark.parametrize("arch", [a for a in ASSIGNED_ARCHS
+                                  if get_config(a).supports_decode])
+def test_prefill_decode_smoke(arch):
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, B=2, S=32)
+    logits, caches = jax.jit(
+        lambda p, t: lm.prefill(p, cfg, t, max_len=40))(
+        params, batch["tokens"])
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+    if cfg.embed_inputs:
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+    else:
+        nxt = jnp.zeros((2, 1, cfg.d_model), jnp.float32)
+    logits2, caches2 = jax.jit(
+        lambda p, t, c: lm.decode_step(p, cfg, t, c, 32))(params, nxt, caches)
+    assert logits2.shape == (2, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits2).all()
+
+
+def test_assigned_arch_configs_exact():
+    """The full configs must match the assignment card exactly."""
+    expect = {
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "gemma2-27b": (46, 4608, 32, 16, 36864, 256000),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 18432, 129280),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+    }
+    for arch, (L, d, H, kv, ff, V) in expect.items():
+        c = get_config(arch)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, H, kv, ff, V), arch
+
+
+def test_moe_configs():
+    ds = get_config("deepseek-v3-671b")
+    assert ds.moe.n_experts == 256 and ds.moe.top_k == 8
+    assert ds.moe.n_shared == 1 and ds.mla is not None
+    assert ds.mtp_depth == 1 and ds.first_k_dense == 3
+    gk = get_config("grok-1-314b")
+    assert gk.moe.n_experts == 8 and gk.moe.top_k == 2
+
+
+def test_param_counts_sane():
+    # within 6% of the nominal sizes
+    approx = {"qwen3-14b": 14.8e9, "minitron-8b": 8e9, "qwen3-1.7b": 1.7e9,
+              "gemma2-27b": 27.2e9, "qwen2-vl-7b": 7.6e9,
+              "recurrentgemma-2b": 2.7e9, "grok-1-314b": 314e9,
+              "rwkv6-1.6b": 1.6e9, "hubert-xlarge": 1e9}
+    for arch, n in approx.items():
+        got = get_config(arch).n_params()
+        assert abs(got - n) / n < 0.12, (arch, got, n)
+    ds = get_config("deepseek-v3-671b")
+    assert abs(ds.n_params() - 682e9) / 682e9 < 0.05
+    assert ds.n_active_params() < 60e9  # sparse activation
