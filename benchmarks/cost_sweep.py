@@ -1,0 +1,160 @@
+"""Fig. 8/9-style utilisation & energy sweep through the cost-aware nOS.
+
+Replays a mixed train + serve job trace through :class:`repro.core.nos.NOS`
+with cost-engine admission: every job arrives as a bare ``ModelConfig`` +
+shape and the scheduler sizes its slice by pricing candidate placements
+with ``repro.core.costs.estimate``.  An event-driven clock advances from
+arrival to completion; the output is the paper's Fig. 8/9 table at pod
+scale — per-job slice, predicted step time, power, energy, plus fleet
+utilisation and the energy-proportionality gap.
+
+Run:  PYTHONPATH=src python benchmarks/cost_sweep.py [--mode packet]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import dataclass
+from typing import List, Optional
+
+sys.path.insert(0, "src")
+
+from repro.configs import get_config                      # noqa: E402
+from repro.configs.base import SHAPES, ShapeConfig        # noqa: E402
+from repro.core import nos as nos_mod                     # noqa: E402
+
+
+@dataclass(frozen=True)
+class TraceEntry:
+    at: float            # arrival time, seconds
+    name: str
+    arch: str
+    shape: ShapeConfig
+    steps: int
+    max_rows: int = 0    # tenant quota (rows); 0 = unlimited
+
+
+def default_trace() -> List[TraceEntry]:
+    """A ≥4-job mixed train+serve trace over the standard shapes."""
+    return [
+        TraceEntry(0.0, "train/qwen3-14b", "qwen3-14b",
+                   SHAPES["train_4k"], steps=20, max_rows=8),
+        TraceEntry(0.0, "serve/gemma2-27b", "gemma2-27b",
+                   SHAPES["decode_32k"], steps=4000, max_rows=4),
+        TraceEntry(5.0, "serve/qwen3-1.7b", "qwen3-1.7b",
+                   SHAPES["decode_32k"], steps=20000, max_rows=4),
+        TraceEntry(10.0, "train/rwkv6-1.6b", "rwkv6-1.6b",
+                   SHAPES["train_4k"], steps=50, max_rows=8),
+        TraceEntry(20.0, "serve/qwen3-14b", "qwen3-14b",
+                   ShapeConfig("prefill_8k", 8192, 32, "prefill"),
+                   steps=500, max_rows=4),
+    ]
+
+
+def simulate(trace: Optional[List[TraceEntry]] = None, data_rows: int = 16,
+             model_cols: int = 16, mode: str = "circuit"):
+    """Event-driven replay; returns (scheduler, per-job rows, totals)."""
+    trace = trace if trace is not None else default_trace()
+    s = nos_mod.NOS(data_rows=data_rows, model_cols=model_cols)
+    arrivals = sorted(trace, key=lambda e: e.at)
+    end_at = {}          # running job name -> completion time
+    placed_at = {}
+    clock = 0.0
+    util_x_time = 0.0
+    energy_fleet_j = 0.0
+
+    def note_new_running():
+        for j in s.jobs.values():
+            if j.state == "running" and j.name not in end_at:
+                placed_at[j.name] = clock
+                end_at[j.name] = clock + j.steps * j.estimate.step_time_s
+
+    while arrivals or end_at:
+        candidates = []
+        if arrivals:
+            candidates.append(arrivals[0].at)
+        if end_at:
+            candidates.append(min(end_at.values()))
+        t_next = max(min(candidates), clock)
+        dt = t_next - clock
+        util_x_time += s.utilisation() * dt
+        energy_fleet_j += s.power_estimate_w() * dt
+        clock = t_next
+        while arrivals and arrivals[0].at <= clock:
+            e = arrivals.pop(0)
+            s.submit(get_config(e.arch), name=e.name, shape=e.shape,
+                     steps=e.steps, mode=mode, max_rows=e.max_rows)
+        for name in [n for n, t in end_at.items() if t <= clock]:
+            del end_at[name]
+            s.finish(name)
+        note_new_running()
+
+    makespan = clock
+    rows = []
+    for j in s.jobs.values():
+        est = j.estimate
+        rows.append(dict(
+            name=j.name, kind=j.shape.kind, rows=j.rows_needed,
+            chips=j.rows_needed * model_cols,
+            step_ms=est.step_time_s * 1e3, w_per_chip=est.energy.w_per_chip,
+            start_s=placed_at.get(j.name, 0.0),
+            end_s=placed_at.get(j.name, 0.0)
+            + j.steps * est.step_time_s,
+            energy_kj=j.energy_j / 1e3, mode=est.mode))
+    totals = dict(
+        makespan_s=makespan,
+        utilisation=util_x_time / max(makespan, 1e-12),
+        avg_power_w=energy_fleet_j / max(makespan, 1e-12),
+        fleet_energy_mj=energy_fleet_j / 1e6,
+        job_energy_mj=sum(j.energy_j for j in s.jobs.values()) / 1e6,
+        idle_floor_w=data_rows * model_cols * 60.0)
+    return s, rows, totals
+
+
+def format_table(rows, totals, mode: str) -> str:
+    out = [f"# nOS cost sweep — {len(rows)} jobs, link model: {mode}",
+           f"{'job':<18} {'kind':<8} {'rows':>4} {'chips':>5} "
+           f"{'step_ms':>9} {'W/chip':>7} {'start_s':>8} {'end_s':>9} "
+           f"{'energy_kJ':>10}"]
+    for r in sorted(rows, key=lambda r: r["start_s"]):
+        out.append(f"{r['name']:<18} {r['kind']:<8} {r['rows']:>4} "
+                   f"{r['chips']:>5} {r['step_ms']:>9.2f} "
+                   f"{r['w_per_chip']:>7.0f} {r['start_s']:>8.1f} "
+                   f"{r['end_s']:>9.1f} {r['energy_kj']:>10.1f}")
+    t = totals
+    out.append(f"makespan {t['makespan_s']:.1f}s  "
+               f"utilisation {t['utilisation'] * 100:.1f}%  "
+               f"avg fleet power {t['avg_power_w'] / 1e3:.1f} kW  "
+               f"fleet energy {t['fleet_energy_mj']:.2f} MJ "
+               f"(jobs {t['job_energy_mj']:.2f} MJ, idle floor "
+               f"{t['idle_floor_w'] / 1e3:.1f} kW)")
+    return "\n".join(out)
+
+
+def sweep_rows():
+    """(name, us_per_call, derived) rows for benchmarks/run.py."""
+    for mode in ("circuit", "packet"):
+        _, rows, totals = simulate(mode=mode)
+        for r in rows:
+            yield (f"nos_{mode}_{r['name'].replace('/', '_')}",
+                   r["step_ms"] * 1e3,
+                   f"rows={r['rows']} energy={r['energy_kj']:.0f}kJ")
+        yield (f"nos_{mode}_fleet", totals["makespan_s"] * 1e6,
+               f"util={totals['utilisation'] * 100:.0f}% "
+               f"energy={totals['fleet_energy_mj']:.2f}MJ")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="circuit",
+                    choices=["circuit", "packet"])
+    ap.add_argument("--rows", type=int, default=16)
+    ap.add_argument("--cols", type=int, default=16)
+    args = ap.parse_args()
+    _, rows, totals = simulate(data_rows=args.rows, model_cols=args.cols,
+                               mode=args.mode)
+    print(format_table(rows, totals, args.mode))
+
+
+if __name__ == "__main__":
+    main()

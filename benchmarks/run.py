@@ -9,6 +9,7 @@ import traceback
 def main() -> None:
     sys.path.insert(0, "src")
     sys.path.insert(0, ".")
+    from benchmarks import cost_sweep as cs
     from benchmarks import paper_tables as pt
     from benchmarks import perf_micro as pm
     from benchmarks import roofline_table as rt
@@ -21,6 +22,7 @@ def main() -> None:
         ("Fig 5 (thread throughput)", pt.fig5_thread_throughput),
         ("Fig 9/10 (DVFS)", pt.fig9_fig10_dvfs),
         ("Fig 11 (neuron scaling)", pt.fig11_neuron_scaling),
+        ("Fig 8/9 (nOS cost sweep)", cs.sweep_rows),
         ("micro: train grad", pm.micro_train_steps),
         ("micro: kernels", pm.micro_kernels),
         ("micro: data", pm.micro_data_pipeline),

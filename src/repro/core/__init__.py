@@ -8,5 +8,8 @@
   memory_server  — §III-A/X-B nodes-as-storage, address%n striping
   overlays       — §III-B overlays -> remat/weight-streaming planner
   paradigms      — §III farmer-worker / streaming pipelines
-  nos            — §VIII nOS: multi-tenant mesh-slice scheduler
+  nos            — §VIII nOS: cost-aware multi-tenant mesh-slice scheduler
+  costs          — §II-B+§V+§VI composed: the unified cost engine
+                   (estimate(config, layout, mode)) behind --layout auto,
+                   nOS admission and benchmarks/cost_sweep.py
 """

@@ -12,26 +12,41 @@ Placement policy (paper-faithful): jobs are independent (C1), so slices
 never share chips; allocation is first-fit over whole "data" rows so the
 "model" axis (the high-bandwidth dimension) is never split between
 tenants — locality exactly as §II-B argues.
+
+Cost-aware admission: a job submitted with a ``ModelConfig`` (instead of
+a bare row count) is priced by the :mod:`repro.core.costs` engine at
+placement time — every feasible row count is a candidate slice, each is
+priced as a ``Layout(data=rows, model=model_cols)``, and the scheduler
+picks the one minimising the per-step energy-delay product (the §VIII
+"energy optimisation" responsibility, made concrete).  The chosen
+estimate also drives per-job power/energy accounting, replacing the flat
+active-watts assumption in ``power_estimate_w``.
 """
 from __future__ import annotations
 
-import itertools
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
-
-from repro.core import energy as energy_mod
 
 
 @dataclass
 class Job:
     name: str
-    rows_needed: int                   # data-axis rows (model axis is whole)
+    rows_needed: int = 0               # data-axis rows (model axis is whole);
+                                       # 0 => cost engine chooses at placement
     steps: int = 0
     submitted_at: float = 0.0
     started_at: Optional[float] = None
     rows: Tuple[int, ...] = ()
     state: str = "pending"             # pending|running|done|failed
+    # -- cost-aware extension (set when submitted with a config) -----------
+    config: Optional[object] = None    # repro.configs.base.ModelConfig
+    shape: Optional[object] = None     # repro.configs.base.ShapeConfig
+    link_mode: str = "circuit"         # §V model used to price placement
+    auto_size: bool = False            # engine re-sizes at every attempt
+    max_rows: int = 0                  # tenant quota; 0 = unlimited
+    estimate: Optional[object] = None  # costs.CostEstimate of chosen slice
+    energy_j: float = 0.0              # accrued at finish()
 
 
 @dataclass
@@ -46,13 +61,61 @@ class NOS:
         self._free = list(range(self.data_rows))
 
     # -- admission -----------------------------------------------------------
-    def submit(self, job: Job) -> bool:
+    def submit(self, job, *, name: Optional[str] = None, shape=None,
+               steps: int = 0, mode: str = "circuit",
+               max_rows: int = 0) -> bool:
+        """Admit a job.
+
+        Accepts either a prepared :class:`Job`, or a ``ModelConfig``
+        (plus ``name``/``shape``/``steps``/``max_rows`` keywords) — the
+        cost-aware path, where the engine sizes the slice instead of the
+        caller (``max_rows`` is the tenant's quota).
+        """
+        if not isinstance(job, Job):
+            job = Job(name=name or getattr(job, "name", "job"),
+                      config=job, shape=shape, steps=steps, link_mode=mode,
+                      max_rows=max_rows)
+        if job.config is not None and job.rows_needed == 0:
+            job.auto_size = True
         job.submitted_at = job.submitted_at or time.time()
         self.jobs[job.name] = job
         return self._try_place(job)
 
+    def _size_from_costs(self, job: Job) -> int:
+        """Price every feasible row count; return the EDP-optimal one."""
+        from repro.core import costs as costs_mod
+        free = len(self._free)
+        if job.max_rows:
+            free = min(free, job.max_rows)
+        if free == 0:
+            return 1            # nothing free: ask for the minimal slice
+        B = job.shape.global_batch if job.shape is not None else 0
+        candidates = [r for r in range(1, free + 1) if not B or B % r == 0]
+        if not candidates:
+            candidates = list(range(1, free + 1))
+        best_r, best = None, None
+        for r in candidates:
+            lay = costs_mod.Layout(data=r, model=self.model_cols)
+            est = costs_mod.estimate(job.config, lay, job.link_mode,
+                                     job.shape)
+            if best is None or est.edp() < best.edp():
+                best_r, best = r, est
+        job.estimate = best
+        return best_r
+
     def _try_place(self, job: Job) -> bool:
-        if job.state != "pending" or job.rows_needed > len(self._free):
+        if job.state != "pending":
+            return False
+        if job.config is not None:
+            if job.auto_size:
+                job.rows_needed = self._size_from_costs(job)
+            elif job.estimate is None:
+                from repro.core import costs as costs_mod
+                lay = costs_mod.Layout(data=max(job.rows_needed, 1),
+                                       model=self.model_cols)
+                job.estimate = costs_mod.estimate(job.config, lay,
+                                                  job.link_mode, job.shape)
+        if job.rows_needed <= 0 or job.rows_needed > len(self._free):
             return False
         job.rows = tuple(sorted(self._free[:job.rows_needed]))
         self._free = self._free[job.rows_needed:]
@@ -62,6 +125,9 @@ class NOS:
 
     def finish(self, name: str, state: str = "done"):
         job = self.jobs[name]
+        if job.estimate is not None and job.steps:
+            n_chips = len(job.rows) * self.model_cols
+            job.energy_j += job.steps * job.estimate.energy.total_j * n_chips
         self._free = sorted(self._free + list(job.rows))
         job.rows = ()
         job.state = state
@@ -92,14 +158,32 @@ class NOS:
 
     def power_estimate_w(self, active_w: float = 200.0,
                          idle_w: float = 60.0) -> float:
-        """Fleet power (Fig. 8/9 logic): active slices at TDP-ish, free
-        rows idle — energy proportionality at the allocation level."""
-        used = self.data_rows - len(self._free)
-        return (used * active_w + len(self._free) * idle_w) * self.model_cols
+        """Fleet power (Fig. 8/9 logic): costed jobs contribute their
+        engine-estimated per-chip draw, uncosted slices a flat TDP-ish
+        figure, free rows idle — energy proportionality at the
+        allocation level."""
+        total = len(self._free) * idle_w * self.model_cols
+        for job in self.jobs.values():
+            if job.state != "running":
+                continue
+            per_chip = (job.estimate.energy.w_per_chip
+                        if job.estimate is not None else active_w)
+            total += len(job.rows) * self.model_cols * per_chip
+        return total
+
+    def energy_account(self) -> Dict[str, float]:
+        """Joules accrued per finished job (the paper's 'program that can
+        measure its own power', at the scheduler level)."""
+        return {j.name: j.energy_j for j in self.jobs.values()
+                if j.energy_j > 0.0}
 
     def placement_table(self) -> str:
         rows = []
         for j in self.jobs.values():
-            rows.append(f"{j.name:<16} {j.state:<8} rows={list(j.rows)}")
+            line = f"{j.name:<16} {j.state:<8} rows={list(j.rows)}"
+            if j.estimate is not None:
+                line += (f" step={j.estimate.step_time_s * 1e3:.2f}ms"
+                         f" {j.estimate.energy.w_per_chip:.0f}W/chip")
+            rows.append(line)
         rows.append(f"free rows: {self._free}")
         return "\n".join(rows)

@@ -16,6 +16,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _rglru_kernel(a_ref, b_ref, o_ref, hT_ref, h_ref, *, block_s, ns):
     si = pl.program_id(2)
@@ -73,7 +77,7 @@ def rglru_scan(a, b, h0, *, block_s=256, block_w=256, interpret=True):
             jax.ShapeDtypeStruct((B, W), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((bw,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(a, b)

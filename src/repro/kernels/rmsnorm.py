@@ -12,6 +12,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 names it TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _rms_kernel(x_ref, s_ref, o_ref, *, eps):
     x = x_ref[...].astype(jnp.float32)
@@ -38,7 +42,7 @@ def rmsnorm(x, scale, *, eps=1e-6, block_rows=256, interpret=True):
         ],
         out_specs=pl.BlockSpec((bn, D), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((N, D), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(xf, scale)

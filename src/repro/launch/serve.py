@@ -6,7 +6,9 @@
 Implements a simple continuous-batch scheduler: a request queue feeds
 fixed-size decode batches; finished sequences are replaced by prefilling
 waiting requests (the farmer-worker paradigm, C3: the coordinator hands
-work to a fixed pool of compute slots).
+work to a fixed pool of compute slots).  ``--layout auto`` asks the cost
+engine for the fastest (data, model) mesh for the decode shape and
+reports predicted vs measured per-token time.
 """
 import argparse
 import os
@@ -22,6 +24,10 @@ def main():
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--layout", default="manual", choices=["manual", "auto"],
+                    help="auto: let the cost engine pick (data, model)")
+    ap.add_argument("--link-mode", default="circuit",
+                    choices=["circuit", "packet"])
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
     args = ap.parse_args()
@@ -33,15 +39,34 @@ def main():
     import jax
     import jax.numpy as jnp
     from repro.configs import get_config, get_tiny_config
+    from repro.configs.base import ShapeConfig
     from repro.launch.mesh import make_test_mesh
     from repro.models import lm
     from repro import steps as steps_mod
-    from repro.parallel.sharding import use_sharding
+    from repro.parallel.sharding import (autotune_layout, make_layout_mesh,
+                                         use_sharding)
 
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
     assert cfg.supports_decode, f"{cfg.name} is encoder-only"
-    mesh = make_test_mesh(args.data, args.model) \
-        if args.data * args.model > 1 else None
+    predicted = None
+    if args.layout == "auto":
+        decode_shape = ShapeConfig("serve", args.prompt_len + args.gen,
+                                   args.batch, "decode")
+        best, ranked = autotune_layout(cfg, decode_shape,
+                                       mode=args.link_mode)
+        predicted = best
+        print(f"[cost-engine] {len(ranked)} candidate layouts for "
+              f"{best.layout.n_chips} chips ({args.link_mode} mode):")
+        for est in ranked:
+            tag = " <= chosen" if est is ranked[0] else ""
+            print(f"[cost-engine]   {est.describe()}{tag}")
+        print(f"[cost-engine] predicted decode step "
+              f"{best.step_time_s * 1e3:.3f} ms "
+              f"({best.tokens_per_s:.0f} tok/s)")
+        mesh = make_layout_mesh(best.layout)
+    else:
+        mesh = make_test_mesh(args.data, args.model) \
+            if args.data * args.model > 1 else None
 
     max_len = args.prompt_len + args.gen
     key = jax.random.PRNGKey(0)
@@ -77,6 +102,12 @@ def main():
         dt = time.time() - t0
         print(f"served {done} requests, {tokens_out} tokens "
               f"in {dt:.2f}s ({tokens_out / dt:.1f} tok/s)")
+        if predicted is not None and tokens_out:
+            measured = dt / tokens_out * args.batch   # s per decode step
+            print(f"[cost-engine] predicted {predicted.step_time_s * 1e3:.3f}"
+                  f" ms vs measured {measured * 1e3:.3f} ms per decode step "
+                  f"(ratio {measured / predicted.step_time_s:.2f}x; the "
+                  f"engine models v5e-class chips, not this host)")
 
 
 if __name__ == "__main__":

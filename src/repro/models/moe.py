@@ -28,10 +28,7 @@ import jax.numpy as jnp
 from repro.models import modules as nn
 from repro.parallel.sharding import current_env
 
-try:
-    from jax import shard_map as _shard_map  # jax >= 0.6
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.parallel.sharding import compat_shard_map as _shard_map
 
 
 def init(key, cfg, dtype):

@@ -25,10 +25,7 @@ import jax.numpy as jnp
 
 from repro.parallel.sharding import current_env
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.parallel.sharding import compat_shard_map as _shard_map
 
 
 def _axes_tuple(a):

@@ -26,10 +26,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import current_env
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.parallel.sharding import compat_shard_map as _shard_map
 
 
 def _lattice_ar_local(x, fast_axes: Tuple[str, ...], slow_axis: str):

@@ -24,10 +24,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.parallel.sharding import current_env
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.parallel.sharding import compat_shard_map as _shard_map
 
 
 def bubble_fraction(n_stages: int, n_micro: int) -> float:

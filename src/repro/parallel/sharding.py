@@ -236,3 +236,56 @@ def param_shardings(params, env: Optional[ShardingEnv] = None):
         raise RuntimeError("param_shardings requires an active ShardingEnv")
     return jax.tree_util.tree_map(lambda s: NamedSharding(env.mesh, s),
                                   param_specs(params, env))
+
+
+# ---------------------------------------------------------------------------
+# shard_map version compat
+# ---------------------------------------------------------------------------
+def compat_shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
+    """``shard_map`` across jax versions: newer releases take ``check_vma``,
+    older ones ``check_rep`` (same meaning for our purposes)."""
+    import inspect
+
+    try:
+        from jax import shard_map as sm  # jax >= 0.6
+    except ImportError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map as sm
+    kw = {"mesh": mesh, "in_specs": in_specs, "out_specs": out_specs}
+    if "check_vma" in inspect.signature(sm).parameters:
+        kw["check_vma"] = check_vma
+    else:
+        kw["check_rep"] = check_vma
+    return sm(f, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Layout autotuner (Swallow §II-B: pick the balanced design point)
+# ---------------------------------------------------------------------------
+def autotune_layout(cfg, shape=None, n_chips: Optional[int] = None,
+                    mode: str = "circuit", link=None,
+                    max_model: Optional[int] = None):
+    """Pick the (data, model) mesh factorization the cost engine scores
+    fastest for ``cfg`` at ``shape``.
+
+    Returns ``(best, ranked)`` where ``best`` is a
+    :class:`repro.core.costs.CostEstimate` (``best.layout`` is the chosen
+    :class:`~repro.core.costs.Layout`) and ``ranked`` is every candidate,
+    fastest first.  ``n_chips`` defaults to the visible device count.
+    Pure host-side arithmetic except that default — no arrays are placed.
+    """
+    from repro.core import costs as costs_mod
+    if n_chips is None:
+        n_chips = len(jax.devices())
+    link = link or costs_mod.LinkSpec()
+    ranked = costs_mod.rank_layouts(cfg, shape, n_chips, mode, link,
+                                    max_model)
+    return ranked[0], ranked
+
+
+def make_layout_mesh(layout):
+    """Realise a :class:`~repro.core.costs.Layout` as a jax Mesh
+    (None for the trivial single-chip layout)."""
+    from repro.launch.mesh import make_test_mesh
+    if layout.n_chips == 1:
+        return None
+    return make_test_mesh(layout.data, layout.model, layout.pod)

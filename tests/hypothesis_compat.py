@@ -1,0 +1,38 @@
+"""Optional-hypothesis shim: property tests skip cleanly when the
+library is absent (it is not in the base image; CI installs it from
+requirements.txt).
+
+Usage in a test module:
+
+    from hypothesis_compat import given, settings, st
+
+Example-based tests in the same module keep running either way; tests
+decorated with the stub ``@given`` individually report SKIPPED.
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover — CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+    def settings(**kw):
+        return lambda f: f
+
+    def given(*a, **kw):
+        def deco(f):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = f.__name__
+            skipped.__doc__ = f.__doc__
+            return skipped
+        return deco
+
+    class _Strategies:
+        """Accepts any strategy constructor at decoration time."""
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _Strategies()

@@ -1,7 +1,8 @@
 """Swallow core modules: validation against the paper's own numbers plus
 property tests (topology routing, striping, scheduler)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import (energy, memory_server, network, nos, overlays,
                         ratio, topology)

@@ -24,7 +24,10 @@ def _xla_flops(cfg, B, S):
 
     grad_fn = jax.jit(jax.value_and_grad(step))
     c = grad_fn.lower(params, batch).compile()
-    return c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax: one dict per computation
+        ca = ca[0]
+    return ca["flops"]
 
 
 @pytest.mark.parametrize("arch", ["qwen3-14b", "rwkv6-1.6b"])

@@ -1,0 +1,171 @@
+"""Cost engine (§V link model composed with FLOPs + energy), the layout
+autotuner, and cost-aware nOS admission."""
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ShapeConfig
+from repro.core import costs, network, nos
+
+
+# --- network (§V-B/C): paper ground truth -------------------------------------
+def test_link_rate_hits_paper_500mbit():
+    # fastest setting (Ts=2, Tt=1) at 500 MHz -> 500 Mbit/s per link
+    assert network.link_rate_bps(ts=2, tt=1, hz=500e6) == pytest.approx(
+        500e6, rel=1e-9)
+
+
+def test_packet_rate_matches_paper_435mbit():
+    # 3-byte header + control token on the paper's ~28-byte payload
+    assert network.packet_rate_bps(28) == pytest.approx(437.5e6, rel=0.01)
+    assert 430e6 < network.packet_rate_bps(28) < 440e6
+    # overhead vanishes with payload size, never exceeds the raw link rate
+    assert network.packet_rate_bps(10_000) < network.link_rate_bps()
+    assert network.packet_rate_bps(10_000) > 0.99 * network.link_rate_bps()
+
+
+def test_crossover_bytes_monotone_in_group():
+    # from g=3 up, the per-hop setup latency dominates and the crossover
+    # grows strictly with group size; g=2 sits above g=3 only because the
+    # ring efficiency factor g/(g-1) is worst there
+    xs = [network.crossover_bytes(g) for g in range(3, 65)]
+    assert all(b > a for a, b in zip(xs, xs[1:]))
+    assert network.crossover_bytes(2) > network.crossover_bytes(3)
+
+
+@pytest.mark.parametrize("kind", ["all_gather", "reduce_scatter",
+                                  "all_reduce", "all_to_all"])
+def test_ring_circuit_never_slower_than_packet(kind):
+    for group in (2, 4, 8, 16, 64):
+        for nbytes in (1e2, 1e4, 1e6, 1e8, 1e10):
+            t_c = network.ring_collective_time(nbytes, group, kind,
+                                               mode="circuit")
+            t_p = network.ring_collective_time(nbytes, group, kind,
+                                               mode="packet")
+            assert t_c <= t_p, (kind, group, nbytes)
+
+
+# --- cost engine --------------------------------------------------------------
+def test_estimate_components_sum():
+    cfg = get_config("qwen3-14b")
+    est = costs.estimate(cfg, costs.Layout(16, 16), "circuit",
+                         SHAPES["train_4k"])
+    assert est.step_time_s == pytest.approx(
+        max(est.compute_s, est.hbm_s) + est.ici_s)
+    assert est.energy.total_j > 0
+    assert est.ici_bytes_per_chip > 0          # TP + grad-sync traffic
+    assert est.tokens_per_s > 0
+
+
+def test_estimate_packet_costs_at_least_circuit():
+    cfg = get_config("qwen3-14b")
+    for shape in (SHAPES["train_4k"], SHAPES["decode_32k"]):
+        c = costs.estimate(cfg, costs.Layout(16, 16), "circuit", shape)
+        p = costs.estimate(cfg, costs.Layout(16, 16), "packet", shape)
+        assert p.step_time_s >= c.step_time_s
+
+
+def test_single_chip_layout_has_no_ici():
+    cfg = get_config("qwen3-1.7b")
+    est = costs.estimate(cfg, costs.Layout(1, 1), shape=SHAPES["train_4k"])
+    assert est.ici_s == 0.0 and est.ici_bytes_per_chip == 0.0
+
+
+def test_candidate_layouts_cover_factorizations():
+    lays = costs.candidate_layouts(16)
+    assert {(l.data, l.model) for l in lays} == {
+        (16, 1), (8, 2), (4, 4), (2, 8), (1, 16)}
+    assert all(l.n_chips == 16 for l in lays)
+
+
+# --- autotuner: picks the analytically-optimal layout -------------------------
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen3-14b", SHAPES["train_4k"]),
+    ("gemma2-27b", SHAPES["decode_32k"]),
+    ("rwkv6-1.6b", SHAPES["train_4k"]),
+])
+def test_autotuner_picks_analytic_optimum(arch, shape):
+    from repro.parallel.sharding import autotune_layout
+    cfg = get_config(arch)
+    best, ranked = autotune_layout(cfg, shape, n_chips=64)
+    # exhaustive re-derivation: the chosen layout is the argmin over every
+    # factorization priced directly through estimate()
+    brute = min((costs.estimate(cfg, lay, "circuit", shape)
+                 for lay in costs.candidate_layouts(64)),
+                key=lambda e: e.step_time_s)
+    assert (best.layout.data, best.layout.model) == \
+        (brute.layout.data, brute.layout.model)
+    assert best.step_time_s == pytest.approx(brute.step_time_s)
+    assert [e.step_time_s for e in ranked] == \
+        sorted(e.step_time_s for e in ranked)
+
+
+def test_autotuner_directional_preferences():
+    from repro.parallel.sharding import autotune_layout
+    # big-model decode is weight-read bound -> wants tensor parallelism
+    decode_best, _ = autotune_layout(get_config("gemma2-27b"),
+                                     SHAPES["decode_32k"], n_chips=64)
+    assert decode_best.layout.model > 1
+    # small-model big-batch training is compute bound -> mostly data parallel
+    train_best, _ = autotune_layout(get_config("rwkv6-1.6b"),
+                                    SHAPES["train_4k"], n_chips=64)
+    assert train_best.layout.data > train_best.layout.model
+
+
+# --- cost-aware nOS -----------------------------------------------------------
+def test_nos_costed_submit_sizes_and_accounts():
+    s = nos.NOS(data_rows=16, model_cols=16)
+    cfg = get_config("qwen3-14b")
+    assert s.submit(cfg, name="train", shape=SHAPES["train_4k"],
+                    steps=10, max_rows=8)
+    job = s.jobs["train"]
+    assert job.state == "running"
+    assert 1 <= job.rows_needed <= 8
+    assert job.estimate is not None and job.estimate.step_time_s > 0
+    # engine-estimated draw replaces the flat TDP assumption
+    p = s.power_estimate_w()
+    flat = job.rows_needed * 16 * 200.0 + (16 - job.rows_needed) * 16 * 60.0
+    assert p != flat and p > 0
+    s.finish("train")
+    acct = s.energy_account()
+    n_chips = job.rows_needed * 16
+    assert acct["train"] == pytest.approx(
+        10 * job.estimate.energy.total_j * n_chips)
+
+
+def test_nos_costed_job_queues_then_runs():
+    s = nos.NOS(data_rows=4, model_cols=4)
+    s.submit(nos.Job("hog", rows_needed=4))
+    cfg = get_config("qwen3-1.7b")
+    assert not s.submit(cfg, name="late", shape=SHAPES["decode_32k"],
+                        steps=5)
+    assert s.jobs["late"].state == "pending"
+    s.finish("hog")
+    assert s.jobs["late"].state == "running"
+    assert s.jobs["late"].rows_needed >= 1
+
+
+def test_nos_legacy_row_submit_still_works():
+    s = nos.NOS(data_rows=16)
+    assert s.submit(nos.Job("a", rows_needed=8))
+    assert s.submit(nos.Job("b", rows_needed=8))
+    assert not s.submit(nos.Job("c", rows_needed=4))
+    s.finish("a")
+    assert s.jobs["c"].state == "running"
+
+
+# --- cost sweep benchmark -----------------------------------------------------
+def test_cost_sweep_mixed_trace():
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import cost_sweep
+    sched, rows, totals = cost_sweep.simulate()
+    assert len(rows) >= 4
+    kinds = {r["kind"] for r in rows}
+    assert "train" in kinds and "decode" in kinds
+    assert all(r["energy_kj"] > 0 for r in rows)
+    assert 0 < totals["utilisation"] <= 1.0
+    assert totals["fleet_energy_mj"] >= totals["job_energy_mj"] > 0
+    table = cost_sweep.format_table(rows, totals, "circuit")
+    for r in rows:
+        assert r["name"] in table
