@@ -1,0 +1,188 @@
+"""Bursty multi-tenant Poisson trace through the paged serving engine.
+
+The serving-side companion of cost_sweep.py: where that benchmark replays
+whole *jobs* through the cost-aware nOS, this one replays individual
+*requests* through :mod:`repro.serving` — the paged-KV continuous-batching
+engine — and emits a throughput / TTFT / page-occupancy table per tenant,
+plus the nOS fleet serving view (pages, energy, queue latency).
+
+Arrivals are Poisson per tenant in units of engine steps (the engine
+step is the farmer's clock), with a burst tenant that dumps its whole
+load at once — the mixed pattern that makes continuous batching and
+page-pressure preemption visible.
+
+Run:  PYTHONPATH=src python benchmarks/serve_trace.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from dataclasses import dataclass
+from typing import List, Optional
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+
+@dataclass(frozen=True)
+class Tenant:
+    name: str
+    n_requests: int
+    rate: float          # mean arrivals per engine step (Poisson); 0 = burst
+    prompt_len: int
+    gen: int
+    at_step: int = 0     # burst tenants: every request arrives here
+
+
+def default_tenants(quick: bool = False) -> List[Tenant]:
+    if quick:
+        return [Tenant("chat", 6, 0.5, 12, 6),
+                Tenant("burst", 4, 0.0, 8, 4, at_step=5)]
+    return [
+        Tenant("chat", 12, 0.4, 16, 8),          # steady interactive load
+        Tenant("batch", 8, 0.15, 32, 16),        # long-prompt background
+        Tenant("burst", 8, 0.0, 12, 6, at_step=10),  # arrives all at once
+    ]
+
+
+def arrivals_for(t: Tenant, rng: np.random.Generator):
+    """(step, tenant) arrival list — Poisson gaps, or one burst."""
+    if t.rate <= 0.0:
+        return [(t.at_step, t)] * t.n_requests
+    gaps = rng.exponential(1.0 / t.rate, size=t.n_requests)
+    steps = np.floor(np.cumsum(gaps)).astype(int)
+    return [(int(s), t) for s in steps]
+
+
+def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
+           max_batch: int = 4, page_size: int = 8, n_pages: int = 0,
+           arch: str = "tiny-100m", link_mode: str = "circuit",
+           prefill_budget: float = 2.0):
+    """Drive the engine step by step, injecting arrivals between steps.
+
+    Returns (engine, per-tenant rows, totals).
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    from repro.serving import PagedEngine
+
+    tenants = tenants if tenants is not None else default_tenants()
+    rng = np.random.default_rng(seed)
+    pending = sorted([a for t in tenants for a in arrivals_for(t, rng)],
+                     key=lambda a: a[0])
+    max_len = max(t.prompt_len + t.gen for t in tenants)
+    if not n_pages:
+        # ~75% of worst-case demand: page pressure without thrash
+        worst = max_batch * (-(-max_len // page_size))
+        n_pages = max(int(worst * 0.75), 2) + 1
+
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    eng = PagedEngine(cfg, params, max_batch=max_batch,
+                      page_size=page_size, n_pages=n_pages,
+                      max_len=max_len, link_mode=link_mode,
+                      prefill_budget=prefill_budget)
+
+    occupancy = []
+    rid = 0
+    while pending or eng.sched.waiting or eng.sched.running:
+        while pending and pending[0][0] <= eng.sched.step_idx:
+            _, t = pending.pop(0)
+            prompt = jax.random.randint(jax.random.PRNGKey(rid),
+                                        (t.prompt_len,), 2, cfg.vocab_size)
+            eng.submit(np.asarray(prompt), t.gen, tenant=t.name,
+                       rid=f"{t.name}/{rid}")
+            rid += 1
+        if eng.sched.waiting or eng.sched.running:
+            eng.step()
+        else:
+            eng.sched.step_idx += 1   # idle gap before the next arrival
+        occupancy.append(eng.alloc.pages_in_use)
+
+    rows = []
+    for t in tenants:
+        fin = [r for r in eng.sched.finished if r.tenant == t.name]
+        ttft = [r.first_token_step - r.arrived_step for r in fin]
+        rows.append(dict(
+            tenant=t.name, requests=len(fin),
+            tokens=sum(len(r.tokens) for r in fin),
+            ttft_mean=float(np.mean(ttft)) if ttft else 0.0,
+            ttft_p95=float(np.percentile(ttft, 95)) if ttft else 0.0,
+            preemptions=sum(r.preemptions for r in fin)))
+    m = eng.metrics()
+    totals = dict(
+        steps=eng.steps_run, tokens=m["tokens_out"],
+        tok_per_s=m["tok_per_s"],
+        occupancy_mean=float(np.mean(occupancy)) / max(n_pages - 1, 1),
+        occupancy_peak=m["peak_pages"] / max(n_pages - 1, 1),
+        preemptions=m["preemptions"], n_pages=n_pages,
+        page_size=page_size)
+    return eng, rows, totals
+
+
+def format_table(rows, totals) -> str:
+    out = [f"# paged serve trace — {len(rows)} tenants, "
+           f"{totals['n_pages']} pages x {totals['page_size']} tokens",
+           f"{'tenant':<10} {'reqs':>5} {'tokens':>7} {'ttft_mean':>10} "
+           f"{'ttft_p95':>9} {'preempt':>8}"]
+    for r in rows:
+        out.append(f"{r['tenant']:<10} {r['requests']:>5} {r['tokens']:>7} "
+                   f"{r['ttft_mean']:>10.1f} {r['ttft_p95']:>9.1f} "
+                   f"{r['preemptions']:>8}")
+    t = totals
+    out.append(f"{t['steps']} engine steps, {t['tokens']} tokens "
+               f"({t['tok_per_s']:.0f} tok/s wall); page occupancy "
+               f"mean {t['occupancy_mean'] * 100:.0f}% / peak "
+               f"{t['occupancy_peak'] * 100:.0f}%; "
+               f"{t['preemptions']} preemptions")
+    return "\n".join(out)
+
+
+def fleet_view(eng) -> str:
+    """Per-tenant gauges through the nOS serving surface."""
+    from repro.core import nos as nos_mod
+    pod = nos_mod.NOS(data_rows=4, model_cols=1)
+    est = eng.decode_estimate      # engine-priced step time & energy
+    j_per_token = est.energy.total_j / max(eng.max_batch, 1)
+    tenants = sorted({r.tenant for r in eng.sched.finished})
+    for name in tenants:
+        fin = [r for r in eng.sched.finished if r.tenant == name]
+        ttft = [r.first_token_step - r.arrived_step for r in fin]
+        tokens = sum(len(r.tokens) for r in fin)
+        pod.submit(nos_mod.Job(name, rows_needed=1))
+        pod.update_serving(
+            name,
+            pages_held=max((eng.alloc.pages_for(r.prompt_len + r.gen)
+                            for r in fin), default=0),
+            tokens_out=tokens,
+            queue_latency_s=(float(np.mean(ttft)) if ttft else 0.0)
+            * est.step_time_s,
+            preemptions=sum(r.preemptions for r in fin),
+            energy_j=tokens * j_per_token)
+    return pod.serving_table()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small trace for CI / docs examples")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--pages", type=int, default=0)
+    ap.add_argument("--link-mode", default="circuit",
+                    choices=["circuit", "packet"])
+    args = ap.parse_args()
+    eng, rows, totals = replay(default_tenants(args.quick), seed=args.seed,
+                               max_batch=args.batch,
+                               page_size=args.page_size, n_pages=args.pages,
+                               link_mode=args.link_mode)
+    print(format_table(rows, totals))
+    print("[nOS] fleet serving view:")
+    print(fleet_view(eng))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Docs CI gate: every ```bash block under docs/*.md must run (or be
+fenced as ```bash no-run), and every repo-relative link / module path in
+README.md and docs/*.md must resolve.
+
+Run from the repo root:  python scripts/check_docs.py [--list]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+FENCE_RE = re.compile(r"^```(\S*)[ \t]*(.*)$")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)#\s]+)[^)]*\)")
+BACKTICK_RE = re.compile(r"`([^`]+)`")
+
+
+def fenced_blocks(text: str):
+    """Yield (info, extra, body, lineno) for every fenced code block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i])
+        if m and m.group(1):
+            info, extra = m.group(1), m.group(2).strip()
+            body, start = [], i + 1
+            i += 1
+            while i < len(lines) and not lines[i].startswith("```"):
+                body.append(lines[i])
+                i += 1
+            yield info, extra, "\n".join(body), start
+        i += 1
+
+
+def run_bash_blocks(path: str) -> list:
+    """Run each ```bash block; returns a list of failure strings."""
+    failures = []
+    with open(path) as f:
+        text = f.read()
+    for info, extra, body, lineno in fenced_blocks(text):
+        if info != "bash":
+            continue
+        if "no-run" in extra:
+            print(f"  [skip] {path}:{lineno} (no-run)")
+            continue
+        print(f"  [run ] {path}:{lineno}")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        try:
+            proc = subprocess.run(["bash", "-euo", "pipefail", "-c", body],
+                                  cwd=ROOT, env=env, capture_output=True,
+                                  text=True, timeout=900)
+        except subprocess.TimeoutExpired:
+            failures.append(f"{path}:{lineno} timed out after 900s\n"
+                            f"--- block ---\n{body}")
+            continue
+        if proc.returncode != 0:
+            failures.append(
+                f"{path}:{lineno} exited {proc.returncode}\n"
+                f"--- block ---\n{body}\n--- stderr ---\n"
+                f"{proc.stderr[-2000:]}")
+    return failures
+
+
+def check_paths(path: str) -> list:
+    """Relative markdown links and backticked src/... paths must exist."""
+    failures = []
+    with open(path) as f:
+        text = f.read()
+    base = os.path.dirname(path)
+    # strip fenced code so shell snippets aren't parsed as links
+    prose = []
+    in_fence = False
+    for line in text.splitlines():
+        if line.startswith("```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            prose.append(line)
+    prose = "\n".join(prose)
+    for target in LINK_RE.findall(prose):
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        if not os.path.exists(os.path.join(base, target)):
+            failures.append(f"{path}: broken link -> {target}")
+    for span in BACKTICK_RE.findall(prose):
+        span = span.strip()
+        if not span.startswith(("src/", "docs/", "benchmarks/", "scripts/",
+                                "tests/", "examples/")):
+            continue
+        if any(c in span for c in " ,()*"):
+            continue
+        if not os.path.exists(os.path.join(ROOT, span)):
+            failures.append(f"{path}: module path does not exist -> {span}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="list blocks without running them")
+    args = ap.parse_args()
+
+    doc_files = sorted(
+        os.path.join(ROOT, "docs", f)
+        for f in os.listdir(os.path.join(ROOT, "docs")) if f.endswith(".md"))
+    failures = []
+    for path in [os.path.join(ROOT, "README.md")] + doc_files:
+        rel = os.path.relpath(path, ROOT)
+        print(f"[docs] {rel}")
+        failures += check_paths(path)
+        if rel != "README.md":          # README blocks are the quickstart;
+            if args.list:               # docs/*.md blocks are the contract
+                with open(path) as f:
+                    for info, extra, _, ln in fenced_blocks(f.read()):
+                        if info == "bash":
+                            print(f"  {rel}:{ln} bash {extra}")
+            else:
+                failures += run_bash_blocks(path)
+    if failures:
+        print(f"\n{len(failures)} docs check(s) FAILED:", file=sys.stderr)
+        for f in failures:
+            print(" -", f, file=sys.stderr)
+        sys.exit(1)
+    print("\nall docs checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,4 +12,8 @@
   costs          — §II-B+§V+§VI composed: the unified cost engine
                    (estimate(config, layout, mode)) behind --layout auto,
                    nOS admission and benchmarks/cost_sweep.py
+
+The serving-side composition of these pieces (paged KV over the striped
+store, priced continuous batching) lives in ``repro.serving``; see
+docs/SERVING.md and docs/ARCHITECTURE.md for the layer map.
 """

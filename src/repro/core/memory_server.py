@@ -11,7 +11,10 @@ On the mesh this is a real distributed object store: a fixed-size fp32
 slab sharded over every device; reads/writes are gather/scatter
 collectives issued per batch of addresses.  The same striping rule is
 what the LM stack uses for vocab-sharded embeddings and expert tables —
-``striped_owner`` is the single source of truth for the mapping.
+``striped_owner`` is the single source of truth for the mapping.  The
+paged-KV serving engine reuses it too: ``repro.serving.paged_kv`` stripes
+KV pages over the mesh with exactly this rule (docs/SERVING.md), so the
+cache traffic follows the paper's (n-1)/n remote-fraction model.
 """
 from __future__ import annotations
 

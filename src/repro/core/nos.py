@@ -21,6 +21,13 @@ picks the one minimising the per-step energy-delay product (the §VIII
 "energy optimisation" responsibility, made concrete).  The chosen
 estimate also drives per-job power/energy accounting, replacing the flat
 active-watts assumption in ``power_estimate_w``.
+
+Serving telemetry (what is extrapolated beyond the paper): the paged
+serving engine (:mod:`repro.serving`) reports per-job KV pages held,
+tokens emitted, queue latency, preemptions and engine-priced energy
+through :meth:`NOS.update_serving`; ``serving_table()`` renders the
+fleet view — the paper's "program that can measure its own power",
+widened to a tenant that can measure its own cache footprint.
 """
 from __future__ import annotations
 
@@ -47,6 +54,12 @@ class Job:
     max_rows: int = 0                  # tenant quota; 0 = unlimited
     estimate: Optional[object] = None  # costs.CostEstimate of chosen slice
     energy_j: float = 0.0              # accrued at finish()
+    # -- serving extension (paged engine reports through update_serving) ----
+    pages_held: int = 0                # KV pages currently allocated
+    peak_pages: int = 0
+    tokens_out: int = 0                # tokens emitted so far
+    queue_latency_s: float = 0.0       # mean admission->first-token latency
+    preemptions: int = 0
 
 
 @dataclass
@@ -176,6 +189,43 @@ class NOS:
         measure its own power', at the scheduler level)."""
         return {j.name: j.energy_j for j in self.jobs.values()
                 if j.energy_j > 0.0}
+
+    def update_serving(self, name: str, *, pages_held: Optional[int] = None,
+                       peak_pages: Optional[int] = None,
+                       tokens_out: Optional[int] = None,
+                       queue_latency_s: Optional[float] = None,
+                       preemptions: Optional[int] = None,
+                       energy_j: Optional[float] = None):
+        """Serving-engine telemetry (§VIII: nOS owns per-application
+        accounting).  The paged engine calls this per replay/step batch;
+        ``energy_j`` accrues (engine-priced decode energy), ``peak_pages``
+        is monotone, the rest are gauges."""
+        job = self.jobs[name]
+        if pages_held is not None:
+            job.pages_held = pages_held
+            job.peak_pages = max(job.peak_pages, pages_held)
+        if peak_pages is not None:
+            job.peak_pages = max(job.peak_pages, peak_pages)
+        if tokens_out is not None:
+            job.tokens_out = tokens_out
+        if queue_latency_s is not None:
+            job.queue_latency_s = queue_latency_s
+        if preemptions is not None:
+            job.preemptions = preemptions
+        if energy_j is not None:
+            job.energy_j += energy_j
+
+    def serving_table(self) -> str:
+        """Fleet view of the serving gauges (pages, tokens, TTFT)."""
+        rows = [f"{'job':<18} {'pages':>6} {'peak':>5} {'tokens':>8} "
+                f"{'ttft_s':>9} {'preempt':>7} {'energy_J':>10}"]
+        for j in self.jobs.values():
+            if j.tokens_out == 0 and j.peak_pages == 0:
+                continue
+            rows.append(f"{j.name:<18} {j.pages_held:>6} {j.peak_pages:>5} "
+                        f"{j.tokens_out:>8} {j.queue_latency_s:>9.2e} "
+                        f"{j.preemptions:>7} {j.energy_j:>10.3g}")
+        return "\n".join(rows)
 
     def placement_table(self) -> str:
         rows = []

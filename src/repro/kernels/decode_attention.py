@@ -6,6 +6,14 @@ The cache stays in its native (B, T, Kv, hd) layout — no H-expansion copy
 in HBM (decode is memory-bound; the cache read is the roofline term).
 Slots beyond ``pos`` are masked (ring/global semantics handled by the
 caller's mask offset).
+
+``paged_decode_attention`` is the paged-KV variant behind the serving
+engine (Swallow §X-B: the KV cache as a striped distributed store): the
+cache lives in fixed-size pages (P, ps, Kv, hd) and each sequence names
+its pages through a block-index table.  The table is a scalar-prefetch
+operand, so the BlockSpec index map DMAs exactly the pages the sequence
+owns — the kernel never assumes a contiguous cache, and per-sequence
+lengths replace the single shared ``pos``.
 """
 from __future__ import annotations
 
@@ -100,4 +108,99 @@ def decode_attention(q, k, v, pos, *, scale=None, softcap=None,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(pos_arr, qg, k, v)
+    return out.reshape(B, H, hd)
+
+
+def _paged_dec_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, scale, softcap,
+                      page_size, n_pages):
+    b = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b]
+    t_start = pi * page_size
+
+    @pl.when(t_start <= pos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)        # (G, hd)
+        k = k_ref[0, :, 0].astype(jnp.float32)     # (ps, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        slots = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(slots <= pos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l_ref[...], 1e-37)[:, None]
+                            ).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           scale=None, softcap=None, interpret=True):
+    """q (B,H,hd); k_pages/v_pages (P,ps,Kv,hd); block_tables (B,nmax)
+    int32 physical page ids; pos (B,) int32 per-sequence last valid slot.
+
+    Logical slot t of sequence b lives at page ``block_tables[b, t//ps]``,
+    offset ``t % ps``.  Pages past ``pos[b]`` must still name a real page
+    (the serving engine points them at the reserved null page 0); their
+    contribution is masked out exactly.
+    """
+    B, H, hd = q.shape
+    ps, Kv = k_pages.shape[1], k_pages.shape[2]
+    nmax = block_tables.shape[1]
+    G = H // Kv
+    scale = hd ** -0.5 if scale is None else scale
+    qg = q.reshape(B, Kv, G, hd)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
+
+    kernel = functools.partial(_paged_dec_kernel, scale=scale,
+                               softcap=softcap, page_size=ps, n_pages=nmax)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Kv, nmax),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, kv, p, bt, sl: (b, kv, 0, 0)),
+            # the block-index table drives the page DMA: block p of
+            # sequence b is physical page bt[b, p]
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, kv, p, bt, sl: (bt[b, p], 0, kv, 0)),
+            pl.BlockSpec((1, ps, 1, hd),
+                         lambda b, kv, p, bt, sl: (bt[b, p], 0, kv, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, kv, p, bt, sl: (b, kv, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(bt, pos_arr, qg, k_pages, v_pages)
     return out.reshape(B, H, hd)

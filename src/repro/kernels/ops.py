@@ -38,6 +38,14 @@ def decode_attention(q, k, v, pos, *, scale=None, softcap=None,
                                  block_t=block_t, interpret=_interpret())
 
 
+@functools.partial(jax.jit, static_argnames=("scale", "softcap"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
+                           scale=None, softcap=None):
+    return _dec.paged_decode_attention(q, k_pages, v_pages, block_tables,
+                                       pos, scale=scale, softcap=softcap,
+                                       interpret=_interpret())
+
+
 @jax.jit
 def rglru_scan(a, b, h0):
     return _rg.rglru_scan(a, b, h0, interpret=_interpret())

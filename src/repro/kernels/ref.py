@@ -51,6 +51,32 @@ def decode_attention(q, k, v, pos, *, scale=None, softcap=None):
     return o.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_decode_attention(q, k_pages, v_pages, block_tables, pos,
+                           *, scale=None, softcap=None):
+    """Paged-KV oracle: gather pages, then dense masked decode attention.
+
+    q (B,H,hd); k_pages/v_pages (P,ps,Kv,hd); block_tables (B,nmax) int32
+    physical page ids; pos (B,) int32 — slots <= pos[b] are valid.
+    """
+    B, H, hd = q.shape
+    ps, Kv = k_pages.shape[1], k_pages.shape[2]
+    nmax = block_tables.shape[1]
+    T = nmax * ps
+    G = H // Kv
+    scale = hd ** -0.5 if scale is None else scale
+    k = k_pages[block_tables].reshape(B, T, Kv, hd)
+    v = v_pages[block_tables].reshape(B, T, Kv, hd)
+    qg = q.reshape(B, Kv, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    ok = jnp.arange(T)[None, :] <= pos[:, None]
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)
+
+
 def rglru_scan(a, b, h0):
     """h_t = a_t * h_{t-1} + b_t, stepwise. a,b (B,S,W) f32; h0 (B,W)."""
     def step(h, ab):

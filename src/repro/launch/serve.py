@@ -1,24 +1,163 @@
-"""CLI batched-serving driver: prefill a batch of prompts, decode greedily.
+"""CLI batched-serving driver: dense fixed batches or the paged engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch tiny-100m \
       --batch 4 --prompt-len 64 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --tiny --engine paged \
+      --requests 16 --devices 4
 
-Implements a simple continuous-batch scheduler: a request queue feeds
-fixed-size decode batches; finished sequences are replaced by prefilling
-waiting requests (the farmer-worker paradigm, C3: the coordinator hands
-work to a fixed pool of compute slots).  ``--layout auto`` asks the cost
-engine for the fastest (data, model) mesh for the decode shape and
-reports predicted vs measured per-token time.
+``--engine dense`` (default) is the original fixed-size-batch loop: a
+request queue feeds whole batches, finished batches are replaced
+wholesale.  ``--engine paged`` routes through :mod:`repro.serving` — the
+paged-KV continuous-batching engine (Swallow §III farmer-worker over the
+§X-B striped store); both engines decode greedily and produce identical
+tokens on the same prompts (pinned by tests/test_serving.py).
+
+``--layout auto`` asks the cost engine for the fastest (data, model)
+mesh for the decode shape and reports predicted vs measured per-token
+time.  Timing excludes the first (compile) step — a warmup prefill +
+decode runs before the clock starts, so the predicted-vs-measured ratio
+reflects steady state, not XLA compilation.
 """
 import argparse
 import os
 import time
 
 
+def make_prompts(n_requests: int, prompt_len: int, vocab_size: int):
+    """The shared request stream: request i is PRNGKey(i) — both engines
+    see byte-identical prompts, which is what makes the token-equality
+    acceptance check meaningful."""
+    import jax
+    return [jax.random.randint(jax.random.PRNGKey(i), (prompt_len,), 2,
+                               vocab_size)
+            for i in range(n_requests)]
+
+
+def run_dense(args, cfg, mesh, params=None):
+    """Fixed-batch loop.  Returns (per-request token lists, stats dict)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import lm
+    from repro import steps as steps_mod
+    from repro.parallel.sharding import use_sharding
+
+    max_len = args.prompt_len + args.gen
+    with use_sharding(mesh):
+        if params is None:
+            params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        prefill = jax.jit(steps_mod.make_prefill_step(cfg, max_len=max_len))
+        serve = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(2,))
+
+        prompts = make_prompts(args.requests, args.prompt_len,
+                               cfg.vocab_size)
+        # warmup: compile prefill + decode outside the timed region
+        wl, wc = prefill(params, jnp.stack([prompts[0]] * args.batch))
+        wt = jnp.argmax(wl, -1).astype(jnp.int32)
+        wt, _, wc = serve(params, wt, wc, jnp.int32(args.prompt_len))
+        jax.block_until_ready(wt)
+
+        pending = list(enumerate(prompts))
+        outputs = {}
+        t0 = time.time()
+        decode_steps = 0
+        decode_s = 0.0
+        tokens_out = 0
+        while pending:
+            batch = [pending.pop(0) for _ in
+                     range(min(args.batch, len(pending)))]
+            pad = len(batch)
+            while len(batch) < args.batch:      # pad the worker pool
+                batch.append(batch[-1])
+            logits, caches = prefill(params, jnp.stack([p for _, p in batch]))
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            outs = [tok]
+            jax.block_until_ready(tok)          # decode-only timing below
+            td = time.time()
+            for i in range(args.gen - 1):
+                tok, logits, caches = serve(params, tok, caches,
+                                            jnp.int32(args.prompt_len + i))
+                outs.append(tok)
+                decode_steps += 1
+            jax.block_until_ready(tok)
+            decode_s += time.time() - td
+            seq = jnp.concatenate(outs, -1)     # (batch, gen)
+            for row, (rid, _) in enumerate(batch[:pad]):
+                outputs[rid] = [int(t) for t in seq[row]]
+                tokens_out += args.gen
+        dt = time.time() - t0
+    stats = dict(requests=len(outputs), tokens=tokens_out, seconds=dt,
+                 decode_steps=decode_steps,
+                 step_s=decode_s / max(decode_steps, 1))
+    return outputs, stats
+
+
+def run_paged(args, cfg, n_nodes: int = 1, params=None):
+    """Paged continuous-batching path.  Returns (tokens, stats, engine).
+
+    ``n_nodes`` is the page-striping width (the model-axis extent the
+    cost engine prices and the allocator stripes over)."""
+    import jax
+    import numpy as np
+    from repro.models import lm
+    from repro.serving import PagedEngine
+
+    if params is None:
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.gen
+    # auto pool: exact worst-case demand of a full batch + the null page
+    n_pages = args.pages or (
+        args.batch * (-(-max_len // args.page_size)) + 1)
+    eng = PagedEngine(cfg, params, max_batch=args.batch,
+                      page_size=args.page_size, n_pages=n_pages,
+                      max_len=max_len, n_nodes=n_nodes,
+                      link_mode=args.link_mode,
+                      prefill_budget=args.prefill_budget)
+    prompts = make_prompts(args.requests, args.prompt_len, cfg.vocab_size)
+    # warmup both jitted paths (prefill + one decode), then reset clocks
+    eng.submit(np.asarray(prompts[0]), min(2, args.gen), rid="warmup")
+    eng.run()
+    eng.reset_metrics()
+
+    for i, p in enumerate(prompts):
+        eng.submit(np.asarray(p), args.gen, rid=f"req{i}")
+    t0 = time.time()
+    finished = eng.run()
+    dt = time.time() - t0
+    outputs = {int(r.rid[3:]): r.tokens for r in finished}
+    m = eng.metrics()
+    m.update(seconds=dt, step_s=m["decode_step_s"])
+    return outputs, m, eng
+
+
+def report_fleet(args, cfg, eng, tokens_out: int):
+    """Register the serve job with the cost-aware nOS and print the
+    fleet serving view (per-job pages, energy, queue latency)."""
+    from repro.configs.base import ShapeConfig
+    from repro.core import nos as nos_mod
+
+    pod = nos_mod.NOS(data_rows=4, model_cols=max(args.devices or 1, 1))
+    shape = ShapeConfig("serve", args.prompt_len + args.gen, args.batch,
+                        "decode")
+    pod.submit(cfg, name="serve", shape=shape, steps=eng.steps_run,
+               mode=args.link_mode, max_rows=1)
+    est = pod.jobs["serve"].estimate
+    m = eng.metrics()
+    pod.update_serving(
+        "serve", pages_held=eng.alloc.pages_in_use,
+        peak_pages=m["peak_pages"],
+        tokens_out=tokens_out,
+        queue_latency_s=m["ttft_steps_mean"] * est.step_time_s,
+        preemptions=m["preemptions"],
+        energy_j=eng.steps_run * est.energy.total_j * est.layout.n_chips)
+    print("[nOS] fleet serving view:")
+    print(pod.serving_table())
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="tiny-100m")
     ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--engine", default="dense", choices=["dense", "paged"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
@@ -30,25 +169,28 @@ def main():
                     choices=["circuit", "packet"])
     ap.add_argument("--data", type=int, default=1)
     ap.add_argument("--model", type=int, default=1)
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged engine: tokens per KV page")
+    ap.add_argument("--pages", type=int, default=0,
+                    help="paged engine: pool size incl. null page (0=auto)")
+    ap.add_argument("--prefill-budget", type=float, default=2.0,
+                    help="prefill seconds admitted per step, in units of "
+                         "one decode step (cost-engine priced)")
     args = ap.parse_args()
 
     if args.devices:
         os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
             f" --xla_force_host_platform_device_count={args.devices}"
 
-    import jax
-    import jax.numpy as jnp
     from repro.configs import get_config, get_tiny_config
     from repro.configs.base import ShapeConfig
     from repro.launch.mesh import make_test_mesh
-    from repro.models import lm
-    from repro import steps as steps_mod
-    from repro.parallel.sharding import (autotune_layout, make_layout_mesh,
-                                         use_sharding)
+    from repro.parallel.sharding import autotune_layout, make_layout_mesh
 
     cfg = get_tiny_config(args.arch) if args.tiny else get_config(args.arch)
     assert cfg.supports_decode, f"{cfg.name} is encoder-only"
     predicted = None
+    mesh = None
     if args.layout == "auto":
         decode_shape = ShapeConfig("serve", args.prompt_len + args.gen,
                                    args.batch, "decode")
@@ -63,51 +205,39 @@ def main():
         print(f"[cost-engine] predicted decode step "
               f"{best.step_time_s * 1e3:.3f} ms "
               f"({best.tokens_per_s:.0f} tok/s)")
-        mesh = make_layout_mesh(best.layout)
+        if args.engine == "dense":       # paged strips by model degree,
+            mesh = make_layout_mesh(best.layout)  # no mesh to build
+    elif args.data * args.model > 1 and args.engine == "dense":
+        mesh = make_test_mesh(args.data, args.model)
+
+    if args.engine == "paged":
+        n_nodes = (predicted.layout.model if predicted is not None
+                   else max(args.model, 1))
+        outputs, m, eng = run_paged(args, cfg, n_nodes=n_nodes)
+        tokens = sum(len(t) for t in outputs.values())
+        print(f"[paged] served {m['finished']} requests, {tokens} tokens "
+              f"in {m['seconds']:.2f}s "
+              f"({tokens / max(m['seconds'], 1e-9):.1f} tok/s, "
+              f"{m['steps']} engine steps)")
+        print(f"[paged] TTFT mean {m['ttft_steps_mean']:.1f} / p95 "
+              f"{m['ttft_steps_p95']:.1f} steps; peak pages "
+              f"{m['peak_pages']} ({m['page_occupancy'] * 100:.0f}% of pool);"
+              f" {m['preemptions']} preemptions")
+        report_fleet(args, cfg, eng, tokens)
+        measured = m["step_s"]
     else:
-        mesh = make_test_mesh(args.data, args.model) \
-            if args.data * args.model > 1 else None
-
-    max_len = args.prompt_len + args.gen
-    key = jax.random.PRNGKey(0)
-
-    with use_sharding(mesh):
-        params = lm.init_params(key, cfg)
-        prefill = jax.jit(steps_mod.make_prefill_step(cfg, max_len=max_len))
-        serve = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(2,))
-
-        # request queue (farmer side)
-        pending = [jax.random.randint(jax.random.PRNGKey(i),
-                                      (args.prompt_len,), 2, cfg.vocab_size)
-                   for i in range(args.requests)]
-        done = 0
-        t0 = time.time()
-        tokens_out = 0
-        while pending:
-            batch_prompts = [pending.pop(0) for _ in
-                             range(min(args.batch, len(pending) + 0))]
-            while len(batch_prompts) < args.batch:   # pad the worker pool
-                batch_prompts.append(batch_prompts[-1])
-            prompts = jnp.stack(batch_prompts)
-            logits, caches = prefill(params, prompts)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            outs = [tok]
-            for i in range(args.gen - 1):
-                pos = args.prompt_len + i
-                tok, logits, caches = serve(params, tok, caches,
-                                            jnp.int32(pos))
-                outs.append(tok)
-            done += len(batch_prompts)
-            tokens_out += args.gen * args.batch
-        dt = time.time() - t0
-        print(f"served {done} requests, {tokens_out} tokens "
-              f"in {dt:.2f}s ({tokens_out / dt:.1f} tok/s)")
-        if predicted is not None and tokens_out:
-            measured = dt / tokens_out * args.batch   # s per decode step
-            print(f"[cost-engine] predicted {predicted.step_time_s * 1e3:.3f}"
-                  f" ms vs measured {measured * 1e3:.3f} ms per decode step "
-                  f"(ratio {measured / predicted.step_time_s:.2f}x; the "
-                  f"engine models v5e-class chips, not this host)")
+        outputs, stats = run_dense(args, cfg, mesh)
+        print(f"served {stats['requests']} requests, {stats['tokens']} "
+              f"tokens in {stats['seconds']:.2f}s "
+              f"({stats['tokens'] / max(stats['seconds'], 1e-9):.1f} tok/s)")
+        measured = stats["step_s"]
+    if predicted is not None:
+        # warmup ran before the clock: this ratio is steady-state only
+        print(f"[cost-engine] predicted {predicted.step_time_s * 1e3:.3f}"
+              f" ms vs measured {measured * 1e3:.3f} ms per decode step "
+              f"(warmup excluded; ratio "
+              f"{measured / predicted.step_time_s:.2f}x — the engine "
+              f"models v5e-class chips, not this host)")
 
 
 if __name__ == "__main__":

@@ -339,6 +339,115 @@ def attend_decode(q, cache: AttnCache, pos, *, window, scale, softcap,
     return o.reshape(B, 1, H * hd)
 
 
+# ---------------------------------------------------------------------------
+# paged decode — the KV cache as fixed-size pages named by a block table
+# ---------------------------------------------------------------------------
+# Swallow §X-B overlay of shared memory on distributed memory, applied to
+# the KV cache: instead of one (B, T) slab per sequence, k/v live in a
+# pool of (page_size, Kv*hd) pages and each sequence owns a block-index
+# table row.  Page ownership follows core/memory_server.striped_owner —
+# the serving allocator (repro.serving.paged_kv) is the host-side half.
+# Physical page 0 is reserved as the null page: padded block-table slots
+# point at it and their contribution is masked out exactly (the masked
+# exp underflows to 0.0), so garbage there never reaches a real token.
+
+class PagedAttnCache(NamedTuple):
+    # k/v pools, FLAT features: (n_pages, page_size, Kv*hd)
+    k: jnp.ndarray
+    v: jnp.ndarray
+
+
+def paged_cache_init(cfg, n_pages: int, page_size: int, dtype):
+    shape = (n_pages, page_size, cfg.n_kv_heads * cfg.head_dim)
+    return PagedAttnCache(k=jnp.zeros(shape, dtype),
+                          v=jnp.zeros(shape, dtype))
+
+
+def paged_cache_update(pool: PagedAttnCache, k_new, v_new, block_tables,
+                       pos):
+    """Write step-t k/v into page ``block_tables[b, t//ps]``, slot t%ps.
+
+    k_new/v_new (B, 1, Kv, hd); block_tables (B, nmax) int32; pos (B,)
+    int32 per-sequence write position.  Inactive batch slots must point
+    at the null page (their writes collide there harmlessly).
+    """
+    B = k_new.shape[0]
+    ps = pool.k.shape[1]
+    k_new = k_new.reshape(B, -1)
+    v_new = v_new.reshape(B, -1)
+    page = jnp.take_along_axis(block_tables, (pos // ps)[:, None],
+                               axis=1)[:, 0]
+    slot = pos % ps
+    return PagedAttnCache(k=pool.k.at[page, slot].set(k_new),
+                          v=pool.v.at[page, slot].set(v_new))
+
+
+def attend_decode_paged(q, pool: PagedAttnCache, block_tables, pos, *,
+                        scale, softcap, n_kv: int, impl=None):
+    """q (B,1,H,hd); pool pages (P,ps,Kv*hd); pos (B,) int32.
+
+    Gathers the sequence's pages through the block table and runs the
+    same masked decode attention as the dense path — identical arithmetic
+    on the valid slots, so paged and dense decode agree token-for-token.
+    """
+    B, _, H, hd = q.shape
+    ps = pool.k.shape[1]
+    Kv = n_kv
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        P_ = pool.k.shape[0]
+        o = kops.paged_decode_attention(
+            q.reshape(B, H, hd), pool.k.reshape(P_, ps, Kv, hd),
+            pool.v.reshape(P_, ps, Kv, hd), block_tables, pos,
+            scale=scale, softcap=softcap)
+        return o.reshape(B, 1, H * hd)
+    nmax = block_tables.shape[1]
+    T = nmax * ps
+    G = H // Kv
+    k = pool.k[block_tables].reshape(B, T, Kv, hd)
+    v = pool.v[block_tables].reshape(B, T, Kv, hd)
+    qg = q.reshape(B, Kv, G, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = nn.softcap(s, softcap)
+    ok = jnp.arange(T)[None, :] <= pos[:, None]
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o.reshape(B, 1, H * hd)
+
+
+def paged_cache_from_prefill(pool: PagedAttnCache, k, v, block_row,
+                             start: int = 0):
+    """Scatter prefill k/v (1,S,Kv,hd) of ONE sequence into the pool.
+
+    ``block_row`` (nmax,) int32 is the sequence's block-table row; tokens
+    land at logical slots start..start+S-1.
+    """
+    S = k.shape[1]
+    ps = pool.k.shape[1]
+    k = k.reshape(S, -1)
+    v = v.reshape(S, -1)
+    t = start + jnp.arange(S)
+    page = block_row[t // ps]
+    slot = t % ps
+    return PagedAttnCache(k=pool.k.at[page, slot].set(k),
+                          v=pool.v.at[page, slot].set(v))
+
+
+def apply_decode_paged(p, cfg, x, pool: PagedAttnCache, block_tables,
+                       pos, *, angles):
+    """Paged decode path: x (B,1,D), pos (B,). Returns (out, new pool)."""
+    q, k_new, v_new = _qkv(p, cfg, x, angles)
+    pool = paged_cache_update(pool, k_new, v_new, block_tables, pos)
+    o = attend_decode_paged(q, pool, block_tables, pos, scale=_scale(cfg),
+                            softcap=cfg.attn_softcap, n_kv=cfg.n_kv_heads,
+                            impl=cfg.impl)
+    out = nn.matmul(o, p["wo"])
+    return out, pool
+
+
 def cache_init(cfg, batch: int, max_len: int, window: Optional[int], dtype):
     T = min(window, max_len) if window is not None else max_len
     shape = (batch, T, cfg.n_kv_heads * cfg.head_dim)

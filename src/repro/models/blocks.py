@@ -161,6 +161,43 @@ def apply_decode(p, cfg, kind: str, x, cache, pos, *, angles):
     return x, cache
 
 
+def apply_decode_paged(p, cfg, kind: str, x, pool, block_tables, pos, *,
+                       angles):
+    """Single-token decode against a paged KV pool. Returns (x, pool).
+
+    Only global attention pages cleanly (a sliding-window ring cache and
+    the recurrent states are constant-size per sequence — nothing to
+    page); the serving engine asserts an attention-only config.
+    """
+    if kind != ATTN:
+        raise NotImplementedError(
+            f"paged decode supports global-attention layers only, got {kind!r}")
+    h = nn.rmsnorm(x, p["ln1"]["scale"], cfg.norm_eps)
+    out, pool = attention.apply_decode_paged(p["attn"], cfg, h, pool,
+                                             block_tables, pos,
+                                             angles=angles)
+    x = x + _post(p, cfg, "ln1_post", out)
+    h2 = nn.rmsnorm(x, p["ln2"]["scale"], cfg.norm_eps)
+    out2, _ = _ffn_part(p, cfg, h2)
+    x = x + _post(p, cfg, "ln2_post", out2)
+    return x, pool
+
+
+def paged_cache_init(cfg, kind: str, n_pages: int, page_size: int, dtype):
+    if kind != ATTN:
+        raise NotImplementedError(
+            f"paged KV pools exist for global attention only, got {kind!r}")
+    return attention.paged_cache_init(cfg, n_pages, page_size, dtype)
+
+
+def paged_cache_from_prefill(cfg, kind: str, pool, raw, block_row):
+    """Scatter one sequence's prefill kv into its pages."""
+    if kind != ATTN:
+        raise NotImplementedError(kind)
+    k, v = raw
+    return attention.paged_cache_from_prefill(pool, k, v, block_row)
+
+
 def cache_init(cfg, kind: str, batch: int, max_len: int, dtype):
     if kind == ATTN:
         return attention.cache_init(cfg, batch, max_len, None, dtype)

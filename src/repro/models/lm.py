@@ -415,6 +415,96 @@ def init_caches(cfg, batch: int, max_len: int):
     return out
 
 
+# ---------------------------------------------------------------------------
+# paged decode — pools + block tables instead of per-sequence slabs
+# ---------------------------------------------------------------------------
+def paged_decodable(cfg) -> bool:
+    """Paged serving needs causal, embedded-token, global-attention-only
+    configs (windows and recurrent states are constant-size — nothing to
+    page) and no M-RoPE (per-sequence positions are scalar per step)."""
+    return (cfg.supports_decode and cfg.embed_inputs
+            and cfg.mrope_sections is None
+            and all(k == "attn" for k in cfg.layer_kinds))
+
+
+def init_paged_caches(cfg, n_pages: int, page_size: int):
+    """Per-layer paged KV pools, mirroring the init_caches pytree: one
+    PagedAttnCache per layer, stacked (n_cycles, ...) for scanned
+    segments.  All layers share one block table — page ids are logical
+    across the whole stack, exactly the vLLM layout."""
+    assert paged_decodable(cfg), f"{cfg.name} is not paged-decodable"
+    dtype = nn.dt(cfg.activation_dtype)
+    segs = make_segments(cfg)
+    out = []
+    for seg in segs:
+        cyc = tuple(blocks.paged_cache_init(cfg, k, n_pages, page_size,
+                                            dtype)
+                    for k in seg.kinds)
+        if seg.scanned:
+            cyc = jax.tree.map(
+                lambda l: jnp.zeros((seg.n_cycles,) + l.shape, l.dtype), cyc)
+        out.append(cyc)
+    return out
+
+
+def paged_from_prefill(cfg, pools, raw_caches, block_row):
+    """Scatter ONE sequence's prefill kv (from forward(mode="prefill"),
+    batch 1) into the pools at the pages named by ``block_row``."""
+    segs = make_segments(cfg)
+    out = []
+    for seg, seg_pool, seg_raw in zip(segs, pools, raw_caches):
+        def conv_cycle(cyc_pool, cyc_raw):
+            return tuple(
+                blocks.paged_cache_from_prefill(cfg, seg.kinds[j],
+                                                cyc_pool[j], cyc_raw[j],
+                                                block_row)
+                for j in range(len(seg.kinds)))
+        if seg.scanned:
+            out.append(jax.vmap(conv_cycle)(seg_pool, seg_raw))
+        else:
+            out.append(conv_cycle(seg_pool, seg_raw))
+        # vmap over the scan-stacked layer dim: same block row, each
+        # layer's own pool/raw slice
+    return out
+
+
+def decode_step_paged(params, cfg, tokens, pools, block_tables, pos):
+    """One paged decode step over a continuous batch.
+
+    tokens (B,1) int32; block_tables (B,nmax) int32 physical page ids;
+    pos (B,) int32 per-sequence positions (inactive slots: 0, with a
+    null-page block row).  Returns (logits (B,1,V), new pools).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    positions = pos[:, None].astype(jnp.int32)
+    angles = _angles(cfg, positions)
+
+    segs = make_segments(cfg)
+    new_pools = []
+    for seg, seg_p, seg_pool in zip(segs, params["segments"], pools):
+        def cycle_decode(cyc_p, cyc_pool, x):
+            new_c = []
+            for j, kind in enumerate(seg.kinds):
+                x, c = blocks.apply_decode_paged(cyc_p[j], cfg, kind, x,
+                                                 cyc_pool[j], block_tables,
+                                                 pos, angles=angles)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        if seg.scanned:
+            def scan_body(x, inp):
+                cyc_p, cyc_pool = inp
+                x, new_c = cycle_decode(cyc_p, cyc_pool, x)
+                return x, new_c
+            x, new_seg = jax.lax.scan(scan_body, x, (seg_p, seg_pool))
+        else:
+            x, new_seg = cycle_decode(seg_p, seg_pool, x)
+        new_pools.append(new_seg)
+
+    h = nn.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return head_logits(params, cfg, h), new_pools
+
+
 def decode_step(params, cfg, tokens, caches, pos, *, impl=None):
     """One decode step. tokens (B,1) ids or (B,1,D) embeds; pos scalar.
 

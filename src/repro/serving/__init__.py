@@ -1,0 +1,19 @@
+"""Swallow §III + §VIII + §X-B composed: the serving subsystem.
+
+  paged_kv   — §X-B striped store applied to KV pages (host allocator;
+               page owner = core/memory_server.striped_owner)
+  scheduler  — §III farmer-worker continuous batching with §VIII-style
+               priced admission and page-pressure preemption
+  engine     — the device-side loop: paged pools, block tables, one
+               jitted decode step per batch refill
+
+Entry points: ``repro.launch.serve --engine paged`` and
+``benchmarks/serve_trace.py``; docs in docs/SERVING.md.
+"""
+from repro.serving.engine import PagedEngine
+from repro.serving.paged_kv import NULL_PAGE, PageAllocator
+from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
+                                     StepPlan)
+
+__all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
+           "ContinuousBatchScheduler", "Request", "StepPlan"]

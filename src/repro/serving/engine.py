@@ -1,0 +1,221 @@
+"""Swallow §III + §X-B composed: the paged-KV continuous-batching engine.
+
+What is reproduced: the farmer-worker loop (§III, C3) running against a
+striped memory server (§X-B) — the device-side half of the serving
+subsystem.  Per-layer KV pools (``lm.init_paged_caches``) are the
+striped store, the block-table matrix is the address map, and one jitted
+``make_paged_serve_step`` call decodes every occupied slot of the batch
+while :mod:`repro.serving.scheduler` refills freed slots with priced
+prefills.
+
+What is extrapolated: the paper's farmer distributes closed-form work
+items; here slot state (tokens, positions, block tables) lives in small
+host numpy arrays pushed to the device each step, which keeps the jitted
+step shape-stable (fixed batch, fixed pool) — the property that lets a
+tiny CPU host replay the same schedule a pod would run.
+
+Greedy decoding throughout: paged vs dense token equality is an
+acceptance gate (tests/test_serving.py), and it is also what makes
+recompute-preemption exact.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serving.paged_kv import NULL_PAGE, PageAllocator
+from repro.serving.scheduler import ContinuousBatchScheduler, Request
+
+
+class PagedEngine:
+    """Paged-KV serving engine over one model + one device mesh.
+
+    ``max_len`` bounds prompt+gen per sequence; the block table has
+    ``ceil(max_len / page_size)`` entries per slot.  ``n_pages`` includes
+    the reserved null page.
+    """
+
+    def __init__(self, cfg, params, *, max_batch: int = 4,
+                 page_size: int = 16, n_pages: int = 64,
+                 max_len: int = 256, n_nodes: int = 1,
+                 link_mode: str = "circuit", prefill_budget: float = 2.0):
+        import jax
+        import jax.numpy as jnp
+        from repro.models import lm
+        from repro import steps as steps_mod
+
+        assert lm.paged_decodable(cfg), \
+            f"{cfg.name} is not paged-decodable (attention-only, causal)"
+        self.cfg = cfg
+        self.params = params
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.nmax = -(-max_len // page_size)
+        self._jnp = jnp
+
+        self.alloc = PageAllocator(n_pages=n_pages, page_size=page_size,
+                                   n_nodes=n_nodes)
+        self.link_mode = link_mode
+        self.n_nodes = n_nodes
+        from repro.configs.base import ShapeConfig
+        self.decode_estimate = self._estimate(
+            ShapeConfig("serve_decode", max_len, max_batch, "decode"),
+            link_mode, n_nodes)
+        self.sched = ContinuousBatchScheduler(
+            self.alloc, max_batch,
+            prefill_cost_s=self._prefill_cost(link_mode, n_nodes),
+            decode_cost_s=self.decode_estimate.step_time_s,
+            prefill_budget=prefill_budget)
+
+        self.pools = lm.init_paged_caches(cfg, n_pages=n_pages,
+                                          page_size=page_size)
+        self._prefill = jax.jit(steps_mod.make_paged_prefill_step(cfg),
+                                donate_argnums=(2,))
+        self._serve = jax.jit(steps_mod.make_paged_serve_step(cfg),
+                              donate_argnums=(2,))
+        # host-side slot state, pushed to device each step
+        self.block_tables = np.full((max_batch, self.nmax), NULL_PAGE,
+                                    np.int32)
+        self.tokens = np.zeros((max_batch, 1), np.int32)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self._n_submitted = 0
+        self.steps_run = 0
+        self.decode_steps = 0
+        self.decode_tokens = 0
+        self.decode_time_s = 0.0
+        self.peak_pages = 0
+        self.t0 = time.time()
+
+    def reset_metrics(self):
+        """Zero every counter/clock (e.g. after a warmup pass) while
+        keeping the compiled steps, pools and allocator state."""
+        self.sched.finished.clear()
+        self._n_submitted = 0
+        self.steps_run = self.decode_steps = self.decode_tokens = 0
+        self.decode_time_s = 0.0
+        self.peak_pages = 0
+        self.t0 = time.time()
+
+    # -- cost-engine pricing (the scheduler's admission inputs) ------------
+    def _estimate(self, shape, link_mode, n_nodes):
+        from repro.core import costs
+        return costs.estimate(self.cfg, costs.Layout(data=1, model=n_nodes),
+                              link_mode, shape)
+
+    def _prefill_cost(self, link_mode, n_nodes):
+        from repro.configs.base import ShapeConfig
+
+        def cost(prompt_len: int) -> float:
+            shape = ShapeConfig("serve_prefill", max(prompt_len, 1), 1,
+                                "prefill")
+            return self._estimate(shape, link_mode, n_nodes).step_time_s
+        return cost
+
+    # -- request intake ----------------------------------------------------
+    def submit(self, prompt, gen: int, *, tenant: str = "default",
+               rid: Optional[str] = None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        assert prompt.ndim == 1 and prompt.shape[0] + gen <= self.max_len
+        rid = rid or f"r{self._n_submitted}"
+        self._n_submitted += 1
+        req = Request(rid=rid, prompt_len=int(prompt.shape[0]), gen=gen,
+                      tenant=tenant, prompt=prompt)
+        self.sched.submit(req)
+        return req
+
+    # -- one engine step ---------------------------------------------------
+    def _block_row(self, rid: str) -> np.ndarray:
+        row = np.full((self.nmax,), NULL_PAGE, np.int32)
+        pages = self.alloc.held[rid]
+        row[:len(pages)] = pages
+        return row
+
+    def _clear_slot(self, slot: int):
+        self.block_tables[slot] = NULL_PAGE
+        self.tokens[slot] = 0
+        self.pos[slot] = 0
+
+    def step(self) -> List[Request]:
+        """Plan, prefill admissions, decode every occupied slot.  Returns
+        requests finished this step."""
+        jnp = self._jnp
+        plan = self.sched.plan_step()
+        finished: List[Request] = []
+        for slot in range(self.max_batch):   # preempted/idle slots -> null
+            if slot not in self.sched.running:
+                self._clear_slot(slot)
+        for req in plan.admitted:
+            row = self._block_row(req.rid)
+            logits, self.pools = self._prefill(
+                self.params, jnp.asarray(req.prompt[None]), self.pools,
+                jnp.asarray(row))
+            tok = int(jnp.argmax(logits, -1)[0, 0])
+            self.sched.note_first_token(req, tok)
+            if req.state == "running":     # gen > 1: occupy the slot
+                self.block_tables[req.slot] = row
+                self.tokens[req.slot] = tok
+                self.pos[req.slot] = req.pos
+            else:                          # gen == 1: finished at prefill
+                finished.append(req)
+        if self.sched.running:
+            # refresh block tables of grown requests
+            for slot, req in self.sched.running.items():
+                self.block_tables[slot] = self._block_row(req.rid)
+                self.pos[slot] = req.pos
+                if req.tokens:
+                    self.tokens[slot] = req.tokens[-1]
+            active = dict(self.sched.running)
+            t_dec = time.time()
+            tok, _, self.pools = self._serve(
+                self.params, jnp.asarray(self.tokens), self.pools,
+                jnp.asarray(self.block_tables), jnp.asarray(self.pos))
+            tok_np = np.asarray(tok)          # blocks: decode-only timing
+            self.decode_time_s += time.time() - t_dec
+            self.decode_steps += 1
+            emitted: Dict[int, int] = {s: int(tok_np[s, 0]) for s in active}
+            self.decode_tokens += len(emitted)
+            finished += self.sched.complete_step(emitted)
+        else:
+            self.sched.step_idx += 1
+        for slot in range(self.max_batch):   # finished slots -> null
+            if slot not in self.sched.running:
+                self._clear_slot(slot)
+        self.steps_run += 1
+        self.peak_pages = max(self.peak_pages, self.alloc.pages_in_use)
+        return finished
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        """Step until every submitted request finished."""
+        while (self.sched.waiting or self.sched.running) \
+                and self.steps_run < max_steps:
+            self.step()
+        if self.sched.waiting or self.sched.running:
+            raise RuntimeError(
+                f"engine wedged: {len(self.sched.waiting)} waiting / "
+                f"{len(self.sched.running)} running after {max_steps} steps")
+        assert self.sched.conserved(self._n_submitted)
+        return self.sched.finished
+
+    # -- observability -----------------------------------------------------
+    def metrics(self) -> dict:
+        fin = self.sched.finished
+        dt = max(time.time() - self.t0, 1e-9)
+        ttft = [r.first_token_step - r.arrived_step for r in fin
+                if r.first_token_step is not None]
+        return {
+            "finished": len(fin),
+            "tokens_out": sum(len(r.tokens) for r in fin),
+            "steps": self.steps_run,
+            "tok_per_s": sum(len(r.tokens) for r in fin) / dt,
+            "decode_step_s": self.decode_time_s / max(self.decode_steps, 1),
+            "ttft_steps_mean": float(np.mean(ttft)) if ttft else 0.0,
+            "ttft_steps_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
+            "pages_in_use": self.alloc.pages_in_use,
+            "peak_pages": self.peak_pages,
+            "page_occupancy": self.peak_pages / max(self.alloc.n_pages - 1,
+                                                    1),
+            "preemptions": sum(r.preemptions for r in self.sched.all_requests),
+        }

@@ -1,0 +1,120 @@
+"""Swallow §III-A + §X-B: the KV cache as a striped distributed store.
+
+What is reproduced: the paper's "more elegant strategy" — an address
+space striped ``address % n`` over per-node controllers — applied to KV
+pages.  Physical page ``p`` is owned by node ``striped_owner(p, n)``
+(:mod:`repro.core.memory_server` is the single source of truth for the
+mapping), and the allocator hands a request's *logical* page ``j`` a
+physical page on node ``j % n`` whenever one is free, so a sequence's
+cache reads fan out over the mesh exactly like the paper's memory-server
+traffic instead of hammering one contention point.
+
+What is extrapolated: Swallow stores 32-bit words; here a "word" is a
+(page_size, Kv*hd) KV page and the striping axis is the mesh "model"
+dimension the pools are sharded over.  Page 0 is reserved as the null
+page — padded block-table slots point at it so the paged attention
+kernel always DMAs a real page and masks its contribution to exactly 0.
+
+Pure host-side logic: no jax imports, unit-testable anywhere.  The
+device-side half (pools + block tables) lives in
+:mod:`repro.serving.engine`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.memory_server import striped_owner
+
+NULL_PAGE = 0
+
+
+@dataclass
+class PageAllocator:
+    """Fixed-size-page allocator over a striped pool.
+
+    ``n_pages`` counts physical pages including the reserved null page;
+    ``n_nodes`` is the striping width (mesh "model" extent).
+    """
+    n_pages: int
+    page_size: int
+    n_nodes: int = 1
+    held: Dict[str, List[int]] = field(default_factory=dict)
+    _free_by_node: List[List[int]] = field(default_factory=list)
+
+    def __post_init__(self):
+        assert self.n_pages > 1, "need at least one page beyond the null page"
+        self._free_by_node = [[] for _ in range(self.n_nodes)]
+        # LIFO free lists per owner node; page 0 is never handed out
+        for p in range(self.n_pages - 1, NULL_PAGE, -1):
+            self._free_by_node[self.owner(p)].append(p)
+
+    # -- the striping rule (one source of truth) ---------------------------
+    def owner(self, page: int) -> int:
+        """Node owning physical ``page`` — delegates to the paper's
+        address%n rule in core/memory_server."""
+        return striped_owner(page, self.n_nodes)
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return sum(len(f) for f in self._free_by_node)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(p) for p in self.held.values())
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+    def occupancy_by_node(self) -> List[int]:
+        """Allocated pages per owner node (load-balance observable)."""
+        counts = [0] * self.n_nodes
+        for pages in self.held.values():
+            for p in pages:
+                counts[self.owner(p)] += 1
+        return counts
+
+    # -- alloc / grow / free ----------------------------------------------
+    def _take(self, want_node: int) -> Optional[int]:
+        """Pop a free page on ``want_node``, falling back to the richest
+        node (work-conserving when the stripe is fragmented)."""
+        if self._free_by_node[want_node]:
+            return self._free_by_node[want_node].pop()
+        best = max(range(self.n_nodes),
+                   key=lambda n: len(self._free_by_node[n]))
+        if self._free_by_node[best]:
+            return self._free_by_node[best].pop()
+        return None
+
+    def alloc(self, rid: str, n: int) -> Optional[List[int]]:
+        """All-or-nothing: ``n`` pages for ``rid``, logical page j on
+        node j%n_nodes.  Returns the page list or None."""
+        if n > self.free_pages or rid in self.held:
+            return None
+        pages = []
+        for j in range(n):
+            p = self._take(striped_owner(j, self.n_nodes))
+            assert p is not None
+            pages.append(p)
+        self.held[rid] = pages
+        return pages
+
+    def grow(self, rid: str, n: int = 1) -> bool:
+        """Append ``n`` pages to an existing allocation (decode crossing
+        a page boundary)."""
+        if n > self.free_pages:
+            return False
+        pages = self.held[rid]
+        for _ in range(n):
+            p = self._take(striped_owner(len(pages), self.n_nodes))
+            assert p is not None
+            pages.append(p)
+        return True
+
+    def free(self, rid: str) -> int:
+        """Release every page ``rid`` holds; returns the count."""
+        pages = self.held.pop(rid, [])
+        for p in pages:
+            self._free_by_node[self.owner(p)].append(p)
+        return len(pages)

@@ -1,0 +1,214 @@
+"""Swallow §III (farmer-worker, C3) + §VIII (nOS admission): the
+continuous-batching scheduler.
+
+What is reproduced: the farmer hands work to a fixed pool of compute
+slots and refills a slot the moment it frees — here the "work" is one
+decode step of one sequence, the slots are rows of the decode batch, and
+the farmer refills them by prefilling waiting requests mid-flight.
+Admission is priced, not guessed: each step spends at most
+``prefill_budget x decode_cost_s`` seconds of prefill interference,
+with both costs supplied by :func:`repro.core.costs.estimate` (the same
+engine nOS uses for placement) so prefill bursts cannot starve decode
+latency.
+
+What is extrapolated: Swallow's farmer never revokes work; here page
+pressure can *preempt* — the latest-arrived running request is evicted
+(its pages freed, its generated tokens discarded) and re-queued for a
+full recompute, vLLM-style.  Greedy decoding is deterministic, so a
+preempted request's final output is unchanged — the conservation
+property tests/test_serving.py pins down.
+
+Pure host-side state machine: no jax imports.  The engine applies the
+returned plan to device arrays.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.serving.paged_kv import PageAllocator
+
+
+@dataclass
+class Request:
+    rid: str
+    prompt_len: int
+    gen: int
+    tenant: str = "default"
+    arrived_step: int = 0
+    seq: int = 0                     # monotonic submission order (FIFO key)
+    prompt: object = None            # (S,) int32 array; opaque to the host
+    # -- lifecycle ---------------------------------------------------------
+    state: str = "waiting"           # waiting | running | finished
+    slot: Optional[int] = None
+    pos: int = 0                     # next KV write position
+    tokens: List[int] = field(default_factory=list)
+    first_token_step: Optional[int] = None
+    finished_step: Optional[int] = None
+    preemptions: int = 0
+
+    @property
+    def done(self) -> bool:
+        return len(self.tokens) >= self.gen
+
+
+@dataclass
+class StepPlan:
+    """What the engine must do this step, in order: clear the preempted
+    slots, prefill the admitted requests, then run one decode step."""
+    admitted: List[Request] = field(default_factory=list)
+    preempted: List[Request] = field(default_factory=list)
+
+
+class ContinuousBatchScheduler:
+    """Admission + page-pressure preemption over ``max_batch`` slots."""
+
+    def __init__(self, allocator: PageAllocator, max_batch: int,
+                 prefill_cost_s: Optional[Callable[[int], float]] = None,
+                 decode_cost_s: float = 0.0,
+                 prefill_budget: float = 2.0):
+        self.alloc = allocator
+        self.max_batch = max_batch
+        self.prefill_cost_s = prefill_cost_s
+        self.decode_cost_s = decode_cost_s
+        self.prefill_budget = prefill_budget
+        self.waiting: List[Request] = []
+        self.running: Dict[int, Request] = {}      # slot -> request
+        self.finished: List[Request] = []
+        self.step_idx = 0
+        self._next_seq = 0
+
+    # -- submission --------------------------------------------------------
+    def submit(self, req: Request):
+        max_need = self.alloc.pages_for(req.prompt_len + req.gen)
+        if max_need > self.alloc.n_pages - 1:
+            raise ValueError(
+                f"request {req.rid} needs {max_need} pages at peak but the "
+                f"pool only has {self.alloc.n_pages - 1} allocatable")
+        req.arrived_step = self.step_idx
+        req.seq = self._next_seq
+        self._next_seq += 1
+        self.waiting.append(req)
+        self._sort_waiting()
+
+    def _sort_waiting(self):
+        self.waiting.sort(key=lambda r: (r.arrived_step, r.seq))
+
+    # -- the per-step state machine ---------------------------------------
+    def plan_step(self) -> StepPlan:
+        """Growth/preemption for running requests, then priced admission.
+
+        Growth runs first so decode always has its write page; admission
+        runs second so freshly freed pages go to the grower, not a new
+        tenant.
+        """
+        plan = StepPlan()
+        self._grow_or_preempt(plan)
+        self._admit(plan)
+        return plan
+
+    def _victim(self, protect: Request) -> Optional[Request]:
+        """Latest-arrived running request; ``protect`` only if alone."""
+        others = [r for r in self.running.values() if r is not protect]
+        pool = others or [r for r in self.running.values()]
+        if not pool:
+            return None
+        return max(pool, key=lambda r: (r.arrived_step, r.seq))
+
+    def _preempt(self, req: Request, plan: StepPlan):
+        self.alloc.free(req.rid)
+        del self.running[req.slot]
+        req.state, req.slot = "waiting", None
+        req.pos = 0
+        req.tokens = []               # greedy decode: recompute is exact
+        req.first_token_step = None
+        req.preemptions += 1
+        self.waiting.append(req)
+        self._sort_waiting()
+        plan.preempted.append(req)
+
+    def _grow_or_preempt(self, plan: StepPlan):
+        for req in sorted(self.running.values(),
+                          key=lambda r: (r.arrived_step, r.seq)):
+            if req.state != "running":
+                continue
+            needed = req.pos // self.alloc.page_size + 1
+            while len(self.alloc.held[req.rid]) < needed:
+                if self.alloc.grow(req.rid):
+                    continue
+                victim = self._victim(req)
+                assert victim is not None
+                self._preempt(victim, plan)
+                if victim is req:
+                    break
+
+    def _admit(self, plan: StepPlan):
+        budget = self.prefill_budget * self.decode_cost_s
+        spent = 0.0
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            cost = (self.prefill_cost_s(req.prompt_len)
+                    if self.prefill_cost_s else 0.0)
+            starving = not self.running and not plan.admitted
+            if budget > 0.0 and spent + cost > budget and not starving:
+                break                 # interference budget exhausted
+            pages = self.alloc.alloc(
+                req.rid, self.alloc.pages_for(req.prompt_len + 1))
+            if pages is None:
+                break                 # page pressure: wait for frees
+            self.waiting.pop(0)
+            free_slots = set(range(self.max_batch)) - set(self.running)
+            req.slot = min(free_slots)
+            req.state = "running"
+            req.pos = req.prompt_len
+            self.running[req.slot] = req
+            plan.admitted.append(req)
+            spent += cost
+
+    # -- completion callbacks (engine -> scheduler) ------------------------
+    def note_first_token(self, req: Request, token: int):
+        req.tokens.append(token)
+        req.first_token_step = self.step_idx
+        self._maybe_finish(req)
+
+    def complete_step(self, emitted: Dict[int, int]) -> List[Request]:
+        """Record one decode step: ``emitted`` maps slot -> token.  The
+        KV write for the token happened at ``pos``; advance it.  Returns
+        the requests that just finished."""
+        done = []
+        for slot, token in emitted.items():
+            req = self.running.get(slot)
+            if req is None:
+                continue
+            req.pos += 1
+            req.tokens.append(token)
+            if self._maybe_finish(req):
+                done.append(req)
+        self.step_idx += 1
+        return done
+
+    def _maybe_finish(self, req: Request) -> bool:
+        if not req.done:
+            return False
+        self.alloc.free(req.rid)
+        if req.slot is not None:
+            self.running.pop(req.slot, None)
+        req.state, req.slot = "finished", None
+        req.finished_step = self.step_idx
+        self.finished.append(req)
+        return True
+
+    # -- invariants (pinned by tests) --------------------------------------
+    @property
+    def all_requests(self) -> List[Request]:
+        seen = {r.rid: r for r in self.waiting}
+        seen.update({r.rid: r for r in self.running.values()})
+        seen.update({r.rid: r for r in self.finished})
+        return list(seen.values())
+
+    def conserved(self, submitted: int) -> bool:
+        """No request dropped or duplicated across queues."""
+        rids = ([r.rid for r in self.waiting]
+                + [r.rid for r in self.running.values()]
+                + [r.rid for r in self.finished])
+        return len(rids) == len(set(rids)) == submitted

@@ -63,6 +63,37 @@ def make_serve_step(cfg: ModelConfig, impl: Optional[str] = None):
     return serve_step
 
 
+def make_paged_prefill_step(cfg: ModelConfig, impl: Optional[str] = None):
+    """Prefill ONE sequence straight into the paged KV pools.
+
+    (params, tokens (1,S), pools, block_row (nmax,)) ->
+    (next-token logits (1,1,V), updated pools).  Jit with the pools
+    donated — the scatter is in-place on device.
+    """
+    def prefill_paged(params, tokens, pools, block_row):
+        h, raw, _ = lm.forward(params, cfg, tokens, mode="prefill",
+                               impl=impl)
+        pools = lm.paged_from_prefill(cfg, pools, raw, block_row)
+        h_last = nn.rmsnorm(h[:, -1:], params["final_norm"]["scale"],
+                            cfg.norm_eps)
+        return lm.head_logits(params, cfg, h_last), pools
+    return prefill_paged
+
+
+def make_paged_serve_step(cfg: ModelConfig):
+    """One continuous-batch paged decode step (greedy sampling).
+
+    (params, tokens (B,1), pools, block_tables (B,nmax), pos (B,)) ->
+    (next tokens (B,1), logits, updated pools).
+    """
+    def serve_paged(params, tokens, pools, block_tables, pos):
+        logits, pools = lm.decode_step_paged(params, cfg, tokens, pools,
+                                             block_tables, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, logits, pools
+    return serve_paged
+
+
 # ---------------------------------------------------------------------------
 # abstract state + sharding specs
 # ---------------------------------------------------------------------------
