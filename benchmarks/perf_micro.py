@@ -72,6 +72,91 @@ def micro_kernels() -> List[Row]:
     return rows
 
 
+def micro_serve() -> List[Row]:
+    """Serving hot path: one paged decode step, the paged attention
+    kernel vs its ref oracle (incl. the block_t page-sweep hook), and a
+    fused K-step window vs K per-step dispatches with a host sync each —
+    the host↔device ping-pong the fused engine eliminates."""
+    import numpy as np
+    from repro import steps as steps_mod
+    from repro.configs import get_tiny_config
+    from repro.kernels import ops, ref
+    from repro.models import lm
+
+    rows = []
+    # -- paged decode attention: pallas(-interp) vs ref, block_t sweep --
+    B, H, hd, Kv, ps, nmax = 4, 8, 64, 2, 8, 4
+    P = 1 + B * nmax
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k_pages = jax.random.normal(ks[1], (P, ps, Kv, hd))
+    v_pages = jax.random.normal(ks[2], (P, ps, Kv, hd))
+    bt = (1 + jnp.arange(B * nmax, dtype=jnp.int32)).reshape(B, nmax)
+    pos = jnp.full((B,), nmax * ps - 1, jnp.int32)
+    ref_fn = jax.jit(ref.paged_decode_attention)
+    us = _timeit(lambda: jax.block_until_ready(
+        ref_fn(q, k_pages, v_pages, bt, pos)))
+    rows.append(("micro/paged_attn_ref_oracle", us, "gather+dense"))
+    for block_t in (ps, 2 * ps, 4 * ps):
+        us = _timeit(lambda: jax.block_until_ready(
+            ops.paged_decode_attention(q, k_pages, v_pages, bt, pos,
+                                       block_t=block_t)))
+        rows.append((f"micro/paged_attn_kernel_bt{block_t}", us,
+                     f"{block_t // ps} pages/grid-step"))
+
+    # -- engine-shaped decode: fused scan vs per-step dispatches --------
+    cfg = get_tiny_config("tiny-100m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    Bb, S, K = 4, 16, 8
+    ps2 = 8
+    nmax2 = -(-(S + 2 * K) // ps2)
+    n_pages = Bb * nmax2 + 1
+    pools = lm.init_paged_caches(cfg, n_pages=n_pages, page_size=ps2)
+    prefill = jax.jit(steps_mod.make_paged_prefill_step(cfg))
+    block = np.full((Bb, nmax2), 0, np.int32)
+    for b in range(Bb):
+        row = 1 + b * nmax2 + np.arange(nmax2, dtype=np.int32)
+        block[b] = row
+        prompt = jax.random.randint(jax.random.PRNGKey(b), (1, S), 2,
+                                    cfg.vocab_size)
+        _, pools = prefill(params, prompt, pools, jnp.asarray(block[b]))
+    block = jnp.asarray(block)
+    tok0 = jnp.ones((Bb, 1), jnp.int32)
+    pos0 = jnp.full((Bb,), S, jnp.int32)
+    active = jnp.ones((Bb,), jnp.int32)
+    serve1 = jax.jit(steps_mod.make_paged_serve_step(cfg))
+    scan = jax.jit(steps_mod.make_paged_serve_scan(cfg),
+                   static_argnames=("k",))
+
+    def perstep():
+        tok, p, pl = tok0, pos0, pools
+        for _ in range(K):
+            tok, _, pl = serve1(params, tok, pl, block, p)
+            np.asarray(tok)          # the per-token host sync
+            p = p + 1
+        return tok
+
+    def fused():
+        toks, tok, p, pl = scan(params, tok0, pools, block, pos0, active,
+                                k=K)
+        np.asarray(toks)             # one host sync per window
+        return tok
+
+    paged_us = _timeit(lambda: jax.block_until_ready(
+        serve1(params, tok0, pools, block, pos0)[0]))
+    rows.append(("micro/paged_decode_step_b4", paged_us,
+                 f"{Bb / (paged_us / 1e6):.0f} tok/s"))
+    per_us = _timeit(perstep)
+    fus_us = _timeit(fused)
+    rows.append((f"micro/serve_perstep_{K}x", per_us,
+                 f"{Bb * K / (per_us / 1e6):.0f} tok/s"))
+    # speedup lives in the derived field: us_per_call stays microseconds
+    rows.append((f"micro/serve_fused_window_k{K}", fus_us,
+                 f"{Bb * K / (fus_us / 1e6):.0f} tok/s, "
+                 f"{per_us / fus_us:.2f}x vs per-step"))
+    return rows
+
+
 def micro_data_pipeline() -> List[Row]:
     from repro.data import pipeline as dl
     cfg = dl.DataConfig(vocab_size=151936, seq_len=4096, global_batch=16)

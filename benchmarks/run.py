@@ -1,7 +1,19 @@
 """Benchmark driver: one section per paper table/figure + micro timings +
-the roofline table.  Prints ``name,us_per_call,derived`` CSV."""
+the roofline table.  Prints ``name,us_per_call,derived`` CSV.
+
+``--json`` additionally emits the machine-readable perf trajectory:
+``BENCH_micro.json`` (every micro row) and ``BENCH_serve.json`` (the
+fused-vs-per-step serving comparison with token-identity check) into
+``--json-dir``.  ``--only PATTERN`` filters sections by substring —
+the CI perf-smoke job runs ``--only micro --json`` and validates the
+files with ``scripts/check_bench.py``.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
+import platform
 import sys
 import traceback
 
@@ -9,10 +21,20 @@ import traceback
 def main() -> None:
     sys.path.insert(0, "src")
     sys.path.insert(0, ".")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="run only sections whose title contains this")
+    ap.add_argument("--json", action="store_true",
+                    help="emit BENCH_micro.json + BENCH_serve.json")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_*.json files")
+    args = ap.parse_args()
+
     from benchmarks import cost_sweep as cs
     from benchmarks import paper_tables as pt
     from benchmarks import perf_micro as pm
     from benchmarks import roofline_table as rt
+    from benchmarks import serve_trace as st
 
     sections = [
         ("Table II (link energies)", pt.table2_link_energy),
@@ -25,26 +47,58 @@ def main() -> None:
         ("Fig 8/9 (nOS cost sweep)", cs.sweep_rows),
         ("micro: train grad", pm.micro_train_steps),
         ("micro: kernels", pm.micro_kernels),
+        ("micro: serve", pm.micro_serve),
         ("micro: data", pm.micro_data_pipeline),
         ("micro: checkpoint", pm.micro_checkpoint),
         ("roofline table", rt.roofline_rows),
     ]
+    if args.only:
+        sections = [(t, f) for t, f in sections if args.only in t]
     print("name,us_per_call,derived")
     failures = 0
+    micro_rows = []
     for title, fn in sections:
         print(f"# --- {title} ---")
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.1f},{derived}")
+                if name.startswith("micro/"):
+                    micro_rows.append(
+                        {"name": name, "us_per_call": float(us),
+                         "derived": str(derived)})
         except Exception:
             traceback.print_exc()
             failures += 1
-    print("# --- full roofline table ---")
-    try:
-        rt.print_full_table()
-    except Exception:
-        traceback.print_exc()
-        failures += 1
+    if args.json:
+        os.makedirs(args.json_dir, exist_ok=True)
+        micro = {
+            "schema": "swallow.bench.micro/v1",
+            "host": platform.machine(),
+            "python": platform.python_version(),
+            "rows": micro_rows,
+        }
+        micro_path = os.path.join(args.json_dir, "BENCH_micro.json")
+        with open(micro_path, "w") as f:
+            json.dump(micro, f, indent=1)
+        print(f"# wrote {micro_path} ({len(micro_rows)} rows)")
+        try:
+            serve = st.bench_fused_comparison(quick=True)
+            serve_path = os.path.join(args.json_dir, "BENCH_serve.json")
+            with open(serve_path, "w") as f:
+                json.dump(serve, f, indent=1)
+            print(f"# wrote {serve_path} (tokens_match="
+                  f"{serve['tokens_match']}, speedup_decode="
+                  f"{serve['speedup_decode']:.2f}x)")
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+    if not args.only:
+        print("# --- full roofline table ---")
+        try:
+            rt.print_full_table()
+        except Exception:
+            traceback.print_exc()
+            failures += 1
     if failures:
         raise SystemExit(1)
 

@@ -58,8 +58,12 @@ def arrivals_for(t: Tenant, rng: np.random.Generator):
 def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
            max_batch: int = 4, page_size: int = 8, n_pages: int = 0,
            arch: str = "tiny-100m", link_mode: str = "circuit",
-           prefill_budget: float = 2.0):
-    """Drive the engine step by step, injecting arrivals between steps.
+           prefill_budget: float = 2.0, fused: bool = True,
+           max_window: int = 8, warmup: bool = False, params=None):
+    """Drive the engine window by window, injecting arrivals between
+    dispatches.  With ``fused`` the engine decodes multi-token windows,
+    capped to the next pending arrival so the trace's admission clock
+    stays faithful; ``fused=False`` is the legacy per-step loop.
 
     Returns (engine, per-tenant rows, totals).
     """
@@ -79,11 +83,26 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
         n_pages = max(int(worst * 0.75), 2) + 1
 
     cfg = get_tiny_config(arch)
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    if params is None:
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
     eng = PagedEngine(cfg, params, max_batch=max_batch,
                       page_size=page_size, n_pages=n_pages,
                       max_len=max_len, link_mode=link_mode,
-                      prefill_budget=prefill_budget)
+                      prefill_budget=prefill_budget, fused=fused,
+                      max_window=max_window)
+    if warmup:
+        # compile every window bucket + a prefill per DISTINCT prompt
+        # shape in the trace (prefill retraces per length) outside the
+        # timed region
+        eng.warmup_windows()
+        for i, plen in enumerate(sorted({t.prompt_len for t in tenants})):
+            warm = jax.random.randint(jax.random.PRNGKey(10_000 + i),
+                                      (plen,), 2, cfg.vocab_size)
+            eng.submit(np.asarray(warm), min(2, max_len - plen),
+                       rid=f"warmup{i}")
+        eng.run()
+        eng.reset_metrics()
+        eng.sched.step_idx = 0
 
     occupancy = []
     rid = 0
@@ -95,11 +114,18 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
             eng.submit(np.asarray(prompt), t.gen, tenant=t.name,
                        rid=f"{t.name}/{rid}")
             rid += 1
+        before = eng.steps_run
         if eng.sched.waiting or eng.sched.running:
-            eng.step()
+            # never decode past the next arrival: windows respect the
+            # trace's clock, not just the scheduler's safe horizon
+            cap = pending[0][0] - eng.sched.step_idx if pending else None
+            eng.step(max_window=cap)
         else:
             eng.sched.step_idx += 1   # idle gap before the next arrival
-        occupancy.append(eng.alloc.pages_in_use)
+        # one sample per *scheduler* step (a fused window covers several)
+        # so fused and per-step occupancy means weight phases identically
+        occupancy += [eng.alloc.pages_in_use] * max(eng.steps_run - before,
+                                                    1)
 
     rows = []
     for t in tenants:
@@ -113,13 +139,78 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
             preemptions=sum(r.preemptions for r in fin)))
     m = eng.metrics()
     totals = dict(
-        steps=eng.steps_run, tokens=m["tokens_out"],
-        tok_per_s=m["tok_per_s"],
+        steps=eng.steps_run, windows=m["windows"], tokens=m["tokens_out"],
+        tokens_finished=m["tokens_finished"],
+        tok_per_s=m["tok_per_s"], decode_tok_per_s=m["decode_tok_per_s"],
+        h2d_syncs=m["h2d_syncs"], d2h_syncs=m["d2h_syncs"],
+        syncs_per_token=m["syncs_per_token"],
         occupancy_mean=float(np.mean(occupancy)) / max(n_pages - 1, 1),
         occupancy_peak=m["peak_pages"] / max(n_pages - 1, 1),
         preemptions=m["preemptions"], n_pages=n_pages,
         page_size=page_size)
     return eng, rows, totals
+
+
+def bench_tenants() -> List[Tenant]:
+    """Decode-heavy pinned trace for BENCH_serve.json: one burst of
+    long-gen requests at batch pressure, so fused windows actually reach
+    ``max_window``.  (The docs quick trace is arrival-dominated — its
+    windows are capped near K=1 by the admission clock, which makes it a
+    TTFT exemplar, not a decode-throughput one.)"""
+    return [Tenant("decode", 8, 0.0, 16, 24, at_step=0)]
+
+
+def bench_fused_comparison(*, quick: bool = True, seed: int = 0,
+                           max_batch: int = 4, page_size: int = 8,
+                           max_window: int = 8, arch: str = "tiny-100m"):
+    """Replay the pinned decode-burst trace twice — fused windows vs
+    legacy per-step — with shared params, warmed-up compiles and an
+    uncontended pool (speedup A/B, not a preemption stressor), asserting
+    token identity per request.
+
+    Returns the BENCH_serve.json payload (see scripts/check_bench.py).
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+
+    tenants = bench_tenants()
+    if not quick:
+        tenants = [Tenant("decode", 16, 0.0, 32, 48, at_step=0)]
+    max_len = max(t.prompt_len + t.gen for t in tenants)
+    n_pages = max_batch * (-(-max_len // page_size)) + 1
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    out = {}
+    toks = {}
+    for mode, fused in (("fused", True), ("perstep", False)):
+        eng, rows, totals = replay(tenants, seed=seed,
+                                   max_batch=max_batch,
+                                   page_size=page_size, n_pages=n_pages,
+                                   fused=fused,
+                                   max_window=max_window, warmup=True,
+                                   params=params, arch=arch)
+        toks[mode] = {r.rid: list(r.tokens) for r in eng.sched.finished}
+        out[mode] = dict(
+            tokens=totals["tokens"], steps=totals["steps"],
+            windows=totals["windows"],
+            decode_tok_per_s=totals["decode_tok_per_s"],
+            tok_per_s=totals["tok_per_s"],
+            h2d_syncs=totals["h2d_syncs"], d2h_syncs=totals["d2h_syncs"],
+            syncs_per_token=totals["syncs_per_token"],
+            preemptions=totals["preemptions"])
+    return {
+        "schema": "swallow.bench.serve/v1",
+        "arch": arch, "batch": max_batch, "page_size": page_size,
+        "max_window": max_window, "trace": "decode-burst",
+        "quick": quick, "seed": seed,
+        "fused": out["fused"], "perstep": out["perstep"],
+        "tokens_match": toks["fused"] == toks["perstep"],
+        "speedup_decode": out["fused"]["decode_tok_per_s"]
+        / max(out["perstep"]["decode_tok_per_s"], 1e-9),
+        "sync_reduction": out["perstep"]["syncs_per_token"]
+        / max(out["fused"]["syncs_per_token"], 1e-9),
+    }
 
 
 def format_table(rows, totals) -> str:
@@ -132,8 +223,13 @@ def format_table(rows, totals) -> str:
                    f"{r['ttft_mean']:>10.1f} {r['ttft_p95']:>9.1f} "
                    f"{r['preemptions']:>8}")
     t = totals
-    out.append(f"{t['steps']} engine steps, {t['tokens']} tokens "
-               f"({t['tok_per_s']:.0f} tok/s wall); page occupancy "
+    out.append(f"{t['steps']} engine steps in {t['windows']} device "
+               f"dispatches, {t['tokens']} tokens "
+               f"({t['tok_per_s']:.0f} tok/s wall, "
+               f"{t['decode_tok_per_s']:.0f} decode tok/s); "
+               f"host<->device syncs {t['h2d_syncs']} h2d + "
+               f"{t['d2h_syncs']} d2h ({t['syncs_per_token']:.2f}/token); "
+               f"page occupancy "
                f"mean {t['occupancy_mean'] * 100:.0f}% / peak "
                f"{t['occupancy_peak'] * 100:.0f}%; "
                f"{t['preemptions']} preemptions")
@@ -174,11 +270,18 @@ def main():
     ap.add_argument("--pages", type=int, default=0)
     ap.add_argument("--link-mode", default="circuit",
                     choices=["circuit", "packet"])
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="fused multi-token decode windows "
+                         "(--no-fused = legacy per-step loop)")
+    ap.add_argument("--window", type=int, default=8,
+                    help="max fused window (tokens per device dispatch)")
     args = ap.parse_args()
     eng, rows, totals = replay(default_tenants(args.quick), seed=args.seed,
                                max_batch=args.batch,
                                page_size=args.page_size, n_pages=args.pages,
-                               link_mode=args.link_mode)
+                               link_mode=args.link_mode, fused=args.fused,
+                               max_window=args.window)
     print(format_table(rows, totals))
     print("[nOS] fleet serving view:")
     print(fleet_view(eng))

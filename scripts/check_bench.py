@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Perf-smoke CI gate: validate the machine-readable BENCH_*.json files
+that ``benchmarks/run.py --json`` emits.
+
+* ``BENCH_micro.json`` (swallow.bench.micro/v1): non-empty ``rows`` of
+  {name, us_per_call, derived} with finite positive timings, including
+  the serve rows the fused-decode PR pinned.
+* ``BENCH_serve.json`` (swallow.bench.serve/v1): fused + perstep stat
+  blocks, ``tokens_match`` must be true (fused windows are a perf
+  transform, not a sampler change), syncs-per-token must drop, and
+  ``speedup_decode`` must clear ``PERF_SMOKE_MIN_SPEEDUP`` (default 1.0
+  — the 1.5x acceptance bar is checked on dedicated hosts, CI runners
+  only guard against regressions to parity).
+
+Run from the repo root:
+    python benchmarks/run.py --only micro --json
+    python scripts/check_bench.py BENCH_micro.json BENCH_serve.json
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+REQUIRED_SERVE_KEYS = ("tokens", "steps", "windows", "decode_tok_per_s",
+                       "tok_per_s", "h2d_syncs", "d2h_syncs",
+                       "syncs_per_token", "preemptions")
+REQUIRED_MICRO_ROWS = ("micro/serve_fused_window_", "micro/serve_perstep_",
+                       "micro/paged_attn_kernel_")
+
+
+def _finite_pos(x) -> bool:
+    return isinstance(x, (int, float)) and math.isfinite(x) and x >= 0
+
+
+def check_micro(doc: dict) -> list:
+    errs = []
+    if doc.get("schema") != "swallow.bench.micro/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    rows = doc.get("rows", [])
+    if not rows:
+        errs.append("rows is empty")
+    for r in rows:
+        if set(r) != {"name", "us_per_call", "derived"}:
+            errs.append(f"bad row keys: {sorted(r)}")
+            break
+        if not _finite_pos(r["us_per_call"]):
+            errs.append(f"{r['name']}: non-finite us_per_call "
+                        f"{r['us_per_call']!r}")
+    names = [r.get("name", "") for r in rows]
+    for prefix in REQUIRED_MICRO_ROWS:
+        if not any(n.startswith(prefix) for n in names):
+            errs.append(f"missing required micro row {prefix}*")
+    return errs
+
+
+def check_serve(doc: dict) -> list:
+    errs = []
+    if doc.get("schema") != "swallow.bench.serve/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    for mode in ("fused", "perstep"):
+        blk = doc.get(mode)
+        if not isinstance(blk, dict):
+            errs.append(f"missing {mode} block")
+            continue
+        for key in REQUIRED_SERVE_KEYS:
+            if not _finite_pos(blk.get(key)):
+                errs.append(f"{mode}.{key}: non-finite {blk.get(key)!r}")
+    if doc.get("tokens_match") is not True:
+        errs.append("tokens_match is not true: fused windows changed "
+                    "the emitted tokens")
+    if not errs:
+        if doc["fused"]["syncs_per_token"] \
+                > doc["perstep"]["syncs_per_token"]:
+            errs.append(
+                "fused syncs_per_token "
+                f"({doc['fused']['syncs_per_token']:.3f}) did not drop "
+                f"below per-step ({doc['perstep']['syncs_per_token']:.3f})")
+        min_speedup = float(os.environ.get("PERF_SMOKE_MIN_SPEEDUP", "1.0"))
+        speedup = doc.get("speedup_decode")
+        if not _finite_pos(speedup):
+            errs.append(f"speedup_decode: non-finite {speedup!r}")
+        elif speedup < min_speedup:
+            errs.append(f"speedup_decode {speedup:.3f} "
+                        f"< required {min_speedup}")
+    return errs
+
+
+def main() -> None:
+    paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json"]
+    failures = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(f"{path}: unreadable ({e})")
+            continue
+        schema = doc.get("schema", "")
+        if "micro" in schema or "micro" in os.path.basename(path):
+            errs = check_micro(doc)
+        else:
+            errs = check_serve(doc)
+        for e in errs:
+            failures.append(f"{path}: {e}")
+        if not errs:
+            print(f"[bench] {path}: ok ({schema})")
+    if failures:
+        print(f"\n{len(failures)} bench check(s) FAILED:", file=sys.stderr)
+        for f in failures:
+            print(" -", f, file=sys.stderr)
+        sys.exit(1)
+    print("all bench checks passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -111,43 +111,52 @@ def decode_attention(q, k, v, pos, *, scale=None, softcap=None,
     return out.reshape(B, H, hd)
 
 
-def _paged_dec_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                      m_ref, l_ref, acc_ref, *, scale, softcap,
-                      page_size, n_pages):
+def _paged_dec_kernel(bt_ref, pos_ref, q_ref, *refs, scale, softcap,
+                      page_size, pages_per_blk, n_blocks):
+    """Grid (B, Kv, n_blocks); each block sweeps ``pages_per_blk`` pages
+    (block_t = pages_per_blk * page_size cache slots) with one online
+    softmax carried in VMEM scratch.  refs unpack as pages_per_blk k
+    page refs, pages_per_blk v page refs, the output, then scratch."""
+    m_ = pages_per_blk
+    k_refs, v_refs = refs[:m_], refs[m_:2 * m_]
+    o_ref, m_ref, l_ref, acc_ref = refs[2 * m_:]
     b = pl.program_id(0)
-    pi = pl.program_id(2)
+    blk = pl.program_id(2)
 
-    @pl.when(pi == 0)
+    @pl.when(blk == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     pos = pos_ref[b]
-    t_start = pi * page_size
+    for i in range(m_):
+        t_start = (blk * m_ + i) * page_size
 
-    @pl.when(t_start <= pos)
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)        # (G, hd)
-        k = k_ref[0, :, 0].astype(jnp.float32)     # (ps, hd)
-        v = v_ref[0, :, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        if softcap is not None:
-            s = softcap * jnp.tanh(s / softcap)
-        slots = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(slots <= pos, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, s.max(axis=1))
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
-        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        @pl.when(t_start <= pos)
+        def _compute(i=i, t_start=t_start):
+            q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
+            k = k_refs[i][0, :, 0].astype(jnp.float32)     # (ps, hd)
+            v = v_refs[i][0, :, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) \
+                * scale
+            if softcap is not None:
+                s = softcap * jnp.tanh(s / softcap)
+            slots = t_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(slots <= pos, s, NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev, s.max(axis=1))
+            p = jnp.exp(s - m_new[:, None])
+            corr = jnp.exp(m_prev - m_new)
+            l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+            acc_ref[...] = acc_ref[...] * corr[:, None] \
+                + jax.lax.dot_general(
+                    p, v, (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            m_ref[...] = m_new
 
-    @pl.when(pi == n_pages - 1)
+    @pl.when(blk == n_blocks - 1)
     def _finish():
         o_ref[0, 0, ...] = (acc_ref[...]
                             / jnp.maximum(l_ref[...], 1e-37)[:, None]
@@ -155,7 +164,8 @@ def _paged_dec_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
-                           scale=None, softcap=None, interpret=True):
+                           scale=None, softcap=None, block_t=None,
+                           interpret=True):
     """q (B,H,hd); k_pages/v_pages (P,ps,Kv,hd); block_tables (B,nmax)
     int32 physical page ids; pos (B,) int32 per-sequence last valid slot.
 
@@ -163,30 +173,49 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
     offset ``t % ps``.  Pages past ``pos[b]`` must still name a real page
     (the serving engine points them at the reserved null page 0); their
     contribution is masked out exactly.
+
+    ``block_t`` is the time-tile sweep hook: a multiple of ``page_size``
+    makes each grid step DMA ``block_t // page_size`` pages (each through
+    its own scalar-prefetched index map) and sweep them in one kernel
+    invocation — fewer grid steps against the same scattered pool.  The
+    block table is padded with null pages when nmax doesn't divide.
+    ``None`` keeps the one-page-per-step schedule.
     """
     B, H, hd = q.shape
     ps, Kv = k_pages.shape[1], k_pages.shape[2]
     nmax = block_tables.shape[1]
     G = H // Kv
     scale = hd ** -0.5 if scale is None else scale
+    m_ = 1 if block_t is None else max(1, block_t // ps)
     qg = q.reshape(B, Kv, G, hd)
     bt = jnp.asarray(block_tables, jnp.int32)
+    if nmax % m_:
+        pad = m_ - nmax % m_
+        # pad with the reserved null page (id 0); t_start > pos masks it
+        bt = jnp.pad(bt, ((0, 0), (0, pad)), constant_values=0)
+        nmax += pad
+    n_blocks = nmax // m_
     pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
 
     kernel = functools.partial(_paged_dec_kernel, scale=scale,
-                               softcap=softcap, page_size=ps, n_pages=nmax)
+                               softcap=softcap, page_size=ps,
+                               pages_per_blk=m_, n_blocks=n_blocks)
+
+    def page_spec(i):
+        # the block-index table drives the page DMA: page i of block p
+        # of sequence b is physical page bt[b, p*m_+i]
+        return pl.BlockSpec(
+            (1, ps, 1, hd),
+            lambda b, kv, p, bt, sl, i=i: (bt[b, p * m_ + i], 0, kv, 0))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, Kv, nmax),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, kv, p, bt, sl: (b, kv, 0, 0)),
-            # the block-index table drives the page DMA: block p of
-            # sequence b is physical page bt[b, p]
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, kv, p, bt, sl: (bt[b, p], 0, kv, 0)),
-            pl.BlockSpec((1, ps, 1, hd),
-                         lambda b, kv, p, bt, sl: (bt[b, p], 0, kv, 0)),
-        ],
+        grid=(B, Kv, n_blocks),
+        in_specs=(
+            [pl.BlockSpec((1, 1, G, hd),
+                          lambda b, kv, p, bt, sl: (b, kv, 0, 0))]
+            + [page_spec(i) for i in range(m_)]      # k pages
+            + [page_spec(i) for i in range(m_)]),    # v pages
         out_specs=pl.BlockSpec((1, 1, G, hd),
                                lambda b, kv, p, bt, sl: (b, kv, 0, 0)),
         scratch_shapes=[
@@ -202,5 +231,5 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(bt, pos_arr, qg, k_pages, v_pages)
+    )(bt, pos_arr, qg, *([k_pages] * m_), *([v_pages] * m_))
     return out.reshape(B, H, hd)

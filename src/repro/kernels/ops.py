@@ -38,11 +38,12 @@ def decode_attention(q, k, v, pos, *, scale=None, softcap=None,
                                  block_t=block_t, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "softcap"))
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "block_t"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
-                           scale=None, softcap=None):
+                           scale=None, softcap=None, block_t=None):
     return _dec.paged_decode_attention(q, k_pages, v_pages, block_tables,
                                        pos, scale=scale, softcap=softcap,
+                                       block_t=block_t,
                                        interpret=_interpret())
 
 

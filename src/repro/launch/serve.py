@@ -111,9 +111,12 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
                       page_size=args.page_size, n_pages=n_pages,
                       max_len=max_len, n_nodes=n_nodes,
                       link_mode=args.link_mode,
-                      prefill_budget=args.prefill_budget)
+                      prefill_budget=args.prefill_budget,
+                      fused=args.fused, max_window=args.window)
     prompts = make_prompts(args.requests, args.prompt_len, cfg.vocab_size)
-    # warmup both jitted paths (prefill + one decode), then reset clocks
+    # warmup both jitted paths (prefill + every fused-window bucket),
+    # then reset clocks
+    eng.warmup_windows()
     eng.submit(np.asarray(prompts[0]), min(2, args.gen), rid="warmup")
     eng.run()
     eng.reset_metrics()
@@ -176,6 +179,13 @@ def main():
     ap.add_argument("--prefill-budget", type=float, default=2.0,
                     help="prefill seconds admitted per step, in units of "
                          "one decode step (cost-engine priced)")
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="paged engine: fused multi-token decode windows "
+                         "(--no-fused = legacy per-step host loop)")
+    ap.add_argument("--window", type=int, default=8,
+                    help="paged engine: max fused window (tokens per "
+                         "device dispatch)")
     args = ap.parse_args()
 
     if args.devices:
@@ -223,6 +233,12 @@ def main():
               f"{m['ttft_steps_p95']:.1f} steps; peak pages "
               f"{m['peak_pages']} ({m['page_occupancy'] * 100:.0f}% of pool);"
               f" {m['preemptions']} preemptions")
+        mode = "fused" if args.fused else "per-step"
+        print(f"[paged] {mode}: {m['windows']} device dispatches for "
+              f"{m['steps']} scheduler steps; host<->device syncs "
+              f"{m['h2d_syncs']} h2d + {m['d2h_syncs']} d2h "
+              f"({m['syncs_per_token']:.2f} per token); decode "
+              f"{m['decode_tok_per_s']:.1f} tok/s")
         report_fleet(args, cfg, eng, tokens)
         measured = m["step_s"]
     else:

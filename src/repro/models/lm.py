@@ -505,6 +505,34 @@ def decode_step_paged(params, cfg, tokens, pools, block_tables, pos):
     return head_logits(params, cfg, h), new_pools
 
 
+def decode_window_paged(params, cfg, tokens, pools, block_tables, pos,
+                        active, k: int):
+    """Fused K-step greedy decode window, entirely on device.
+
+    ``lax.scan`` chains :func:`decode_step_paged` K times: the greedy
+    argmax of step j feeds step j+1 without a host round-trip, KV pages
+    are appended in place, and per-slot positions advance on device.
+    The block tables must be fixed for the whole window — the scheduler
+    pre-reserves the window's pages (``safe_horizon``) to guarantee it.
+
+    tokens (B,1) int32 last emitted token per slot; pos (B,) int32 write
+    positions; active (B,) int32 1 for occupied slots (inactive slots
+    hold token/pos fixed so their null-page writes stay at slot 0).
+    Returns (emitted (B,K) int32, last tokens (B,1), pos (B,), pools).
+    """
+    def body(carry, _):
+        tok, p, pl = carry
+        logits, pl = decode_step_paged(params, cfg, tok, pl, block_tables, p)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (B,1)
+        nxt = jnp.where(active[:, None] > 0, nxt, tok)
+        p = p + active
+        return (nxt, p, pl), nxt[:, 0]
+
+    (tok, pos, pools), toks = jax.lax.scan(body, (tokens, pos, pools),
+                                           None, length=k)
+    return jnp.moveaxis(toks, 0, 1), tok, pos, pools
+
+
 def decode_step(params, cfg, tokens, caches, pos, *, impl=None):
     """One decode step. tokens (B,1) ids or (B,1,D) embeds; pos scalar.
 

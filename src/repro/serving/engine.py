@@ -3,19 +3,29 @@
 What is reproduced: the farmer-worker loop (§III, C3) running against a
 striped memory server (§X-B) — the device-side half of the serving
 subsystem.  Per-layer KV pools (``lm.init_paged_caches``) are the
-striped store, the block-table matrix is the address map, and one jitted
-``make_paged_serve_step`` call decodes every occupied slot of the batch
-while :mod:`repro.serving.scheduler` refills freed slots with priced
-prefills.
+striped store, the block-table matrix is the address map, and the jitted
+steps (``make_paged_serve_step`` / ``make_paged_serve_scan``) decode
+every occupied slot of the batch while :mod:`repro.serving.scheduler`
+refills freed slots with priced prefills.
 
-What is extrapolated: the paper's farmer distributes closed-form work
-items; here slot state (tokens, positions, block tables) lives in small
-host numpy arrays pushed to the device each step, which keeps the jitted
-step shape-stable (fixed batch, fixed pool) — the property that lets a
-tiny CPU host replay the same schedule a pod would run.
+Device-resident decode (the paper's C/C lesson applied to the
+host↔device "interconnect"): slot state — tokens, positions, block
+tables — lives in device arrays; the host keeps a numpy *mirror* that is
+pushed only when scheduler bookkeeping dirties it (admission, growth,
+preemption, completion), and results are pulled once per fused window,
+not once per token.  ``h2d_syncs`` / ``d2h_syncs`` count those events:
+per-step mode is O(1 per token), fused mode O(1 per window) — the same
+per-message-overhead argument Swallow §V makes for its interconnect.
 
-Greedy decoding throughout: paged vs dense token equality is an
-acceptance gate (tests/test_serving.py), and it is also what makes
+Fused windows decode K tokens in one ``lax.scan`` dispatch; K is the
+scheduler's ``safe_horizon`` (no completion, page-boundary crossing
+without a pre-reserved page, or pending priced admission inside the
+window), bucketed to powers of two so at most log2(max_window)+1 scan
+shapes ever compile.  ``fused=False`` keeps the original per-step
+semantics as the K=1 fallback.
+
+Greedy decoding throughout: fused vs per-step vs dense token equality is
+an acceptance gate (tests/test_serving.py), and it is also what makes
 recompute-preemption exact.
 """
 from __future__ import annotations
@@ -34,13 +44,16 @@ class PagedEngine:
 
     ``max_len`` bounds prompt+gen per sequence; the block table has
     ``ceil(max_len / page_size)`` entries per slot.  ``n_pages`` includes
-    the reserved null page.
+    the reserved null page.  ``fused=True`` decodes in multi-token
+    windows of up to ``max_window`` steps per dispatch; ``fused=False``
+    is the per-step fallback with identical tokens.
     """
 
     def __init__(self, cfg, params, *, max_batch: int = 4,
                  page_size: int = 16, n_pages: int = 64,
                  max_len: int = 256, n_nodes: int = 1,
-                 link_mode: str = "circuit", prefill_budget: float = 2.0):
+                 link_mode: str = "circuit", prefill_budget: float = 2.0,
+                 fused: bool = True, max_window: int = 8):
         import jax
         import jax.numpy as jnp
         from repro.models import lm
@@ -54,6 +67,8 @@ class PagedEngine:
         self.max_batch = max_batch
         self.max_len = max_len
         self.nmax = -(-max_len // page_size)
+        self.fused = fused
+        self.max_window = max(1, int(max_window))
         self._jnp = jnp
 
         self.alloc = PageAllocator(n_pages=n_pages, page_size=page_size,
@@ -76,16 +91,33 @@ class PagedEngine:
                                 donate_argnums=(2,))
         self._serve = jax.jit(steps_mod.make_paged_serve_step(cfg),
                               donate_argnums=(2,))
-        # host-side slot state, pushed to device each step
+        self._scan = jax.jit(steps_mod.make_paged_serve_scan(cfg),
+                             static_argnames=("k",), donate_argnums=(2,))
+        # host MIRROR of slot state; the device copies are authoritative
+        # between window boundaries
         self.block_tables = np.full((max_batch, self.nmax), NULL_PAGE,
                                     np.int32)
         self.tokens = np.zeros((max_batch, 1), np.int32)
         self.pos = np.zeros((max_batch,), np.int32)
+        self.active = np.zeros((max_batch,), np.int32)
+        # device-resident slot state (synced from the mirror on demand)
+        self.d_tokens = jnp.asarray(self.tokens)
+        self.d_pos = jnp.asarray(self.pos)
+        self.d_block = jnp.asarray(self.block_tables)
+        self.d_active = jnp.asarray(self.active)
+        self._dirty = False
+        # dirty-tracking signature per slot: (rid, preemptions, n_pages)
+        self._slot_sig: List[Optional[tuple]] = [None] * max_batch
         self._n_submitted = 0
         self.steps_run = 0
+        self.windows_run = 0
         self.decode_steps = 0
         self.decode_tokens = 0
+        self.tokens_emitted = 0
         self.decode_time_s = 0.0
+        self.h2d_syncs = 0
+        self.d2h_syncs = 0
+        self.block_row_writes = 0
         self.peak_pages = 0
         self.t0 = time.time()
 
@@ -94,8 +126,10 @@ class PagedEngine:
         keeping the compiled steps, pools and allocator state."""
         self.sched.finished.clear()
         self._n_submitted = 0
-        self.steps_run = self.decode_steps = self.decode_tokens = 0
+        self.steps_run = self.windows_run = 0
+        self.decode_steps = self.decode_tokens = self.tokens_emitted = 0
         self.decode_time_s = 0.0
+        self.h2d_syncs = self.d2h_syncs = self.block_row_writes = 0
         self.peak_pages = 0
         self.t0 = time.time()
 
@@ -126,64 +160,181 @@ class PagedEngine:
         self.sched.submit(req)
         return req
 
-    # -- one engine step ---------------------------------------------------
+    # -- host mirror maintenance -------------------------------------------
     def _block_row(self, rid: str) -> np.ndarray:
         row = np.full((self.nmax,), NULL_PAGE, np.int32)
         pages = self.alloc.held[rid]
         row[:len(pages)] = pages
         return row
 
+    def _sig(self, req: Request) -> tuple:
+        return (req.rid, req.preemptions, len(self.alloc.held[req.rid]))
+
     def _clear_slot(self, slot: int):
         self.block_tables[slot] = NULL_PAGE
         self.tokens[slot] = 0
         self.pos[slot] = 0
+        self.active[slot] = 0
+        self._slot_sig[slot] = None
+        self._dirty = True
 
-    def step(self) -> List[Request]:
-        """Plan, prefill admissions, decode every occupied slot.  Returns
-        requests finished this step."""
+    def _occupy_slot(self, req: Request, row: np.ndarray, token: int):
+        self.block_tables[req.slot] = row
+        self.tokens[req.slot] = token
+        self.pos[req.slot] = req.pos
+        self.active[req.slot] = 1
+        self._slot_sig[req.slot] = self._sig(req)
+        self.block_row_writes += 1
+        self._dirty = True
+
+    def _refresh_slots(self):
+        """Re-sync the mirror with scheduler state, rewriting only block
+        rows whose page set changed (admission/growth/preemption) —
+        dirty-tracked, not rebuilt per slot per step."""
+        for slot, req in self.sched.running.items():
+            sig = self._sig(req)
+            if self._slot_sig[slot] != sig:
+                self.block_tables[slot] = self._block_row(req.rid)
+                self._slot_sig[slot] = sig
+                self.block_row_writes += 1
+                self._dirty = True
+            last = req.tokens[-1] if req.tokens else 0
+            if self.tokens[slot, 0] != last:
+                self.tokens[slot, 0] = last
+                self._dirty = True
+            if self.pos[slot] != req.pos:
+                self.pos[slot] = req.pos
+                self._dirty = True
+            if not self.active[slot]:
+                self.active[slot] = 1
+                self._dirty = True
+
+    def _push(self, force: bool = False):
+        """One host->device sync event covering the whole slot-state
+        bundle (tokens, positions, block tables, active mask)."""
+        if not (self._dirty or force):
+            return
+        jnp = self._jnp
+        self.d_tokens = jnp.asarray(self.tokens)
+        self.d_pos = jnp.asarray(self.pos)
+        self.d_block = jnp.asarray(self.block_tables)
+        self.d_active = jnp.asarray(self.active)
+        self.h2d_syncs += 1
+        self._dirty = False
+
+    # -- fused-window warmup ----------------------------------------------
+    def window_sizes(self) -> List[int]:
+        """The power-of-two window buckets this engine will dispatch."""
+        if not self.fused:
+            return [1]
+        sizes, k = [], 1
+        while k <= self.max_window:
+            sizes.append(k)
+            k *= 2
+        return sizes
+
+    def warmup_windows(self):
+        """Compile every scan bucket against inactive slots (all-null
+        block rows write only the null page, whose garbage is masked by
+        design) so trace timing is steady-state."""
+        if not self.fused:
+            return
+        jnp = self._jnp
+        zeros_tok = jnp.zeros((self.max_batch, 1), jnp.int32)
+        zeros_pos = jnp.zeros((self.max_batch,), jnp.int32)
+        null_rows = jnp.full((self.max_batch, self.nmax), NULL_PAGE,
+                             jnp.int32)
+        inactive = jnp.zeros((self.max_batch,), jnp.int32)
+        for k in self.window_sizes():
+            toks, _, _, self.pools = self._scan(
+                self.params, zeros_tok, self.pools, null_rows, zeros_pos,
+                inactive, k=k)
+            np.asarray(toks)
+        self._dirty = True            # device state was clobbered
+
+    # -- one engine step (a window of >= 1 scheduler steps) ----------------
+    @staticmethod
+    def _pow2_floor(k: int) -> int:
+        # bucket to the largest power of two <= k: at most
+        # log2(max_window)+1 scan shapes ever compile
+        return 1 << (max(k, 1).bit_length() - 1)
+
+    def _pick_window(self, max_window: Optional[int]) -> int:
+        cap = self.max_window if max_window is None \
+            else max(1, min(self.max_window, max_window))
+        # quantizing inside safe_horizon keeps page reservation exact:
+        # only the dispatched window's pages are grabbed ahead of need
+        return self.sched.safe_horizon(cap, quantize=self._pow2_floor)
+
+    def step(self, max_window: Optional[int] = None) -> List[Request]:
+        """Plan, prefill admissions, decode one fused window (or one
+        step when ``fused=False``).  ``max_window`` additionally caps
+        this window (e.g. to the next trace arrival).  Returns requests
+        finished this window."""
         jnp = self._jnp
         plan = self.sched.plan_step()
         finished: List[Request] = []
         for slot in range(self.max_batch):   # preempted/idle slots -> null
-            if slot not in self.sched.running:
+            if slot not in self.sched.running \
+                    and self._slot_sig[slot] is not None:
                 self._clear_slot(slot)
         for req in plan.admitted:
             row = self._block_row(req.rid)
             logits, self.pools = self._prefill(
                 self.params, jnp.asarray(req.prompt[None]), self.pools,
                 jnp.asarray(row))
+            self.h2d_syncs += 1        # prompt + block row push
             tok = int(jnp.argmax(logits, -1)[0, 0])
+            self.d2h_syncs += 1        # blocking first-token pull
             self.sched.note_first_token(req, tok)
+            self.tokens_emitted += 1
             if req.state == "running":     # gen > 1: occupy the slot
-                self.block_tables[req.slot] = row
-                self.tokens[req.slot] = tok
-                self.pos[req.slot] = req.pos
+                self._occupy_slot(req, row, tok)
             else:                          # gen == 1: finished at prefill
                 finished.append(req)
         if self.sched.running:
-            # refresh block tables of grown requests
-            for slot, req in self.sched.running.items():
-                self.block_tables[slot] = self._block_row(req.rid)
-                self.pos[slot] = req.pos
-                if req.tokens:
-                    self.tokens[slot] = req.tokens[-1]
+            k = self._pick_window(max_window) if self.fused else 1
+            self._refresh_slots()
             active = dict(self.sched.running)
             t_dec = time.time()
-            tok, _, self.pools = self._serve(
-                self.params, jnp.asarray(self.tokens), self.pools,
-                jnp.asarray(self.block_tables), jnp.asarray(self.pos))
-            tok_np = np.asarray(tok)          # blocks: decode-only timing
+            if self.fused:
+                self._push()
+                toks, self.d_tokens, self.d_pos, self.pools = self._scan(
+                    self.params, self.d_tokens, self.pools, self.d_block,
+                    self.d_pos, self.d_active, k=k)
+            else:
+                # legacy per-step path: push the whole bundle and pull
+                # one token per scheduler step — O(1 syncs per token)
+                self._push(force=True)
+                toks, _, self.pools = self._serve(
+                    self.params, self.d_tokens, self.pools, self.d_block,
+                    self.d_pos)
+            tok_np = np.asarray(toks)      # blocks: decode-only timing
+            self.d2h_syncs += 1
             self.decode_time_s += time.time() - t_dec
-            self.decode_steps += 1
-            emitted: Dict[int, int] = {s: int(tok_np[s, 0]) for s in active}
-            self.decode_tokens += len(emitted)
-            finished += self.sched.complete_step(emitted)
+            tok_np = tok_np.reshape(self.max_batch, k)
+            self.decode_steps += k
+            self.windows_run += 1
+            for j in range(k):
+                emitted: Dict[int, int] = {s: int(tok_np[s, j])
+                                           for s in active}
+                self.decode_tokens += len(emitted)
+                self.tokens_emitted += len(emitted)
+                finished += self.sched.complete_step(emitted)
+            # fold the window's results back into the mirror; slots that
+            # stayed running now match the device carry exactly, so a
+            # quiet boundary pushes nothing next window
+            for slot, req in self.sched.running.items():
+                self.tokens[slot, 0] = int(tok_np[slot, k - 1])
+                self.pos[slot] = req.pos
+            self.steps_run += k
         else:
             self.sched.step_idx += 1
+            self.steps_run += 1
         for slot in range(self.max_batch):   # finished slots -> null
-            if slot not in self.sched.running:
+            if slot not in self.sched.running \
+                    and self._slot_sig[slot] is not None:
                 self._clear_slot(slot)
-        self.steps_run += 1
         self.peak_pages = max(self.peak_pages, self.alloc.pages_in_use)
         return finished
 
@@ -205,12 +356,25 @@ class PagedEngine:
         dt = max(time.time() - self.t0, 1e-9)
         ttft = [r.first_token_step - r.arrived_step for r in fin
                 if r.first_token_step is not None]
+        emitted = self.tokens_emitted
         return {
             "finished": len(fin),
-            "tokens_out": sum(len(r.tokens) for r in fin),
+            # emitted counts every token produced (prefill first tokens +
+            # decode), including in-flight and preempt-discarded work;
+            # finished-only is reported alongside, not silently dropped
+            "tokens_out": emitted,
+            "tokens_finished": sum(len(r.tokens) for r in fin),
             "steps": self.steps_run,
-            "tok_per_s": sum(len(r.tokens) for r in fin) / dt,
+            "windows": self.windows_run,
+            "tok_per_s": emitted / dt,
             "decode_step_s": self.decode_time_s / max(self.decode_steps, 1),
+            "decode_tok_per_s": self.decode_tokens
+            / max(self.decode_time_s, 1e-9),
+            "h2d_syncs": self.h2d_syncs,
+            "d2h_syncs": self.d2h_syncs,
+            "syncs_per_token": (self.h2d_syncs + self.d2h_syncs)
+            / max(emitted, 1),
+            "block_row_writes": self.block_row_writes,
             "ttft_steps_mean": float(np.mean(ttft)) if ttft else 0.0,
             "ttft_steps_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
             "pages_in_use": self.alloc.pages_in_use,

@@ -112,6 +112,18 @@ class PageAllocator:
             pages.append(p)
         return True
 
+    def reserve(self, rid: str, n_tokens: int) -> int:
+        """Horizon pre-reservation: grow ``rid`` (best-effort under page
+        pressure) until its pages cover every write position below
+        ``n_tokens``, so the block-table row is fixed for a whole fused
+        decode window.  Returns the token capacity actually reserved —
+        the caller shrinks the window to ``capacity - pos`` when the
+        pool runs dry instead of preempting mid-window."""
+        need = self.pages_for(n_tokens)
+        while len(self.held[rid]) < need and self.grow(rid):
+            pass
+        return len(self.held[rid]) * self.page_size
+
     def free(self, rid: str) -> int:
         """Release every page ``rid`` holds; returns the count."""
         pages = self.held.pop(rid, [])

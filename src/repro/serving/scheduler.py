@@ -165,6 +165,59 @@ class ContinuousBatchScheduler:
             plan.admitted.append(req)
             spent += cost
 
+    # -- fused decode windows ---------------------------------------------
+    def safe_horizon(self, max_window: int, quantize=None) -> int:
+        """Largest K (``<= max_window``) such that no scheduling event can
+        occur strictly inside a K-step decode window:
+
+        * **completion** — K never exceeds any running request's remaining
+          tokens, so the earliest finish lands exactly on the window's
+          last step;
+        * **priced admission** — the interference budget resets every
+          step, so if the head of the waiting queue has a free slot and
+          free pages, it could be admitted next step: horizon is 1;
+        * **page-boundary crossing** — every running request gets its
+          window's pages pre-reserved (:meth:`PageAllocator.reserve`) in
+          arrival order, fixing the block tables; if the pool runs dry
+          the horizon shrinks to the reserved capacity instead of
+          preempting mid-window.
+
+        ``quantize`` (e.g. the engine's power-of-two bucketing) is
+        applied to the event horizon *before* pages are reserved — so
+        reservation never grabs pages a smaller dispatched window won't
+        write — and again to the capacity-shrunk result.
+
+        Call after :meth:`plan_step` (growth already guaranteed the
+        current write page, so the result is always >= 1 while anything
+        runs).  Returns 0 when nothing is running.
+        """
+        quantize = quantize or (lambda n: n)
+        if not self.running:
+            return 0
+        k = max(1, max_window)
+        for req in self.running.values():
+            k = min(k, req.gen - len(req.tokens))
+        k = max(quantize(max(k, 1)), 1)
+        if k > 1 and self.waiting and len(self.running) < self.max_batch:
+            head = self.waiting[0]
+            budget = self.prefill_budget * self.decode_cost_s
+            cost = (self.prefill_cost_s(head.prompt_len)
+                    if self.prefill_cost_s else 0.0)
+            # mirror _admit with spent=0: a head whose prefill alone
+            # busts the budget cannot land while anything runs, so it
+            # must not collapse every window to K=1
+            admissible = not (budget > 0.0 and cost > budget)
+            if admissible and self.alloc.pages_for(head.prompt_len + 1) \
+                    <= self.alloc.free_pages:
+                return 1              # admission could land next step
+        if k == 1:
+            return 1
+        for req in sorted(self.running.values(),
+                          key=lambda r: (r.arrived_step, r.seq)):
+            capacity = self.alloc.reserve(req.rid, req.pos + k)
+            k = min(k, capacity - req.pos)
+        return max(quantize(max(k, 1)), 1)
+
     # -- completion callbacks (engine -> scheduler) ------------------------
     def note_first_token(self, req: Request, token: int):
         req.tokens.append(token)

@@ -94,6 +94,22 @@ def make_paged_serve_step(cfg: ModelConfig):
     return serve_paged
 
 
+def make_paged_serve_scan(cfg: ModelConfig):
+    """Fused K-step paged decode window (device-resident serving).
+
+    (params, tokens (B,1), pools, block_tables (B,nmax), pos (B,),
+     active (B,), k) -> (emitted (B,K), last tokens (B,1), pos (B,),
+    updated pools).  ``k`` is the scan length — jit with
+    ``static_argnames=("k",)`` and the pools donated; one dispatch and
+    one host sync then cover K decode steps instead of one.
+    """
+    def serve_scan(params, tokens, pools, block_tables, pos, active, *,
+                   k: int):
+        return lm.decode_window_paged(params, cfg, tokens, pools,
+                                      block_tables, pos, active, k)
+    return serve_scan
+
+
 # ---------------------------------------------------------------------------
 # abstract state + sharding specs
 # ---------------------------------------------------------------------------

@@ -45,6 +45,19 @@ def test_allocator_alloc_grow_free_roundtrip():
     assert len(a.held["r1"]) == 5
 
 
+def test_allocator_reserve_is_best_effort_capacity():
+    a = PageAllocator(n_pages=6, page_size=4, n_nodes=1)
+    a.alloc("r", 1)
+    # covers write positions < 10 -> 3 pages -> 12 token capacity
+    assert a.reserve("r", 10) == 12
+    assert len(a.held["r"]) == 3
+    # pool only has 5 allocatable pages: best-effort, not all-or-nothing
+    assert a.reserve("r", 40) == 20
+    assert len(a.held["r"]) == 5
+    a.free("r")
+    assert a.free_pages == 5
+
+
 # --- paged vs dense decode attention agree numerically ------------------------
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("ps,nmax,Kv,G", [(8, 4, 2, 4), (16, 2, 1, 8)])
@@ -87,6 +100,26 @@ def test_paged_decode_kernel_matches_ref():
     o_ref = ref.paged_decode_attention(q, k_pages, v_pages, bt, pos)
     o = ops.paged_decode_attention(q, k_pages, v_pages, bt, pos)
     assert jnp.abs(o - o_ref).max() < 2e-5
+
+
+def test_paged_decode_attention_block_t_sweep_matches_ref():
+    """The block_t hook sweeps several pages per grid step (padding the
+    block table with null pages when nmax doesn't divide) — same output
+    as the one-page-per-step schedule and the oracle."""
+    from repro.kernels import ops, ref
+    B, H, hd, Kv, ps, nmax = 2, 8, 64, 2, 8, 3
+    P = 1 + B * nmax
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    k_pages = jax.random.normal(ks[1], (P, ps, Kv, hd))
+    v_pages = jax.random.normal(ks[2], (P, ps, Kv, hd))
+    bt = (1 + jnp.arange(B * nmax, dtype=jnp.int32)).reshape(B, nmax)
+    pos = jnp.array([17, 9], jnp.int32)
+    o_ref = ref.paged_decode_attention(q, k_pages, v_pages, bt, pos)
+    for block_t in (2 * ps, 4 * ps):     # nmax=3: both need null padding
+        o = ops.paged_decode_attention(q, k_pages, v_pages, bt, pos,
+                                       block_t=block_t)
+        assert jnp.abs(o - o_ref).max() < 2e-5, block_t
 
 
 def test_paged_decode_ignores_null_page_garbage():
@@ -171,6 +204,185 @@ def test_paged_engine_interleaves_arrivals():
     assert {r.rid for r in finished} == {"r0", "r1", "r2"}
     for r in finished:
         assert r.tokens == dense[r.rid]
+
+
+# --- fused multi-token windows ------------------------------------------------
+def _request_tokens(finished):
+    return {r.rid: list(r.tokens) for r in finished}
+
+
+def test_fused_windows_match_perstep_and_dense():
+    """Fused K-step windows are token-for-token identical to per-step
+    decode and to the dense engine — with varied gen lengths so
+    completions land mid-trace and windows get cut to the horizon, and
+    prompt_len == 2*page_size so windows start exactly on a page
+    boundary and cross another one mid-window (pre-reserved)."""
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    cfg = get_tiny_config("tiny-100m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    S, page = 8, 4
+    gens = [3, 5, 8, 2, 6, 4]
+    max_len = S + max(gens)
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
+                                  cfg.vocab_size) for i in range(len(gens))]
+    dense = {}
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        dense[f"r{i}"] = _dense_reference(cfg, params, [p], g, max_len)["r0"]
+
+    def run(fused):
+        eng = PagedEngine(cfg, params, max_batch=3, page_size=page,
+                          n_pages=40, max_len=max_len, fused=fused,
+                          max_window=8)
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            eng.submit(np.asarray(p), g, rid=f"r{i}")
+        return eng, _request_tokens(eng.run())
+
+    eng_f, toks_f = run(True)
+    eng_p, toks_p = run(False)
+    assert toks_f == toks_p == dense
+    # fused actually batched steps into windows
+    assert eng_f.windows_run < eng_f.steps_run
+    assert eng_p.windows_run == eng_p.decode_steps
+
+
+def test_fused_windows_match_dense_under_forced_preemption():
+    """Same tight-pool trace as the per-step preemption gate, but with
+    fused windows: horizon shrinks instead of preempting mid-window,
+    and the recompute stays exact."""
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    cfg = get_tiny_config("tiny-100m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    S, gen, n_req = 12, 6, 6
+    max_len = S + gen
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
+                                  cfg.vocab_size) for i in range(n_req)]
+    dense = _dense_reference(cfg, params, prompts, gen, max_len)
+    eng = PagedEngine(cfg, params, max_batch=3, page_size=4, n_pages=14,
+                      max_len=max_len, prefill_budget=0.0, fused=True,
+                      max_window=8)
+    for p in prompts:
+        eng.submit(np.asarray(p), gen)
+    finished = eng.run()
+    assert len(finished) == n_req
+    assert eng.metrics()["preemptions"] >= 1
+    for r in finished:
+        assert r.tokens == dense[r.rid], (r.rid, r.preemptions)
+    assert eng.alloc.pages_in_use == 0
+
+
+def test_fused_transfer_counters_drop_to_per_window():
+    """Host<->device syncs: O(1 per token) per-step vs O(1 per window)
+    fused — the transfer counter is the acceptance observable."""
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    cfg = get_tiny_config("tiny-100m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    S, gen = 8, 9          # first token at prefill + one full 8-window
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
+                                  cfg.vocab_size) for i in range(2)]
+
+    def run(fused):
+        eng = PagedEngine(cfg, params, max_batch=2, page_size=4,
+                          n_pages=24, max_len=S + gen, fused=fused,
+                          max_window=8, prefill_budget=0.0)
+        for i, p in enumerate(prompts):
+            eng.submit(np.asarray(p), gen, rid=f"r{i}")
+        return eng, _request_tokens(eng.run())
+
+    eng_f, toks_f = run(True)
+    eng_p, toks_p = run(False)
+    assert toks_f == toks_p
+    # per-step: one push + one pull per decode step (8 of them), plus
+    # one push + one blocking pull per admitted prefill (2 requests)
+    assert eng_p.decode_steps == 8
+    assert eng_p.d2h_syncs == 8 + 2
+    assert eng_p.h2d_syncs == 8 + 2
+    # fused: both requests decode in ONE 8-step window dispatch
+    assert eng_f.decode_steps == 8
+    assert eng_f.windows_run == 1
+    assert eng_f.d2h_syncs == 1 + 2
+    assert eng_f.h2d_syncs <= 2 + 2
+    m = eng_f.metrics()
+    assert m["syncs_per_token"] < eng_p.metrics()["syncs_per_token"]
+
+
+def test_metrics_count_emitted_tokens_in_flight():
+    """tokens_out counts emitted work (prefill first token + decode),
+    not just finished requests; finished-only is reported alongside."""
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    cfg = get_tiny_config("tiny-100m")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (8,), 2,
+                                cfg.vocab_size)
+    eng = PagedEngine(cfg, params, max_batch=2, page_size=4, n_pages=16,
+                      max_len=16, fused=True, max_window=8)
+    eng.submit(np.asarray(prompt), 6)
+    eng.step()         # prefill (1 token) + a 4-step window (5 -> pow2 4)
+    m = eng.metrics()
+    assert m["finished"] == 0 and m["tokens_finished"] == 0
+    assert m["tokens_out"] == 5          # in-flight work is visible
+    assert m["tok_per_s"] > 0.0
+    eng.run()
+    m = eng.metrics()
+    assert m["tokens_out"] == m["tokens_finished"] == 6
+
+
+# --- scheduler: safe horizon (host-only) ---------------------------------------
+def test_safe_horizon_completion_and_admission_events():
+    a = PageAllocator(n_pages=20, page_size=4, n_nodes=1)
+    s = ContinuousBatchScheduler(a, max_batch=2)
+    assert s.safe_horizon(8) == 0          # nothing running
+    s.submit(Request(rid="a", prompt_len=4, gen=10))
+    plan = s.plan_step()
+    s.note_first_token(plan.admitted[0], 1)
+    # remaining 9, no waiting: capped by max_window, pages pre-reserved
+    assert s.safe_horizon(8) == 8
+    assert len(a.held["a"]) >= a.pages_for(4 + 8)
+    # remaining tokens bound the horizon (completion only at window end)
+    s.running[0].tokens = [1] * 7          # remaining = 3
+    assert s.safe_horizon(8) == 3
+    # a waiting request with a free slot + free pages -> horizon 1
+    s.running[0].tokens = [1]
+    s.submit(Request(rid="b", prompt_len=4, gen=2))
+    assert s.safe_horizon(8) == 1
+
+
+def test_safe_horizon_ignores_budget_blocked_head():
+    """A waiting head whose prefill alone busts the interference budget
+    cannot be admitted while anything runs — it must not collapse every
+    fused window to K=1."""
+    a = PageAllocator(n_pages=20, page_size=4, n_nodes=1)
+    s = ContinuousBatchScheduler(a, max_batch=2,
+                                 prefill_cost_s=lambda n: 10.0 if n > 4
+                                 else 0.1,
+                                 decode_cost_s=1.0, prefill_budget=2.0)
+    s.submit(Request(rid="a", prompt_len=4, gen=10))
+    plan = s.plan_step()
+    s.note_first_token(plan.admitted[0], 1)
+    s.submit(Request(rid="big", prompt_len=8, gen=2))
+    assert s.safe_horizon(8) == 8      # head is budget-blocked: no event
+    # an admissible head (cost within budget) still caps the window
+    s.submit(Request(rid="small", prompt_len=4, gen=2))
+    s.waiting.sort(key=lambda r: r.prompt_len)   # make it the head
+    assert s.safe_horizon(8) == 1
+
+
+def test_safe_horizon_shrinks_under_page_pressure():
+    a = PageAllocator(n_pages=7, page_size=4, n_nodes=1)
+    s = ContinuousBatchScheduler(a, max_batch=2)
+    for rid in ("a", "b"):
+        s.submit(Request(rid=rid, prompt_len=8, gen=8))
+    plan = s.plan_step()
+    assert len(plan.admitted) == 2         # 3 pages each, pool is dry
+    for req in plan.admitted:
+        s.note_first_token(req, 1)
+    # remaining 7, but reserve() cannot grow past the held 12-token
+    # capacity: horizon shrinks to 12 - 8 = 4 instead of preempting
+    assert s.safe_horizon(8) == 4
+    assert a.free_pages == 0
 
 
 # --- scheduler: conservation under preemption (host-only) ---------------------
