@@ -2,11 +2,13 @@
 the roofline table.  Prints ``name,us_per_call,derived`` CSV.
 
 ``--json`` additionally emits the machine-readable perf trajectory:
-``BENCH_micro.json`` (every micro row) and ``BENCH_serve.json`` (the
-fused-vs-per-step serving comparison with token-identity check) into
-``--json-dir``.  ``--only PATTERN`` filters sections by substring —
-the CI perf-smoke job runs ``--only micro --json`` and validates the
-files with ``scripts/check_bench.py``.
+``BENCH_micro.json`` (every micro row), ``BENCH_serve.json`` (the
+fused-vs-per-step serving comparison with token-identity check) and
+``BENCH_prefix.json`` (the prefix-cache on-vs-off shared-prefix trace:
+hit rate, prefill-token reduction, token identity) into ``--json-dir``.
+``--only PATTERN`` filters sections by substring — the CI perf-smoke
+job runs ``--only micro --json`` and validates the files with
+``scripts/check_bench.py``.
 """
 from __future__ import annotations
 
@@ -89,6 +91,18 @@ def main() -> None:
             print(f"# wrote {serve_path} (tokens_match="
                   f"{serve['tokens_match']}, speedup_decode="
                   f"{serve['speedup_decode']:.2f}x)")
+        except Exception:
+            traceback.print_exc()
+            failures += 1
+        try:
+            prefix = st.bench_prefix_comparison(quick=True)
+            prefix_path = os.path.join(args.json_dir, "BENCH_prefix.json")
+            with open(prefix_path, "w") as f:
+                json.dump(prefix, f, indent=1)
+            print(f"# wrote {prefix_path} (tokens_match="
+                  f"{prefix['tokens_match']}, hit_rate="
+                  f"{prefix['on']['hit_rate']:.2f}, prefill_token_reduction="
+                  f"{prefix['prefill_token_reduction']:.2f}x)")
         except Exception:
             traceback.print_exc()
             failures += 1

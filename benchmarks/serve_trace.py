@@ -11,7 +11,16 @@ step is the farmer's clock), with a burst tenant that dumps its whole
 load at once — the mixed pattern that makes continuous batching and
 page-pressure preemption visible.
 
+``--trace shared-prefix`` switches to the multi-tenant shared-prefix
+trace (N tenants x M requests sharing per-tenant system prompts) and
+``--prefix-cache on`` serves it through the copy-on-write prefix cache
+(docs/PREFIX_CACHE.md); ``bench_prefix_comparison`` replays it twice —
+cache on vs off — into BENCH_prefix.json (token identity, hit rate,
+prefill-token reduction).
+
 Run:  PYTHONPATH=src python benchmarks/serve_trace.py [--quick]
+      PYTHONPATH=src python benchmarks/serve_trace.py --quick \
+          --trace shared-prefix --prefix-cache on
 """
 from __future__ import annotations
 
@@ -33,6 +42,8 @@ class Tenant:
     prompt_len: int
     gen: int
     at_step: int = 0     # burst tenants: every request arrives here
+    shared_prefix: int = 0   # leading tokens all of the tenant's requests
+                             # share (its "system prompt"); 0 = fully unique
 
 
 def default_tenants(quick: bool = False) -> List[Tenant]:
@@ -44,6 +55,38 @@ def default_tenants(quick: bool = False) -> List[Tenant]:
         Tenant("batch", 8, 0.15, 32, 16),        # long-prompt background
         Tenant("burst", 8, 0.0, 12, 6, at_step=10),  # arrives all at once
     ]
+
+
+def shared_prefix_tenants(quick: bool = False) -> List[Tenant]:
+    """The multi-tenant shared-prefix trace (BENCH_prefix.json): N
+    tenants x M requests, each tenant's requests sharing a per-tenant
+    "system prompt".  The prefix length is deliberately NOT page aligned
+    (22 tokens over 8-token pages) so every hit diverges inside a page
+    and exercises the copy-on-write path, not just whole-page sharing."""
+    if quick:
+        return [Tenant("tenantA", 4, 0.5, 30, 6, shared_prefix=22),
+                Tenant("tenantB", 4, 0.5, 30, 6, shared_prefix=22),
+                Tenant("tenantC", 4, 0.5, 30, 6, shared_prefix=22)]
+    return [Tenant(f"tenant{c}", 8, 0.4, 46, 10, shared_prefix=38)
+            for c in "ABCD"]
+
+
+def prompt_for(cfg, t: Tenant, rid: int):
+    """Request ``rid``'s prompt: the tenant's system prompt (stable
+    per-tenant seed) + a unique per-request tail."""
+    import jax
+    import zlib
+    tail_len = t.prompt_len - t.shared_prefix
+    parts = []
+    if t.shared_prefix > 0:
+        seed = zlib.crc32(t.name.encode()) % (2 ** 31)
+        parts.append(jax.random.randint(jax.random.PRNGKey(seed),
+                                        (t.shared_prefix,), 2,
+                                        cfg.vocab_size))
+    if tail_len > 0:
+        parts.append(jax.random.randint(jax.random.PRNGKey(rid),
+                                        (tail_len,), 2, cfg.vocab_size))
+    return np.concatenate([np.asarray(p, np.int32) for p in parts])
 
 
 def arrivals_for(t: Tenant, rng: np.random.Generator):
@@ -59,7 +102,8 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
            max_batch: int = 4, page_size: int = 8, n_pages: int = 0,
            arch: str = "tiny-100m", link_mode: str = "circuit",
            prefill_budget: float = 2.0, fused: bool = True,
-           max_window: int = 8, warmup: bool = False, params=None):
+           max_window: int = 8, warmup: bool = False, params=None,
+           prefix_cache: bool = False):
     """Drive the engine window by window, injecting arrivals between
     dispatches.  With ``fused`` the engine decodes multi-token windows,
     capped to the next pending arrival so the trace's admission clock
@@ -85,11 +129,15 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
     cfg = get_tiny_config(arch)
     if params is None:
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    # materialize every arrival's prompt up front: trace construction is
+    # not serving work, and jax.random compiles per prompt shape
+    pending = [(step, t, i, prompt_for(cfg, t, i))
+               for i, (step, t) in enumerate(pending)]
     eng = PagedEngine(cfg, params, max_batch=max_batch,
                       page_size=page_size, n_pages=n_pages,
                       max_len=max_len, link_mode=link_mode,
                       prefill_budget=prefill_budget, fused=fused,
-                      max_window=max_window)
+                      max_window=max_window, prefix_cache=prefix_cache)
     if warmup:
         # compile every window bucket + a prefill per DISTINCT prompt
         # shape in the trace (prefill retraces per length) outside the
@@ -101,19 +149,22 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
             eng.submit(np.asarray(warm), min(2, max_len - plen),
                        rid=f"warmup{i}")
         eng.run()
+        # compile the COW copy + suffix-prefill buckets the trace will
+        # hit: one miss/hit pair per (prompt_len, shared_prefix)
+        for plen, sp in sorted({(t.prompt_len, t.shared_prefix)
+                                for t in tenants}):
+            eng.warmup_prefix(plen, sp)
         eng.reset_metrics()
+        if eng.cache is not None:
+            eng.cache.clear()      # measured run starts with a cold tree
         eng.sched.step_idx = 0
 
     occupancy = []
-    rid = 0
     while pending or eng.sched.waiting or eng.sched.running:
         while pending and pending[0][0] <= eng.sched.step_idx:
-            _, t = pending.pop(0)
-            prompt = jax.random.randint(jax.random.PRNGKey(rid),
-                                        (t.prompt_len,), 2, cfg.vocab_size)
-            eng.submit(np.asarray(prompt), t.gen, tenant=t.name,
+            _, t, rid, prompt = pending.pop(0)
+            eng.submit(prompt, t.gen, tenant=t.name,
                        rid=f"{t.name}/{rid}")
-            rid += 1
         before = eng.steps_run
         if eng.sched.waiting or eng.sched.running:
             # never decode past the next arrival: windows respect the
@@ -147,7 +198,14 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
         occupancy_mean=float(np.mean(occupancy)) / max(n_pages - 1, 1),
         occupancy_peak=m["peak_pages"] / max(n_pages - 1, 1),
         preemptions=m["preemptions"], n_pages=n_pages,
-        page_size=page_size)
+        page_size=page_size, prefill_tokens=m["prefill_tokens"])
+    if eng.cache is not None:
+        totals.update(
+            hit_rate=m["prefix_hit_rate"],
+            prefill_tokens_cached=m["prefill_tokens_cached"],
+            cow_copies=m["cow_copies"], shared_pages=m["shared_pages"],
+            prefix_evictions=m["prefix_evictions"],
+            bytes_deduped=m["bytes_deduped"])
     return eng, rows, totals
 
 
@@ -213,6 +271,69 @@ def bench_fused_comparison(*, quick: bool = True, seed: int = 0,
     }
 
 
+def bench_prefix_comparison(*, quick: bool = True, seed: int = 0,
+                            max_batch: int = 4, page_size: int = 8,
+                            arch: str = "tiny-100m"):
+    """Replay the shared-prefix multi-tenant trace twice — prefix cache
+    on vs off — with shared params and warmed-up compiles, asserting
+    per-request token identity (sharing is a placement transform, not a
+    sampler change).
+
+    Returns the BENCH_prefix.json payload (see scripts/check_bench.py):
+    hit rate, prefill tokens saved, TTFT, tokens/s, and the headline
+    ``prefill_token_reduction`` (>= 2x on this trace — the §X-B sharing
+    overlay as a throughput lever).
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+
+    tenants = shared_prefix_tenants(quick)
+    max_len = max(t.prompt_len + t.gen for t in tenants)
+    # room for every slot's worst case + the donated radix branches
+    n_pages = 2 * max_batch * (-(-max_len // page_size)) \
+        + len(tenants) * (-(-max_len // page_size)) + 1
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    out, toks, ttft = {}, {}, {}
+    for mode, cached in (("on", True), ("off", False)):
+        eng, rows, totals = replay(tenants, seed=seed, max_batch=max_batch,
+                                   page_size=page_size, n_pages=n_pages,
+                                   prefix_cache=cached, warmup=True,
+                                   params=params, arch=arch)
+        toks[mode] = {r.rid: list(r.tokens) for r in eng.sched.finished}
+        ttft[mode] = [r.first_token_step - r.arrived_step
+                      for r in eng.sched.finished]
+        out[mode] = dict(
+            tokens=totals["tokens"], steps=totals["steps"],
+            prefill_tokens=totals["prefill_tokens"],
+            tok_per_s=totals["tok_per_s"],
+            ttft_steps_mean=float(np.mean(ttft[mode])),
+            preemptions=totals["preemptions"])
+        if cached:
+            out[mode].update(
+                hit_rate=totals["hit_rate"],
+                prefill_tokens_cached=totals["prefill_tokens_cached"],
+                cow_copies=totals["cow_copies"],
+                shared_pages=totals["shared_pages"],
+                evictions=totals["prefix_evictions"],
+                bytes_deduped=totals["bytes_deduped"])
+    payload = {
+        "schema": "swallow.bench.prefix/v1",
+        "arch": arch, "batch": max_batch, "page_size": page_size,
+        "trace": "shared-prefix", "quick": quick, "seed": seed,
+        "tenants": len(tenants),
+        "requests_per_tenant": tenants[0].n_requests,
+        "on": out["on"], "off": out["off"],
+        "tokens_match": toks["on"] == toks["off"],
+        "prefill_token_reduction": out["off"]["prefill_tokens"]
+        / max(out["on"]["prefill_tokens"], 1),
+        "ttft_ratio": out["on"]["ttft_steps_mean"]
+        / max(out["off"]["ttft_steps_mean"], 1e-9),
+    }
+    return payload
+
+
 def format_table(rows, totals) -> str:
     out = [f"# paged serve trace — {len(rows)} tenants, "
            f"{totals['n_pages']} pages x {totals['page_size']} tokens",
@@ -233,6 +354,13 @@ def format_table(rows, totals) -> str:
                f"mean {t['occupancy_mean'] * 100:.0f}% / peak "
                f"{t['occupancy_peak'] * 100:.0f}%; "
                f"{t['preemptions']} preemptions")
+    if "hit_rate" in t:
+        out.append(f"prefix cache: {t['hit_rate'] * 100:.0f}% hit rate, "
+                   f"{t['prefill_tokens_cached']} prefill tokens served "
+                   f"from shared pages ({t['prefill_tokens']} computed), "
+                   f"{t['cow_copies']} COW copies, {t['shared_pages']} "
+                   f"tree pages, {t['prefix_evictions']} evictions, "
+                   f"{t['bytes_deduped'] / 1024:.0f} KiB deduped")
     return "\n".join(out)
 
 
@@ -276,12 +404,23 @@ def main():
                          "(--no-fused = legacy per-step loop)")
     ap.add_argument("--window", type=int, default=8,
                     help="max fused window (tokens per device dispatch)")
+    ap.add_argument("--trace", default="mixed",
+                    choices=["mixed", "shared-prefix"],
+                    help="mixed: the bursty Poisson tenants; "
+                         "shared-prefix: N tenants x M requests sharing "
+                         "per-tenant system prompts")
+    ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
+                    help="radix-tree prefix sharing on the page store")
     args = ap.parse_args()
-    eng, rows, totals = replay(default_tenants(args.quick), seed=args.seed,
+    tenants = (shared_prefix_tenants(args.quick)
+               if args.trace == "shared-prefix"
+               else default_tenants(args.quick))
+    eng, rows, totals = replay(tenants, seed=args.seed,
                                max_batch=args.batch,
                                page_size=args.page_size, n_pages=args.pages,
                                link_mode=args.link_mode, fused=args.fused,
-                               max_window=args.window)
+                               max_window=args.window,
+                               prefix_cache=args.prefix_cache == "on")
     print(format_table(rows, totals))
     print("[nOS] fleet serving view:")
     print(fleet_view(eng))

@@ -11,10 +11,17 @@ that ``benchmarks/run.py --json`` emits.
   ``speedup_decode`` must clear ``PERF_SMOKE_MIN_SPEEDUP`` (default 1.0
   — the 1.5x acceptance bar is checked on dedicated hosts, CI runners
   only guard against regressions to parity).
+* ``BENCH_prefix.json`` (swallow.bench.prefix/v1): prefix-cache on/off
+  stat blocks on the shared-prefix trace.  ``tokens_match`` must be
+  true (sharing is a placement transform), ``on.hit_rate`` must be
+  positive, and ``prefill_token_reduction`` must clear
+  ``PERF_SMOKE_MIN_PREFIX_REDUCTION`` (default 2.0 — the reduction is a
+  token *count* ratio, deterministic on any host).
 
 Run from the repo root:
     python benchmarks/run.py --only micro --json
-    python scripts/check_bench.py BENCH_micro.json BENCH_serve.json
+    python scripts/check_bench.py BENCH_micro.json BENCH_serve.json \
+        BENCH_prefix.json
 """
 from __future__ import annotations
 
@@ -87,8 +94,48 @@ def check_serve(doc: dict) -> list:
     return errs
 
 
+REQUIRED_PREFIX_ON_KEYS = ("tokens", "steps", "prefill_tokens",
+                           "tok_per_s", "ttft_steps_mean", "hit_rate",
+                           "prefill_tokens_cached", "cow_copies",
+                           "shared_pages", "bytes_deduped")
+REQUIRED_PREFIX_OFF_KEYS = ("tokens", "steps", "prefill_tokens",
+                            "tok_per_s", "ttft_steps_mean")
+
+
+def check_prefix(doc: dict) -> list:
+    errs = []
+    if doc.get("schema") != "swallow.bench.prefix/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    for mode, keys in (("on", REQUIRED_PREFIX_ON_KEYS),
+                       ("off", REQUIRED_PREFIX_OFF_KEYS)):
+        blk = doc.get(mode)
+        if not isinstance(blk, dict):
+            errs.append(f"missing {mode} block")
+            continue
+        for key in keys:
+            if not _finite_pos(blk.get(key)):
+                errs.append(f"{mode}.{key}: non-finite {blk.get(key)!r}")
+    if doc.get("tokens_match") is not True:
+        errs.append("tokens_match is not true: prefix sharing changed "
+                    "the emitted tokens")
+    if not errs:
+        if doc["on"]["hit_rate"] <= 0.0:
+            errs.append("on.hit_rate is 0: the shared-prefix trace "
+                        "never hit the cache")
+        min_red = float(os.environ.get("PERF_SMOKE_MIN_PREFIX_REDUCTION",
+                                       "2.0"))
+        red = doc.get("prefill_token_reduction")
+        if not _finite_pos(red):
+            errs.append(f"prefill_token_reduction: non-finite {red!r}")
+        elif red < min_red:
+            errs.append(f"prefill_token_reduction {red:.3f} "
+                        f"< required {min_red}")
+    return errs
+
+
 def main() -> None:
-    paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json"]
+    paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json",
+                             "BENCH_prefix.json"]
     failures = []
     for path in paths:
         try:
@@ -100,6 +147,8 @@ def main() -> None:
         schema = doc.get("schema", "")
         if "micro" in schema or "micro" in os.path.basename(path):
             errs = check_micro(doc)
+        elif "prefix" in schema or "prefix" in os.path.basename(path):
+            errs = check_prefix(doc)
         else:
             errs = check_serve(doc)
         for e in errs:

@@ -60,6 +60,10 @@ class Job:
     tokens_out: int = 0                # tokens emitted so far
     queue_latency_s: float = 0.0       # mean admission->first-token latency
     preemptions: int = 0
+    # -- prefix-sharing overlay (repro.serving.prefix_cache) ----------------
+    shared_pages: int = 0              # pages owned by the radix tree
+    prefix_hit_rate: float = 0.0       # admissions served from shared pages
+    bytes_deduped: int = 0             # KV bytes NOT re-prefilled
 
 
 @dataclass
@@ -195,11 +199,17 @@ class NOS:
                        tokens_out: Optional[int] = None,
                        queue_latency_s: Optional[float] = None,
                        preemptions: Optional[int] = None,
-                       energy_j: Optional[float] = None):
+                       energy_j: Optional[float] = None,
+                       shared_pages: Optional[int] = None,
+                       prefix_hit_rate: Optional[float] = None,
+                       bytes_deduped: Optional[int] = None):
         """Serving-engine telemetry (§VIII: nOS owns per-application
         accounting).  The paged engine calls this per replay/step batch;
         ``energy_j`` accrues (engine-priced decode energy), ``peak_pages``
-        is monotone, the rest are gauges."""
+        is monotone, the rest are gauges.  The prefix-sharing gauges
+        (``shared_pages`` / ``prefix_hit_rate`` / ``bytes_deduped``)
+        surface the §X-B overlay: how much of the striped store is
+        serving more than one tenant, and how much prefill it saved."""
         job = self.jobs[name]
         if pages_held is not None:
             job.pages_held = pages_held
@@ -214,17 +224,28 @@ class NOS:
             job.preemptions = preemptions
         if energy_j is not None:
             job.energy_j += energy_j
+        if shared_pages is not None:
+            job.shared_pages = shared_pages
+        if prefix_hit_rate is not None:
+            job.prefix_hit_rate = prefix_hit_rate
+        if bytes_deduped is not None:
+            job.bytes_deduped = bytes_deduped
 
     def serving_table(self) -> str:
-        """Fleet view of the serving gauges (pages, tokens, TTFT)."""
+        """Fleet view of the serving gauges (pages, tokens, TTFT, and the
+        prefix-sharing overlay columns)."""
         rows = [f"{'job':<18} {'pages':>6} {'peak':>5} {'tokens':>8} "
-                f"{'ttft_s':>9} {'preempt':>7} {'energy_J':>10}"]
+                f"{'ttft_s':>9} {'preempt':>7} {'energy_J':>10} "
+                f"{'shared':>6} {'hit%':>5} {'dedupKB':>8}"]
         for j in self.jobs.values():
             if j.tokens_out == 0 and j.peak_pages == 0:
                 continue
             rows.append(f"{j.name:<18} {j.pages_held:>6} {j.peak_pages:>5} "
                         f"{j.tokens_out:>8} {j.queue_latency_s:>9.2e} "
-                        f"{j.preemptions:>7} {j.energy_j:>10.3g}")
+                        f"{j.preemptions:>7} {j.energy_j:>10.3g} "
+                        f"{j.shared_pages:>6} "
+                        f"{j.prefix_hit_rate * 100:>5.0f} "
+                        f"{j.bytes_deduped / 1024:>8.0f}")
         return "\n".join(rows)
 
     def placement_table(self) -> str:

@@ -23,14 +23,31 @@ import os
 import time
 
 
-def make_prompts(n_requests: int, prompt_len: int, vocab_size: int):
+def make_prompts(n_requests: int, prompt_len: int, vocab_size: int,
+                 shared_prefix: int = 0):
     """The shared request stream: request i is PRNGKey(i) — both engines
     see byte-identical prompts, which is what makes the token-equality
-    acceptance check meaningful."""
+    acceptance check meaningful.  ``shared_prefix`` gives every request
+    the same leading tokens (a system prompt) so ``--prefix-cache on``
+    has something to share."""
     import jax
-    return [jax.random.randint(jax.random.PRNGKey(i), (prompt_len,), 2,
-                               vocab_size)
+    import jax.numpy as jnp
+    # clamp so an over-long system prompt never yields a negative tail
+    shared_prefix = max(0, min(shared_prefix, prompt_len))
+    base = jax.random.randint(jax.random.PRNGKey(757575),
+                              (shared_prefix,), 2, vocab_size)
+    return [jnp.concatenate([
+        base, jax.random.randint(jax.random.PRNGKey(i),
+                                 (prompt_len - shared_prefix,), 2,
+                                 vocab_size)])
             for i in range(n_requests)]
+
+
+def _stream_prompts(args, cfg):
+    """The one prompt stream both engines consume — keep construction in
+    one place so dense and paged always see byte-identical prompts."""
+    return make_prompts(args.requests, args.prompt_len, cfg.vocab_size,
+                        shared_prefix=getattr(args, "shared_prefix", 0))
 
 
 def run_dense(args, cfg, mesh, params=None):
@@ -48,8 +65,7 @@ def run_dense(args, cfg, mesh, params=None):
         prefill = jax.jit(steps_mod.make_prefill_step(cfg, max_len=max_len))
         serve = jax.jit(steps_mod.make_serve_step(cfg), donate_argnums=(2,))
 
-        prompts = make_prompts(args.requests, args.prompt_len,
-                               cfg.vocab_size)
+        prompts = _stream_prompts(args, cfg)
         # warmup: compile prefill + decode outside the timed region
         wl, wc = prefill(params, jnp.stack([prompts[0]] * args.batch))
         wt = jnp.argmax(wl, -1).astype(jnp.int32)
@@ -112,14 +128,20 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
                       max_len=max_len, n_nodes=n_nodes,
                       link_mode=args.link_mode,
                       prefill_budget=args.prefill_budget,
-                      fused=args.fused, max_window=args.window)
-    prompts = make_prompts(args.requests, args.prompt_len, cfg.vocab_size)
+                      fused=args.fused, max_window=args.window,
+                      prefix_cache=args.prefix_cache == "on")
+    prompts = _stream_prompts(args, cfg)
     # warmup both jitted paths (prefill + every fused-window bucket),
     # then reset clocks
     eng.warmup_windows()
     eng.submit(np.asarray(prompts[0]), min(2, args.gen), rid="warmup")
     eng.run()
+    # compile the COW-copy + suffix-prefill bucket the measured hits will
+    # use (no-op with the cache off or no shared prefix)
+    eng.warmup_prefix(args.prompt_len, args.shared_prefix)
     eng.reset_metrics()
+    if eng.cache is not None:
+        eng.cache.clear()      # the measured run starts with a cold tree
 
     for i, p in enumerate(prompts):
         eng.submit(np.asarray(p), args.gen, rid=f"req{i}")
@@ -151,7 +173,10 @@ def report_fleet(args, cfg, eng, tokens_out: int):
         tokens_out=tokens_out,
         queue_latency_s=m["ttft_steps_mean"] * est.step_time_s,
         preemptions=m["preemptions"],
-        energy_j=eng.steps_run * est.energy.total_j * est.layout.n_chips)
+        energy_j=eng.steps_run * est.energy.total_j * est.layout.n_chips,
+        shared_pages=m.get("shared_pages"),
+        prefix_hit_rate=m.get("prefix_hit_rate"),
+        bytes_deduped=m.get("bytes_deduped"))
     print("[nOS] fleet serving view:")
     print(pod.serving_table())
 
@@ -186,6 +211,14 @@ def main():
     ap.add_argument("--window", type=int, default=8,
                     help="paged engine: max fused window (tokens per "
                          "device dispatch)")
+    ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
+                    help="paged engine: radix-tree prefix sharing with "
+                         "copy-on-write on the striped page store "
+                         "(docs/PREFIX_CACHE.md)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="give every request the same leading N tokens "
+                         "(a system prompt) so the prefix cache has "
+                         "something to share")
     args = ap.parse_args()
 
     if args.devices:
@@ -239,6 +272,14 @@ def main():
               f"{m['h2d_syncs']} h2d + {m['d2h_syncs']} d2h "
               f"({m['syncs_per_token']:.2f} per token); decode "
               f"{m['decode_tok_per_s']:.1f} tok/s")
+        if eng.cache is not None:
+            print(f"[paged] prefix cache: {m['prefix_hit_rate'] * 100:.0f}%"
+                  f" hit rate ({m['prefix_hits']}/{m['prefix_lookups']}), "
+                  f"{m['prefill_tokens_cached']} prefill tokens served "
+                  f"from shared pages ({m['prefill_tokens']} computed), "
+                  f"{m['cow_copies']} COW copies, {m['shared_pages']} tree "
+                  f"pages, {m['prefix_evictions']} evictions, "
+                  f"{m['bytes_deduped'] / 1024:.0f} KiB deduped")
         report_fleet(args, cfg, eng, tokens)
         measured = m["step_s"]
     else:

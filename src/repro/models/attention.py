@@ -418,6 +418,68 @@ def attend_decode_paged(q, pool: PagedAttnCache, block_tables, pos, *,
     return o.reshape(B, 1, H * hd)
 
 
+def paged_cache_scatter_suffix(pool: PagedAttnCache, k, v, block_row,
+                               start, n_valid):
+    """Scatter a prompt *suffix*'s kv (1,W,Kv,hd) into the pool at
+    logical positions start..start+W-1 (a prefix-cache hit: the first
+    ``start`` positions already live in shared pages).  Slots at or past
+    ``n_valid`` are padding — they are routed to the null page, whose
+    garbage is masked by design, so one compile serves every suffix
+    length in a bucket."""
+    W = k.shape[1]
+    ps = pool.k.shape[1]
+    k = k.reshape(W, -1)
+    v = v.reshape(W, -1)
+    t = start + jnp.arange(W)
+    idx = jnp.clip(t // ps, 0, block_row.shape[0] - 1)
+    # physical page 0 is the reserved null page (repro.serving.paged_kv):
+    # padding lands there and its garbage is masked to exactly 0
+    page = jnp.where(jnp.arange(W) < n_valid, block_row[idx], 0)
+    slot = t % ps
+    return PagedAttnCache(k=pool.k.at[page, slot].set(k),
+                          v=pool.v.at[page, slot].set(v))
+
+
+def attend_prefill_paged(q, pool: PagedAttnCache, block_row, start, *,
+                         scale, softcap, n_kv: int):
+    """Suffix-prefill attention: q (1,W,H,hd) holds query positions
+    start..start+W-1; keys/values are gathered from the sequence's pages
+    (cached prefix + the just-scattered suffix) and masked causally at
+    ``j <= start + w`` — one batched dispatch, same arithmetic as the
+    decode path, no new kernel."""
+    B, W, H, hd = q.shape
+    ps = pool.k.shape[1]
+    nmax = block_row.shape[0]
+    T = nmax * ps
+    Kv = n_kv
+    G = H // Kv
+    k = pool.k[block_row].reshape(B, T, Kv, hd)
+    v = pool.v[block_row].reshape(B, T, Kv, hd)
+    qg = q.reshape(B, W, Kv, G, hd)
+    s = jnp.einsum("bwkgd,btkd->bkgwt", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = nn.softcap(s, softcap)
+    ok = jnp.arange(T)[None, :] <= (start + jnp.arange(W))[:, None]
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bkgwt,btkd->bwkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(q.dtype)
+    return o.reshape(B, W, H * hd)
+
+
+def apply_prefill_paged(p, cfg, x, pool: PagedAttnCache, block_row, start,
+                        n_valid, *, angles):
+    """Paged suffix-prefill path: x (1,W,D) at positions start..;
+    scatters the suffix kv then attends over the whole page run.
+    Returns (out (1,W,D'), new pool)."""
+    q, k_new, v_new = _qkv(p, cfg, x, angles)
+    pool = paged_cache_scatter_suffix(pool, k_new, v_new, block_row,
+                                      start, n_valid)
+    o = attend_prefill_paged(q, pool, block_row, start, scale=_scale(cfg),
+                             softcap=cfg.attn_softcap, n_kv=cfg.n_kv_heads)
+    return nn.matmul(o, p["wo"]), pool
+
+
 def paged_cache_from_prefill(pool: PagedAttnCache, k, v, block_row,
                              start: int = 0):
     """Scatter prefill k/v (1,S,Kv,hd) of ONE sequence into the pool.

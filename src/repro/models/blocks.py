@@ -183,6 +183,26 @@ def apply_decode_paged(p, cfg, kind: str, x, pool, block_tables, pos, *,
     return x, pool
 
 
+def apply_prefill_paged(p, cfg, kind: str, x, pool, block_row, start,
+                        n_valid, *, angles):
+    """Suffix prefill against a paged KV pool (prefix-cache hit): x
+    (1,W,D) tokens at positions start..start+W-1 attend the cached
+    prefix through the block row.  Returns (x, pool)."""
+    if kind != ATTN:
+        raise NotImplementedError(
+            f"paged prefill supports global-attention layers only, "
+            f"got {kind!r}")
+    h = nn.rmsnorm(x, p["ln1"]["scale"], cfg.norm_eps)
+    out, pool = attention.apply_prefill_paged(p["attn"], cfg, h, pool,
+                                              block_row, start, n_valid,
+                                              angles=angles)
+    x = x + _post(p, cfg, "ln1_post", out)
+    h2 = nn.rmsnorm(x, p["ln2"]["scale"], cfg.norm_eps)
+    out2, _ = _ffn_part(p, cfg, h2)
+    x = x + _post(p, cfg, "ln2_post", out2)
+    return x, pool
+
+
 def paged_cache_init(cfg, kind: str, n_pages: int, page_size: int, dtype):
     if kind != ATTN:
         raise NotImplementedError(

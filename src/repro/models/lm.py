@@ -533,6 +533,56 @@ def decode_window_paged(params, cfg, tokens, pools, block_tables, pos,
     return jnp.moveaxis(toks, 0, 1), tok, pos, pools
 
 
+def prefill_suffix_paged(params, cfg, tokens, pools, block_row, start,
+                         n_valid):
+    """Chunked prefill of a prompt *suffix* against the paged pools — the
+    prefix-cache hit path.  The cached prefix (positions 0..start-1)
+    already lives in shared pages named by ``block_row``; only the
+    uncached suffix runs through the model, in ONE batched dispatch:
+    each layer scatters the suffix kv into the request's pages and
+    attends causally over the whole page run (cached prefix + suffix),
+    same arithmetic as the decode path, no new kernel.
+
+    tokens (1,W) int32 suffix ids, padded to a bucket width W; ``start``
+    scalar int32 cached-prefix length; ``n_valid`` scalar int32 true
+    suffix length (padded slots scatter to the null page, whose garbage
+    is masked by design).  Returns (next-token logits (1,1,V) at the
+    last *valid* suffix position — the request's first generated token —
+    and the updated pools).
+    """
+    x = embed_tokens(params, cfg, tokens)
+    B, W = tokens.shape
+    positions = (start + jnp.arange(W, dtype=jnp.int32))[None]
+    positions = jnp.broadcast_to(positions, (B, W))
+    angles = _angles(cfg, positions)
+
+    segs = make_segments(cfg)
+    new_pools = []
+    for seg, seg_p, seg_pool in zip(segs, params["segments"], pools):
+        def cycle_apply(cyc_p, cyc_pool, x):
+            new_c = []
+            for j, kind in enumerate(seg.kinds):
+                x, c = blocks.apply_prefill_paged(
+                    cyc_p[j], cfg, kind, x, cyc_pool[j], block_row,
+                    start, n_valid, angles=angles)
+                new_c.append(c)
+            return x, tuple(new_c)
+
+        if seg.scanned:
+            def scan_body(x, inp):
+                cyc_p, cyc_pool = inp
+                x, new_c = cycle_apply(cyc_p, cyc_pool, x)
+                return x, new_c
+            x, new_seg = jax.lax.scan(scan_body, x, (seg_p, seg_pool))
+        else:
+            x, new_seg = cycle_apply(seg_p, seg_pool, x)
+        new_pools.append(new_seg)
+
+    h_last = jnp.take(x, n_valid - 1, axis=1)[:, None]     # (1,1,D)
+    h_last = nn.rmsnorm(h_last, params["final_norm"]["scale"], cfg.norm_eps)
+    return head_logits(params, cfg, h_last), new_pools
+
+
 def decode_step(params, cfg, tokens, caches, pos, *, impl=None):
     """One decode step. tokens (B,1) ids or (B,1,D) embeds; pos scalar.
 

@@ -6,14 +6,22 @@
                priced admission and page-pressure preemption
   engine     — the device-side loop: paged pools, block tables, one
                jitted decode step per batch refill
+  prefix_cache — §X-B's shared-memory overlay made load-bearing: a
+               radix tree over token IDs whose nodes own ref-counted,
+               immutable KV pages (copy-on-write on divergence, LRU
+               eviction under pool pressure)
 
-Entry points: ``repro.launch.serve --engine paged`` and
-``benchmarks/serve_trace.py``; docs in docs/SERVING.md.
+Entry points: ``repro.launch.serve --engine paged [--prefix-cache on]``
+and ``benchmarks/serve_trace.py``; docs in docs/SERVING.md and
+docs/PREFIX_CACHE.md.
 """
 from repro.serving.engine import PagedEngine
 from repro.serving.paged_kv import NULL_PAGE, PageAllocator
+from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,
+                                        RadixNode)
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      StepPlan)
 
 __all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
+           "PrefixCache", "PrefixMatch", "RadixNode",
            "ContinuousBatchScheduler", "Request", "StepPlan"]

@@ -24,6 +24,17 @@ window), bucketed to powers of two so at most log2(max_window)+1 scan
 shapes ever compile.  ``fused=False`` keeps the original per-step
 semantics as the K=1 fallback.
 
+Prefix sharing (``prefix_cache=True``): admissions are matched against
+:mod:`repro.serving.prefix_cache` — the radix tree over token IDs whose
+nodes own ref-counted pages on the striped store.  A hit skips prefill
+for the cached prefix (the block row simply points at the shared pages —
+the paged attention gather needs no kernel change), COW-copies the
+divergence page on device when the match ends mid-page, and prefills
+only the uncached suffix through the teacher-forced decode scan.  Greedy
+tokens are bit-identical with the cache on or off (pinned by
+tests/test_prefix_cache.py) — sharing moves KV entries, never changes
+them.
+
 Greedy decoding throughout: fused vs per-step vs dense token equality is
 an acceptance gate (tests/test_serving.py), and it is also what makes
 recompute-preemption exact.
@@ -53,10 +64,11 @@ class PagedEngine:
                  page_size: int = 16, n_pages: int = 64,
                  max_len: int = 256, n_nodes: int = 1,
                  link_mode: str = "circuit", prefill_budget: float = 2.0,
-                 fused: bool = True, max_window: int = 8):
+                 fused: bool = True, max_window: int = 8,
+                 prefix_cache: bool = False):
         import jax
         import jax.numpy as jnp
-        from repro.models import lm
+        from repro.models import lm, modules as nn
         from repro import steps as steps_mod
 
         assert lm.paged_decodable(cfg), \
@@ -73,6 +85,13 @@ class PagedEngine:
 
         self.alloc = PageAllocator(n_pages=n_pages, page_size=page_size,
                                    n_nodes=n_nodes)
+        self.cache = None
+        if prefix_cache:
+            from repro.serving.prefix_cache import PrefixCache
+            self.cache = PrefixCache(self.alloc)
+            # under pool pressure, LRU-evict cold cache pages before the
+            # scheduler resorts to preempting tenants
+            self.alloc.reclaim = self.cache.evict
         self.link_mode = link_mode
         self.n_nodes = n_nodes
         from repro.configs.base import ShapeConfig
@@ -83,7 +102,8 @@ class PagedEngine:
             self.alloc, max_batch,
             prefill_cost_s=self._prefill_cost(link_mode, n_nodes),
             decode_cost_s=self.decode_estimate.step_time_s,
-            prefill_budget=prefill_budget)
+            prefill_budget=prefill_budget,
+            prefix_cache=self.cache)
 
         self.pools = lm.init_paged_caches(cfg, n_pages=n_pages,
                                           page_size=page_size)
@@ -93,6 +113,16 @@ class PagedEngine:
                               donate_argnums=(2,))
         self._scan = jax.jit(steps_mod.make_paged_serve_scan(cfg),
                              static_argnames=("k",), donate_argnums=(2,))
+        self._suffix = jax.jit(steps_mod.make_paged_suffix_prefill(cfg),
+                               donate_argnums=(2,))
+        self._copy_page = jax.jit(steps_mod.make_page_copy(),
+                                  donate_argnums=(0,))
+        # KV bytes one token occupies across the whole stack (k + v, every
+        # layer) — the unit behind the bytes_deduped gauge
+        self.kv_bytes_per_token = (cfg.n_layers * 2 * cfg.n_kv_heads
+                                   * cfg.head_dim
+                                   * np.dtype(nn.dt(cfg.activation_dtype))
+                                   .itemsize)
         # host MIRROR of slot state; the device copies are authoritative
         # between window boundaries
         self.block_tables = np.full((max_batch, self.nmax), NULL_PAGE,
@@ -119,11 +149,14 @@ class PagedEngine:
         self.d2h_syncs = 0
         self.block_row_writes = 0
         self.peak_pages = 0
+        self.prefill_tokens = 0        # prompt tokens actually computed
         self.t0 = time.time()
 
     def reset_metrics(self):
         """Zero every counter/clock (e.g. after a warmup pass) while
-        keeping the compiled steps, pools and allocator state."""
+        keeping the compiled steps, pools and allocator state.  The
+        prefix-cache *tree* is kept (call ``cache.clear()`` to start
+        cold); its counters restart."""
         self.sched.finished.clear()
         self._n_submitted = 0
         self.steps_run = self.windows_run = 0
@@ -131,6 +164,10 @@ class PagedEngine:
         self.decode_time_s = 0.0
         self.h2d_syncs = self.d2h_syncs = self.block_row_writes = 0
         self.peak_pages = 0
+        self.prefill_tokens = 0
+        if self.cache is not None:
+            from repro.serving.prefix_cache import PrefixCacheStats
+            self.cache.stats = PrefixCacheStats()
         self.t0 = time.time()
 
     # -- cost-engine pricing (the scheduler's admission inputs) ------------
@@ -155,8 +192,10 @@ class PagedEngine:
         assert prompt.ndim == 1 and prompt.shape[0] + gen <= self.max_len
         rid = rid or f"r{self._n_submitted}"
         self._n_submitted += 1
+        key = tuple(int(t) for t in prompt) if self.cache is not None \
+            else None
         req = Request(rid=rid, prompt_len=int(prompt.shape[0]), gen=gen,
-                      tenant=tenant, prompt=prompt)
+                      tenant=tenant, prompt=prompt, prompt_key=key)
         self.sched.submit(req)
         return req
 
@@ -233,6 +272,33 @@ class PagedEngine:
             k *= 2
         return sizes
 
+    def warmup_prefix(self, prompt_len: int, shared_prefix: int,
+                      seed: int = 424242):
+        """Precompile the cache-hit path for prompts of this shape: one
+        miss (full prefill) followed by one hit sharing ``shared_prefix``
+        tokens, which dispatches the COW page copy and the pow2 suffix
+        bucket ``_do_prefill`` will pick for ``prompt_len - match``
+        uncached tokens.  Identical prompts (prefix covers everything)
+        exercise the capped match's 1-token bucket.  Call before
+        ``reset_metrics``/``cache.clear()`` — both warm requests run to
+        completion and their pages/stats are the caller's to reset."""
+        if self.cache is None or shared_prefix <= 0:
+            return
+        sp = min(shared_prefix, prompt_len)
+        gen = max(1, min(2, self.max_len - prompt_len))
+        rng = np.random.default_rng(seed)
+        base = rng.integers(2, self.cfg.vocab_size, prompt_len,
+                            dtype=np.int32)
+        self._n_warm = getattr(self, "_n_warm", 0) + 1
+        self.submit(base, gen, rid=f"warmsfx{self._n_warm}a")
+        self.run()
+        variant = base.copy()
+        if sp < prompt_len:
+            variant[sp:] = rng.integers(2, self.cfg.vocab_size,
+                                        prompt_len - sp, dtype=np.int32)
+        self.submit(variant, gen, rid=f"warmsfx{self._n_warm}b")
+        self.run()
+
     def warmup_windows(self):
         """Compile every scan bucket against inactive slots (all-null
         block rows write only the null page, whose garbage is masked by
@@ -251,6 +317,48 @@ class PagedEngine:
                 inactive, k=k)
             np.asarray(toks)
         self._dirty = True            # device state was clobbered
+
+    # -- prefill (full, or cached-prefix COW + suffix) ---------------------
+    def _do_prefill(self, req: Request, row: np.ndarray, jnp) -> int:
+        """Write the request's prompt KV and return its first greedy
+        token.  On a prefix-cache hit, the cached prefix is skipped: the
+        block row already points at the shared pages, the divergence
+        page (if the match ends mid-page) is COW-copied on device, and
+        only the uncached suffix runs — through the teacher-forced
+        decode scan, no kernel change."""
+        L = req.cached_tokens
+        match = req.prefix_match
+        if self.cache is None or L <= 0:
+            logits, self.pools = self._prefill(
+                self.params, jnp.asarray(req.prompt[None]), self.pools,
+                jnp.asarray(row))
+            self.h2d_syncs += 1        # prompt + block row push
+            tok = int(jnp.argmax(logits, -1)[0, 0])
+            self.d2h_syncs += 1        # blocking first-token pull
+            self.prefill_tokens += req.prompt_len
+            return tok
+        if match is not None and match.cow_src is not None:
+            # diverging inside a shared page: copy it into the request's
+            # private page before any write can touch it
+            dst = self.alloc.held[req.rid][L // self.page_size]
+            self.pools = self._copy_page(self.pools,
+                                         jnp.int32(match.cow_src),
+                                         jnp.int32(dst))
+            self.cache.stats.cow_copies += 1
+            self.cache.release_cow(match)
+        suffix = np.asarray(req.prompt[L:], np.int32)
+        slen = int(suffix.shape[0])
+        k = 1 << max(slen - 1, 0).bit_length()      # pow2 bucket >= slen
+        padded = np.zeros((1, k), np.int32)
+        padded[0, :slen] = suffix
+        logits, self.pools = self._suffix(
+            self.params, jnp.asarray(padded), self.pools, jnp.asarray(row),
+            jnp.int32(L), jnp.int32(slen))
+        self.h2d_syncs += 1            # suffix + block row push
+        tok = int(jnp.argmax(logits, -1)[0, 0])
+        self.d2h_syncs += 1            # blocking first-token pull
+        self.prefill_tokens += slen
+        return tok
 
     # -- one engine step (a window of >= 1 scheduler steps) ----------------
     @staticmethod
@@ -280,12 +388,14 @@ class PagedEngine:
                 self._clear_slot(slot)
         for req in plan.admitted:
             row = self._block_row(req.rid)
-            logits, self.pools = self._prefill(
-                self.params, jnp.asarray(req.prompt[None]), self.pools,
-                jnp.asarray(row))
-            self.h2d_syncs += 1        # prompt + block row push
-            tok = int(jnp.argmax(logits, -1)[0, 0])
-            self.d2h_syncs += 1        # blocking first-token pull
+            tok = self._do_prefill(req, row, jnp)
+            if self.cache is not None:
+                # the prompt's full pages are immutable from this moment
+                # (decode writes land past them) — graft them so later
+                # arrivals share instead of re-prefilling
+                self.cache.insert(req.prompt_key,
+                                  self.alloc.held[req.rid],
+                                  req.prompt_len)
             self.sched.note_first_token(req, tok)
             self.tokens_emitted += 1
             if req.state == "running":     # gen > 1: occupy the slot
@@ -357,7 +467,7 @@ class PagedEngine:
         ttft = [r.first_token_step - r.arrived_step for r in fin
                 if r.first_token_step is not None]
         emitted = self.tokens_emitted
-        return {
+        out = {
             "finished": len(fin),
             # emitted counts every token produced (prefill first tokens +
             # decode), including in-flight and preempt-discarded work;
@@ -382,4 +492,10 @@ class PagedEngine:
             "page_occupancy": self.peak_pages / max(self.alloc.n_pages - 1,
                                                     1),
             "preemptions": sum(r.preemptions for r in self.sched.all_requests),
+            "prefill_tokens": self.prefill_tokens,
         }
+        if self.cache is not None:
+            out.update(self.cache.metrics())
+            out["bytes_deduped"] = (self.cache.stats.tokens_cached
+                                    * self.kv_bytes_per_token)
+        return out

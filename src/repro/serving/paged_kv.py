@@ -15,6 +15,18 @@ dimension the pools are sharded over.  Page 0 is reserved as the null
 page — padded block-table slots point at it so the paged attention
 kernel always DMAs a real page and masks its contribution to exactly 0.
 
+Sharing (§X-B's shared-memory overlay made real): every allocated page
+carries a refcount.  A freshly allocated page has refcount 1 (its
+owner's reference); :meth:`PageAllocator.share` adds a reference (a
+prefix-cache node, or a second request reusing a cached prefix) and
+:meth:`PageAllocator.release_page` drops one — the page returns to the
+free list only at refcount 0, so shared pages survive their original
+owner's completion or preemption.  The null page is never shared and
+never refcounted.  ``reclaim`` is an optional callback (wired to
+:meth:`repro.serving.prefix_cache.PrefixCache.evict`) invoked when the
+free list runs short, so cold cache pages are evicted before any tenant
+is preempted.
+
 Pure host-side logic: no jax imports, unit-testable anywhere.  The
 device-side half (pools + block tables) lives in
 :mod:`repro.serving.engine`.
@@ -22,7 +34,7 @@ device-side half (pools + block tables) lives in
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.core.memory_server import striped_owner
 
@@ -40,6 +52,8 @@ class PageAllocator:
     page_size: int
     n_nodes: int = 1
     held: Dict[str, List[int]] = field(default_factory=dict)
+    refcount: Dict[int, int] = field(default_factory=dict)
+    reclaim: Optional[Callable[[int], int]] = None
     _free_by_node: List[List[int]] = field(default_factory=list)
 
     def __post_init__(self):
@@ -62,18 +76,61 @@ class PageAllocator:
 
     @property
     def pages_in_use(self) -> int:
-        return sum(len(p) for p in self.held.values())
+        """Distinct allocated pages — a page shared by N requests and the
+        prefix cache counts once (refcount, not held-list, is truth)."""
+        return len(self.refcount)
 
     def pages_for(self, n_tokens: int) -> int:
         return -(-max(n_tokens, 1) // self.page_size)
 
+    def refcount_of(self, page: int) -> int:
+        return self.refcount.get(page, 0)
+
     def occupancy_by_node(self) -> List[int]:
-        """Allocated pages per owner node (load-balance observable)."""
+        """Allocated pages per owner node (load-balance observable).
+        Shared pages count once — this is physical occupancy."""
         counts = [0] * self.n_nodes
-        for pages in self.held.values():
-            for p in pages:
-                counts[self.owner(p)] += 1
+        for p in self.refcount:
+            counts[self.owner(p)] += 1
         return counts
+
+    def check_conservation(self) -> bool:
+        """Every non-null page is on exactly one side: free list (refcount
+        0) or allocated (refcount >= 1)."""
+        free = [p for f in self._free_by_node for p in f]
+        if len(free) != len(set(free)):
+            return False
+        if set(free) & set(self.refcount):
+            return False
+        if NULL_PAGE in self.refcount or NULL_PAGE in free:
+            return False
+        if any(c < 1 for c in self.refcount.values()):
+            return False
+        return len(free) + len(self.refcount) == self.n_pages - 1
+
+    # -- sharing (refcounts) ----------------------------------------------
+    def share(self, page: int) -> None:
+        """Add a reference to an allocated page (prefix-cache node or a
+        second request reusing it).  The null page is never shared."""
+        if page == NULL_PAGE:
+            raise ValueError("the null page cannot be shared")
+        if self.refcount.get(page, 0) < 1:
+            raise ValueError(f"page {page} is not allocated; cannot share")
+        self.refcount[page] += 1
+
+    def release_page(self, page: int) -> bool:
+        """Drop one reference; free the page at refcount 0.  Returns True
+        when the page actually returned to the free list.  Releasing an
+        unallocated page is a double free and raises."""
+        c = self.refcount.get(page, 0)
+        if c < 1:
+            raise ValueError(f"double free of page {page}")
+        if c == 1:
+            del self.refcount[page]
+            self._free_by_node[self.owner(page)].append(page)
+            return True
+        self.refcount[page] = c - 1
+        return False
 
     # -- alloc / grow / free ----------------------------------------------
     def _take(self, want_node: int) -> Optional[int]:
@@ -87,15 +144,31 @@ class PageAllocator:
             return self._free_by_node[best].pop()
         return None
 
-    def alloc(self, rid: str, n: int) -> Optional[List[int]]:
-        """All-or-nothing: ``n`` pages for ``rid``, logical page j on
-        node j%n_nodes.  Returns the page list or None."""
-        if n > self.free_pages or rid in self.held:
+    def _ensure(self, n: int) -> None:
+        """Ask the reclaimer (prefix-cache LRU eviction) for pages when
+        the free list cannot cover ``n`` — cold cache pages go before any
+        tenant is preempted."""
+        if n > self.free_pages and self.reclaim is not None:
+            self.reclaim(n - self.free_pages)
+
+    def alloc(self, rid: str, n: int,
+              prefix: Optional[Sequence[int]] = None) -> Optional[List[int]]:
+        """All-or-nothing: ``n`` *fresh* pages for ``rid``.  ``prefix``
+        is an already-shared page run (refcounts bumped by the caller via
+        the prefix cache) that fills logical pages 0..len(prefix)-1, so
+        fresh logical page j lands on node (len(prefix)+j) % n_nodes.
+        Returns the full page list (prefix + fresh) or None."""
+        if rid in self.held:
             return None
-        pages = []
+        self._ensure(n)
+        if n > self.free_pages:
+            return None
+        off = len(prefix) if prefix else 0
+        pages = list(prefix) if prefix else []
         for j in range(n):
-            p = self._take(striped_owner(j, self.n_nodes))
+            p = self._take(striped_owner(off + j, self.n_nodes))
             assert p is not None
+            self.refcount[p] = 1
             pages.append(p)
         self.held[rid] = pages
         return pages
@@ -103,12 +176,14 @@ class PageAllocator:
     def grow(self, rid: str, n: int = 1) -> bool:
         """Append ``n`` pages to an existing allocation (decode crossing
         a page boundary)."""
+        self._ensure(n)
         if n > self.free_pages:
             return False
         pages = self.held[rid]
         for _ in range(n):
             p = self._take(striped_owner(len(pages), self.n_nodes))
             assert p is not None
+            self.refcount[p] = 1
             pages.append(p)
         return True
 
@@ -125,8 +200,13 @@ class PageAllocator:
         return len(self.held[rid]) * self.page_size
 
     def free(self, rid: str) -> int:
-        """Release every page ``rid`` holds; returns the count."""
+        """Release every reference ``rid`` holds; returns how many pages
+        actually returned to the free list (shared pages survive until
+        their last reference — the prefix cache's or another request's —
+        is dropped)."""
         pages = self.held.pop(rid, [])
+        freed = 0
         for p in pages:
-            self._free_by_node[self.owner(p)].append(p)
-        return len(pages)
+            if self.release_page(p):
+                freed += 1
+        return freed

@@ -18,6 +18,19 @@ full recompute, vLLM-style.  Greedy decoding is deterministic, so a
 preempted request's final output is unchanged — the conservation
 property tests/test_serving.py pins down.
 
+Prefix-cache integration (the §X-B sharing overlay,
+:mod:`repro.serving.prefix_cache`): when a cache is attached, admission
+is priced on *uncached* prefill tokens only (a request whose prompt is
+mostly cached is nearly free to admit), matched pages are acquired as
+shared references riding in the same ``held`` list as private pages,
+and a finished request donates its now-immutable pages — including the
+partially filled tail — to the cache before its references are
+released.  Shared pages are non-reclaimable by preemption: preempting a
+victim drops only its own references, so pages the cache (or another
+tenant) still holds never return to the free list, and the pool-pressure
+loop falls through to LRU cache eviction (``PageAllocator.reclaim``)
+before killing further tenants.
+
 Pure host-side state machine: no jax imports.  The engine applies the
 returned plan to device arrays.
 """
@@ -38,6 +51,7 @@ class Request:
     arrived_step: int = 0
     seq: int = 0                     # monotonic submission order (FIFO key)
     prompt: object = None            # (S,) int32 array; opaque to the host
+    prompt_key: Optional[tuple] = None   # token ids (prefix-cache key)
     # -- lifecycle ---------------------------------------------------------
     state: str = "waiting"           # waiting | running | finished
     slot: Optional[int] = None
@@ -46,6 +60,9 @@ class Request:
     first_token_step: Optional[int] = None
     finished_step: Optional[int] = None
     preemptions: int = 0
+    # -- prefix-cache state (set at admission, consumed by the engine) -----
+    cached_tokens: int = 0           # prompt tokens served from shared pages
+    prefix_match: Optional[object] = None   # prefix_cache.PrefixMatch
 
     @property
     def done(self) -> bool:
@@ -66,12 +83,14 @@ class ContinuousBatchScheduler:
     def __init__(self, allocator: PageAllocator, max_batch: int,
                  prefill_cost_s: Optional[Callable[[int], float]] = None,
                  decode_cost_s: float = 0.0,
-                 prefill_budget: float = 2.0):
+                 prefill_budget: float = 2.0,
+                 prefix_cache=None):
         self.alloc = allocator
         self.max_batch = max_batch
         self.prefill_cost_s = prefill_cost_s
         self.decode_cost_s = decode_cost_s
         self.prefill_budget = prefill_budget
+        self.cache = prefix_cache        # prefix_cache.PrefixCache or None
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}      # slot -> request
         self.finished: List[Request] = []
@@ -116,12 +135,20 @@ class ContinuousBatchScheduler:
         return max(pool, key=lambda r: (r.arrived_step, r.seq))
 
     def _preempt(self, req: Request, plan: StepPlan):
+        # drops only this request's references: pages the prefix cache or
+        # another tenant shares survive (non-reclaimable by preemption)
+        if self.cache is not None and req.prefix_match is not None:
+            # engine-less flows can preempt between admission and first
+            # token: drop acquire()'s temporary COW-source reference
+            # (not in held) or the page leaks as permanently unevictable
+            self.cache.release_cow(req.prefix_match)
         self.alloc.free(req.rid)
         del self.running[req.slot]
         req.state, req.slot = "waiting", None
         req.pos = 0
         req.tokens = []               # greedy decode: recompute is exact
         req.first_token_step = None
+        req.cached_tokens, req.prefix_match = 0, None
         req.preemptions += 1
         self.waiting.append(req)
         self._sort_waiting()
@@ -142,20 +169,40 @@ class ContinuousBatchScheduler:
                 if victim is req:
                     break
 
+    def _uncached_len(self, req: Request) -> int:
+        """Prefill tokens the request must actually compute — prompt
+        minus the cached-prefix length (pricing sees only real work)."""
+        if self.cache is None or req.prompt_key is None:
+            return req.prompt_len
+        return req.prompt_len - self.cache.peek(req.prompt_key)
+
     def _admit(self, plan: StepPlan):
         budget = self.prefill_budget * self.decode_cost_s
         spent = 0.0
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
-            cost = (self.prefill_cost_s(req.prompt_len)
+            # admission is priced on UNCACHED prefill tokens only: a
+            # request whose prompt is mostly shared pages is nearly free
+            cost = (self.prefill_cost_s(self._uncached_len(req))
                     if self.prefill_cost_s else 0.0)
             starving = not self.running and not plan.admitted
             if budget > 0.0 and spent + cost > budget and not starving:
                 break                 # interference budget exhausted
-            pages = self.alloc.alloc(
-                req.rid, self.alloc.pages_for(req.prompt_len + 1))
+            match = None
+            shared = []
+            if self.cache is not None and req.prompt_key is not None:
+                match = self.cache.acquire(req.prompt_key)
+                shared = match.pages
+            n_fresh = self.alloc.pages_for(req.prompt_len + 1) - len(shared)
+            pages = self.alloc.alloc(req.rid, n_fresh, prefix=shared)
             if pages is None:
+                if match is not None:
+                    self.cache.release_match(match)
                 break                 # page pressure: wait for frees
+            if match is not None:
+                self.cache.commit_match(match)
+            req.cached_tokens = match.length if match is not None else 0
+            req.prefix_match = match
             self.waiting.pop(0)
             free_slots = set(range(self.max_batch)) - set(self.running)
             req.slot = min(free_slots)
@@ -201,14 +248,20 @@ class ContinuousBatchScheduler:
         if k > 1 and self.waiting and len(self.running) < self.max_batch:
             head = self.waiting[0]
             budget = self.prefill_budget * self.decode_cost_s
-            cost = (self.prefill_cost_s(head.prompt_len)
+            cost = (self.prefill_cost_s(self._uncached_len(head))
                     if self.prefill_cost_s else 0.0)
             # mirror _admit with spent=0: a head whose prefill alone
             # busts the budget cannot land while anything runs, so it
             # must not collapse every window to K=1
             admissible = not (budget > 0.0 and cost > budget)
-            if admissible and self.alloc.pages_for(head.prompt_len + 1) \
-                    <= self.alloc.free_pages:
+            need = self.alloc.pages_for(head.prompt_len + 1)
+            if self.cache is not None and head.prompt_key is not None:
+                # cached full pages arrive as shared references, not
+                # fresh allocations (cache eviction could free more — a
+                # conservative miss just delays admission, never tokens)
+                need -= self.cache.peek(head.prompt_key) \
+                    // self.alloc.page_size
+            if admissible and need <= self.alloc.free_pages:
                 return 1              # admission could land next step
         if k == 1:
             return 1
@@ -220,6 +273,14 @@ class ContinuousBatchScheduler:
 
     # -- completion callbacks (engine -> scheduler) ------------------------
     def note_first_token(self, req: Request, token: int):
+        if self.cache is not None and req.prefix_match is not None:
+            # prefill is done.  In engine flows this release is a no-op —
+            # _do_prefill drops the COW-source reference right after its
+            # device copy — but the scheduler is also driven engine-less
+            # (host-only tests, cost studies), and there this is the ONLY
+            # balance point for acquire()'s temporary COW reference.
+            self.cache.release_cow(req.prefix_match)
+            req.prefix_match = None
         req.tokens.append(token)
         req.first_token_step = self.step_idx
         self._maybe_finish(req)
@@ -243,6 +304,14 @@ class ContinuousBatchScheduler:
     def _maybe_finish(self, req: Request) -> bool:
         if not req.done:
             return False
+        if self.cache is not None and req.prompt_key is not None:
+            # donate before free: every page is immutable now (the last
+            # emitted token's KV is never written, so the valid run is
+            # prompt + tokens[:-1]) and the tree takes its own reference
+            # — shared pages survive the owner's completion
+            valid = tuple(req.prompt_key) + tuple(req.tokens[:-1])
+            self.cache.insert(valid, self.alloc.held.get(req.rid, []),
+                              donate_partial=True)
         self.alloc.free(req.rid)
         if req.slot is not None:
             self.running.pop(req.slot, None)

@@ -94,6 +94,40 @@ def make_paged_serve_step(cfg: ModelConfig):
     return serve_paged
 
 
+def make_paged_suffix_prefill(cfg: ModelConfig):
+    """Batched suffix prefill for prefix-cache hits.
+
+    (params, tokens (1,W) padded suffix ids, pools, block_row (nmax,),
+     start, n_valid) -> (first-token logits (1,1,V), updated pools).
+    Only the uncached suffix runs through the model — one dispatch,
+    attending the shared-prefix KV through the block row.  Jit with the
+    pools donated; the padded width W is the only retrace axis (the
+    engine buckets it to powers of two).
+    """
+    def suffix_prefill(params, tokens, pools, block_row, start, n_valid):
+        return lm.prefill_suffix_paged(params, cfg, tokens, pools,
+                                       block_row, start, n_valid)
+    return suffix_prefill
+
+
+def make_page_copy():
+    """Copy-on-write: duplicate one physical page across every layer's
+    k/v pool in a single device dispatch.
+
+    (pools, src, dst) -> pools with page ``dst`` := page ``src``
+    everywhere.  The page axis is third-from-last in both unstacked
+    (P, ps, F) and scan-stacked (C, P, ps, F) pool leaves, so one
+    ellipsis-indexed scatter covers the whole pytree.  The whole page is
+    copied — slots past the shared fill point hold stale values the
+    diverging request overwrites before its position ever reaches them.
+    Jit with the pools donated; src/dst are traced scalars (one compile).
+    """
+    def copy_page(pools, src, dst):
+        return jax.tree.map(
+            lambda a: a.at[..., dst, :, :].set(a[..., src, :, :]), pools)
+    return copy_page
+
+
 def make_paged_serve_scan(cfg: ModelConfig):
     """Fused K-step paged decode window (device-resident serving).
 

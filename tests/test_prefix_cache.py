@@ -1,0 +1,370 @@
+"""Prefix-sharing subsystem: allocator refcount invariants, radix-tree
+match/insert/evict semantics, COW correctness, and the acceptance gate —
+greedy tokens bit-identical with the cache on or off (including forced
+COW divergence inside a partially filled page, preemption, and LRU
+eviction under page pressure)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.serving import (ContinuousBatchScheduler, PageAllocator,
+                           PagedEngine, PrefixCache, Request)
+
+
+# --- allocator: refcount invariants -------------------------------------------
+def test_refcount_double_free_rejected():
+    a = PageAllocator(n_pages=8, page_size=4, n_nodes=1)
+    [p] = a.alloc("r", 1)
+    assert a.release_page(p) is True          # refcount 1 -> 0: freed
+    with pytest.raises(ValueError):
+        a.release_page(p)                     # double free
+    with pytest.raises(ValueError):
+        a.share(p)                            # unallocated: cannot share
+    with pytest.raises(ValueError):
+        a.share(0)                            # the null page is never shared
+
+
+def test_shared_pages_survive_owner_free():
+    a = PageAllocator(n_pages=8, page_size=4, n_nodes=1)
+    pages = a.alloc("owner", 3)
+    a.share(pages[0])                         # a second holder (cache node)
+    freed = a.free("owner")
+    assert freed == 2                         # the shared page survived
+    assert a.refcount_of(pages[0]) == 1
+    assert a.pages_in_use == 1
+    assert a.release_page(pages[0]) is True   # last reference frees it
+    assert a.free_pages == 7
+
+
+def test_occupancy_counts_shared_pages_once():
+    a = PageAllocator(n_pages=9, page_size=4, n_nodes=2)
+    pages = a.alloc("r0", 4)
+    for p in pages[:2]:
+        a.share(p)
+    a.alloc("r1", 2, prefix=pages[:2])        # r1 = 2 shared + 2 fresh
+    # 6 distinct physical pages despite 8 held references
+    assert sum(len(v) for v in a.held.values()) == 8
+    assert a.pages_in_use == 6
+    assert sum(a.occupancy_by_node()) == 6
+    assert a.check_conservation()
+
+
+def test_conservation_invariant_with_refcounts():
+    a = PageAllocator(n_pages=12, page_size=4, n_nodes=3)
+    assert a.check_conservation()
+    pages = a.alloc("r0", 5)
+    a.share(pages[0]); a.share(pages[0]); a.share(pages[3])
+    a.alloc("r1", 1, prefix=[pages[0]])
+    assert a.check_conservation()
+    a.free("r0")
+    assert a.check_conservation()
+    assert a.refcount_of(pages[0]) == 2       # r1 + the extra share
+    a.free("r1")
+    assert a.check_conservation()
+    a.release_page(pages[0]); a.release_page(pages[3])
+    assert a.check_conservation()
+    assert a.free_pages == 11 and a.pages_in_use == 0
+
+
+def test_alloc_prefix_stripes_fresh_pages_after_shared_run():
+    a = PageAllocator(n_pages=17, page_size=4, n_nodes=4)
+    shared = a.alloc("donor", 2)
+    for p in shared:
+        a.share(p)
+    pages = a.alloc("r", 3, prefix=shared)
+    # fresh logical pages 2,3,4 land on nodes 2,3,0 (the address%n rule
+    # continues through the shared prefix)
+    assert [a.owner(p) for p in pages[2:]] == [2, 3, 0]
+
+
+# --- radix tree: match / insert / COW / evict ---------------------------------
+def _cache(n_pages=32, ps=4, n_nodes=1):
+    a = PageAllocator(n_pages=n_pages, page_size=ps, n_nodes=n_nodes)
+    return a, PrefixCache(a)
+
+
+def _seed(a, c, rid, tokens, donate=True):
+    """Insert a sequence the way the engine+scheduler would: alloc pages,
+    graft, free the owner's references."""
+    pages = a.alloc(rid, a.pages_for(len(tokens)))
+    c.insert(tokens, pages, donate_partial=donate)
+    a.free(rid)
+    return pages
+
+
+def test_radix_insert_match_full_and_partial():
+    a, c = _cache()
+    toks = tuple(range(100, 110))             # 2 full pages + 2-token tail
+    pages = _seed(a, c, "r0", toks)
+    assert c.n_nodes == 3                     # partial tail donated too
+    assert a.pages_in_use == 3                # tree owns them post-free
+    # full-page-aligned prefix of a longer prompt
+    assert c.peek(toks + (1, 2, 3)) == 10
+    # cap: at least one token must run through the model
+    assert c.peek(toks) == 9
+    m = c.acquire(toks + (1, 2, 3))
+    assert m.length == 10 and len(m.pages) == 2
+    assert m.cow_src == pages[2]              # partial tail: COW to extend
+    c.release_match(m)
+    assert a.check_conservation()
+
+
+def test_radix_match_diverges_inside_full_page():
+    a, c = _cache()
+    toks = tuple(range(50, 58))               # exactly 2 full pages
+    pages = _seed(a, c, "r0", toks, donate=False)
+    probe = toks[:6] + (999, 998, 997)        # diverges at slot 2 of page 1
+    assert c.peek(probe) == 6
+    m = c.acquire(probe)
+    assert m.length == 6
+    assert m.pages == [pages[0]] and m.cow_src == pages[1]
+    c.release_match(m)
+
+
+def test_radix_miss_and_no_partial_insert_without_donation():
+    a, c = _cache()
+    _seed(a, c, "r0", tuple(range(10)), donate=False)
+    assert c.n_nodes == 2                     # 8 full tokens only
+    assert c.peek((1, 2, 3, 4)) == 0
+    m = c.acquire((7, 7, 7, 7, 7))
+    assert not m.hit and m.pages == [] and m.cow_src is None
+
+
+def test_locked_nodes_are_not_evictable():
+    a, c = _cache(n_pages=8)
+    toks = tuple(range(8))
+    _seed(a, c, "r0", toks)
+    m = c.acquire(toks + (1, 2))              # locks both pages
+    assert c.evict(10) == 0                   # users > 0: nothing evictable
+    c.release_match(m)
+    assert c.evict(10) == 2 and c.n_nodes == 0
+    assert a.check_conservation() and a.pages_in_use == 0
+
+
+def test_eviction_is_lru_and_leaf_first():
+    a, c = _cache(n_pages=32)
+    old = tuple(range(200, 208))
+    new = tuple(range(300, 308))
+    _seed(a, c, "old", old, donate=False)
+    _seed(a, c, "new", new, donate=False)
+    c.peek(new)                               # peek does NOT touch LRU
+    c.acquire(old + (1,)) and None            # touches 'old'
+    # release the acquire's references so both branches are evictable
+    for node in list(c._nodes.values()):
+        while c.users_of(node) > 0:
+            a.release_page(node.page)
+    freed = c.evict(2)
+    assert freed == 2
+    # 'old' was touched last: the 'new' branch went first (leaf then root)
+    assert c.peek(old + (1,)) == 8 and c.peek(new + (1,)) == 0
+
+
+def test_reclaim_hook_evicts_cache_before_alloc_fails():
+    a, c = _cache(n_pages=6)
+    a.reclaim = c.evict
+    _seed(a, c, "r0", tuple(range(12)))       # tree owns 3 pages
+    assert a.free_pages == 2
+    pages = a.alloc("r1", 5)                  # needs eviction to fit
+    assert pages is not None
+    assert c.stats.evictions >= 1
+    assert a.check_conservation()
+
+
+# --- scheduler: pricing on uncached tokens only -------------------------------
+def test_admission_priced_on_uncached_tokens_only():
+    a = PageAllocator(n_pages=64, page_size=4, n_nodes=1)
+    c = PrefixCache(a)
+    _seed(a, c, "warm", tuple(range(16)), donate=False)
+    costs = []
+
+    def priced(n):
+        costs.append(n)
+        return float(n)
+
+    s = ContinuousBatchScheduler(a, max_batch=2, prefill_cost_s=priced,
+                                 decode_cost_s=1.0, prefill_budget=6.0,
+                                 prefix_cache=c)
+    # 16 cached of 20 -> uncached 4 <= budget 6; a cold 20-token prompt
+    # busts the same budget
+    s.submit(Request(rid="hot", prompt_len=20, gen=2,
+                     prompt_key=tuple(range(16)) + (901, 902, 903, 904)))
+    plan = s.plan_step()
+    assert [r.rid for r in plan.admitted] == ["hot"]
+    assert plan.admitted[0].cached_tokens == 16
+    assert costs[0] == 4                      # priced on uncached only
+    s.note_first_token(plan.admitted[0], 1)
+    s.submit(Request(rid="cold", prompt_len=20, gen=2,
+                     prompt_key=tuple(range(800, 820))))
+    plan = s.plan_step()
+    assert plan.admitted == []                # 20 uncached > budget 6
+
+
+def test_shared_pages_survive_preemption_of_owner():
+    a = PageAllocator(n_pages=64, page_size=4, n_nodes=1)
+    c = PrefixCache(a)
+    _seed(a, c, "warm", tuple(range(8)), donate=False)
+    s = ContinuousBatchScheduler(a, max_batch=2, prefix_cache=c)
+    key = tuple(range(8)) + (700, 701)
+    s.submit(Request(rid="u", prompt_len=10, gen=4, prompt_key=key))
+    plan = s.plan_step()
+    req = plan.admitted[0]
+    assert req.cached_tokens == 8
+    shared = a.held["u"][:2]
+    s.note_first_token(req, 1)
+    plan2 = type(plan)()
+    s._preempt(req, plan2)                    # victim drops its references
+    assert all(a.refcount_of(p) == 1 for p in shared)   # tree's survive
+    assert c.peek(key) == 8                   # still cached
+
+
+def test_preempt_before_first_token_releases_cow_reference():
+    """Engine-less flows can preempt between admission and first token;
+    the temporary COW-source reference from acquire() must be dropped or
+    the node leaks as permanently unevictable."""
+    a = PageAllocator(n_pages=64, page_size=4, n_nodes=1)
+    c = PrefixCache(a)
+    _seed(a, c, "warm", tuple(range(8)), donate=False)
+    s = ContinuousBatchScheduler(a, max_batch=2, prefix_cache=c)
+    key = tuple(range(6)) + (700, 701, 702, 703)   # mid-page match -> COW
+    s.submit(Request(rid="u", prompt_len=10, gen=4, prompt_key=key))
+    plan = s.plan_step()
+    req = plan.admitted[0]
+    assert req.prefix_match is not None and req.prefix_match.cow_src is not None
+    cow = req.prefix_match.cow_src
+    assert a.refcount_of(cow) == 2                 # tree + temp COW ref
+    s._preempt(req, type(plan)())                  # before note_first_token
+    assert a.refcount_of(cow) == 1                 # temp ref released
+    assert c.evict(10) >= 1                        # node evictable again
+
+
+# --- engine acceptance gate: cache on == cache off, bit for bit ---------------
+CFG = None
+PARAMS = None
+
+
+def _engine_fixture():
+    global CFG, PARAMS
+    if CFG is None:
+        from repro.configs import get_tiny_config
+        from repro.models import lm
+        CFG = get_tiny_config("tiny-100m")
+        PARAMS = lm.init_params(jax.random.PRNGKey(0), CFG)
+    return CFG, PARAMS
+
+
+def _run_engine(prompts, gens, *, cache, n_pages, max_batch=3, page_size=4,
+                max_len=None, budget=2.0, fused=True):
+    cfg, params = _engine_fixture()
+    max_len = max_len or max(p.shape[0] + g for p, g in zip(prompts, gens))
+    eng = PagedEngine(cfg, params, max_batch=max_batch, page_size=page_size,
+                      n_pages=n_pages, max_len=max_len, fused=fused,
+                      prefill_budget=budget, prefix_cache=cache)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        eng.submit(p, g, rid=f"r{i}")
+    fin = eng.run()
+    return eng, {r.rid: list(r.tokens) for r in fin}
+
+
+def _shared_prefix_prompts(n, total=14, shared=10, seed=0):
+    """n prompts sharing a ``shared``-token prefix that is NOT page
+    aligned (page_size=4): divergence lands inside a page -> forced COW."""
+    cfg, _ = _engine_fixture()
+    base = np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (shared,),
+                                         2, cfg.vocab_size), np.int32)
+    out = []
+    for i in range(n):
+        tail = np.asarray(jax.random.randint(jax.random.PRNGKey(seed + 50 + i),
+                                             (total - shared,), 2,
+                                             cfg.vocab_size), np.int32)
+        out.append(np.concatenate([base, tail]))
+    return out
+
+
+def test_engine_tokens_identical_with_forced_cow():
+    prompts = _shared_prefix_prompts(4)
+    gens = [5, 4, 6, 3]
+    eng_off, toks_off = _run_engine(prompts, gens, cache=False, n_pages=48)
+    eng_on, toks_on = _run_engine(prompts, gens, cache=True, n_pages=48)
+    assert toks_on == toks_off
+    m = eng_on.metrics()
+    assert m["prefix_hits"] == 3              # all but the first
+    assert m["cow_copies"] >= 3               # divergence is mid-page
+    assert m["prefill_tokens_cached"] > 0
+    assert m["prefill_tokens"] < eng_off.metrics()["prefill_tokens"]
+    assert m["bytes_deduped"] > 0
+    assert eng_on.alloc.check_conservation()
+
+
+def test_engine_cache_hits_donated_partial_tail():
+    """A follow-up prompt that extends a finished request's sequence
+    (prompt + its generated tokens) hits the donated pages, including a
+    COW off the partially filled tail page."""
+    cfg, params = _engine_fixture()
+    S, gen = 9, 5
+    p0 = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (S,), 2,
+                                       cfg.vocab_size), np.int32)
+    eng = PagedEngine(cfg, params, max_batch=2, page_size=4, n_pages=48,
+                      max_len=24, prefix_cache=True)
+    eng.submit(p0, gen, rid="a")
+    fin = eng.run()
+    a_tokens = list(fin[0].tokens)
+    # prompt + all-but-last generated token are cached (the last token's
+    # KV was never written); extend past the donated tail and diverge
+    p1 = np.concatenate([p0, np.asarray(a_tokens[:-1], np.int32),
+                         np.asarray([5, 7, 11], np.int32)])
+    eng.submit(p1, 3, rid="b")
+    fin2 = eng.run()
+    b_on = {r.rid: list(r.tokens) for r in fin2}["b"]
+    m = eng.metrics()
+    assert m["prefix_hits"] >= 1
+    assert m["prefill_tokens_cached"] >= S + gen - 1
+    # oracle: same request, cache off
+    eng_off, toks_off = _run_engine([p1], [3], cache=False, n_pages=48,
+                                    max_batch=2, max_len=24)
+    assert b_on == toks_off["r0"]
+
+
+def test_engine_tokens_identical_under_preemption_and_eviction():
+    """Tight pool: page pressure drives tenant preemption (cache off)
+    and LRU cache eviction (cache on, distinct prompts bloat the tree) —
+    tokens still match the cache-off run exactly."""
+    cfg, _ = _engine_fixture()
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(70 + i),
+                                             (12,), 2, cfg.vocab_size),
+               np.int32) for i in range(6)]
+    gens = [6] * 6
+    eng_off, toks_off = _run_engine(prompts, gens, cache=False, n_pages=14,
+                                    budget=0.0)
+    eng_on, toks_on = _run_engine(prompts, gens, cache=True, n_pages=14,
+                                  budget=0.0)
+    assert toks_on == toks_off
+    m = eng_on.metrics()
+    assert m["prefix_evictions"] >= 1
+    assert eng_off.metrics()["preemptions"] >= 1
+    assert eng_on.alloc.check_conservation()
+
+
+def test_engine_preempted_request_recomputes_exactly_through_cache():
+    """A preempted request re-admitted with the cache ON re-matches its
+    own donated/inserted pages and recomputes through the suffix path —
+    tokens still bit-identical to the cache-off run (preemptions >= 1 on
+    both sides is part of the pin)."""
+    prompts = _shared_prefix_prompts(6, total=12, shared=9, seed=7)
+    gens = [8] * 6
+    eng_off, toks_off = _run_engine(prompts, gens, cache=False, n_pages=14,
+                                    budget=0.0)
+    eng_on, toks_on = _run_engine(prompts, gens, cache=True, n_pages=14,
+                                  budget=0.0)
+    assert toks_on == toks_off
+    assert eng_on.metrics()["preemptions"] >= 1
+    assert eng_off.metrics()["preemptions"] >= 1
+    assert eng_on.metrics()["prefix_hits"] >= 1
+    assert eng_on.alloc.check_conservation()
+
+
+def test_engine_cache_off_by_default_and_metrics_gated():
+    cfg, params = _engine_fixture()
+    eng = PagedEngine(cfg, params, max_batch=2, page_size=4, n_pages=16,
+                      max_len=16)
+    assert eng.cache is None
+    assert "prefix_hit_rate" not in eng.metrics()
