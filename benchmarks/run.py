@@ -3,12 +3,15 @@ the roofline table.  Prints ``name,us_per_call,derived`` CSV.
 
 ``--json`` additionally emits the machine-readable perf trajectory:
 ``BENCH_micro.json`` (every micro row), ``BENCH_serve.json`` (the
-fused-vs-per-step serving comparison with token-identity check) and
+fused-vs-per-step serving comparison with token-identity check),
 ``BENCH_prefix.json`` (the prefix-cache on-vs-off shared-prefix trace:
-hit rate, prefill-token reduction, token identity) into ``--json-dir``.
-``--only PATTERN`` filters sections by substring — the CI perf-smoke
-job runs ``--only micro --json`` and validates the files with
-``scripts/check_bench.py``.
+hit rate, prefill-token reduction, token identity) and
+``BENCH_spec.json`` (speculative decoding on-vs-off on the repetitive
+trace: dispatches per token, accept rate, token identity) into
+``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
+unknown pattern is an error listing the valid titles) — the CI
+perf-smoke job runs ``--only micro --json`` and validates the files
+with ``scripts/check_bench.py``.
 """
 from __future__ import annotations
 
@@ -55,7 +58,14 @@ def main() -> None:
         ("roofline table", rt.roofline_rows),
     ]
     if args.only:
+        all_titles = [t for t, _ in sections]
         sections = [(t, f) for t, f in sections if args.only in t]
+        if not sections:
+            print(f"--only {args.only!r} matches no section; valid "
+                  f"titles (substring match):", file=sys.stderr)
+            for t in all_titles:
+                print(f"  {t}", file=sys.stderr)
+            raise SystemExit(2)
     print("name,us_per_call,derived")
     failures = 0
     micro_rows = []
@@ -83,29 +93,32 @@ def main() -> None:
         with open(micro_path, "w") as f:
             json.dump(micro, f, indent=1)
         print(f"# wrote {micro_path} ({len(micro_rows)} rows)")
-        try:
-            serve = st.bench_fused_comparison(quick=True)
-            serve_path = os.path.join(args.json_dir, "BENCH_serve.json")
-            with open(serve_path, "w") as f:
-                json.dump(serve, f, indent=1)
-            print(f"# wrote {serve_path} (tokens_match="
-                  f"{serve['tokens_match']}, speedup_decode="
-                  f"{serve['speedup_decode']:.2f}x)")
-        except Exception:
-            traceback.print_exc()
-            failures += 1
-        try:
-            prefix = st.bench_prefix_comparison(quick=True)
-            prefix_path = os.path.join(args.json_dir, "BENCH_prefix.json")
-            with open(prefix_path, "w") as f:
-                json.dump(prefix, f, indent=1)
-            print(f"# wrote {prefix_path} (tokens_match="
-                  f"{prefix['tokens_match']}, hit_rate="
-                  f"{prefix['on']['hit_rate']:.2f}, prefill_token_reduction="
-                  f"{prefix['prefill_token_reduction']:.2f}x)")
-        except Exception:
-            traceback.print_exc()
-            failures += 1
+        comparisons = [
+            ("BENCH_serve.json", st.bench_fused_comparison,
+             lambda d: f"tokens_match={d['tokens_match']}, "
+                       f"speedup_decode={d['speedup_decode']:.2f}x"),
+            ("BENCH_prefix.json", st.bench_prefix_comparison,
+             lambda d: f"tokens_match={d['tokens_match']}, "
+                       f"hit_rate={d['on']['hit_rate']:.2f}, "
+                       f"prefill_token_reduction="
+                       f"{d['prefill_token_reduction']:.2f}x"),
+            ("BENCH_spec.json", st.bench_spec_comparison,
+             lambda d: f"tokens_match={d['tokens_match']}, "
+                       f"dispatches_per_token="
+                       f"{d['on']['dispatches_per_token']:.3f} vs "
+                       f"{d['off']['dispatches_per_token']:.3f}, "
+                       f"accept_rate={d['on']['accept_rate']:.2f}"),
+        ]
+        for fname, bench_fn, summarize in comparisons:
+            try:
+                doc = bench_fn(quick=True)
+                path = os.path.join(args.json_dir, fname)
+                with open(path, "w") as f:
+                    json.dump(doc, f, indent=1)
+                print(f"# wrote {path} ({summarize(doc)})")
+            except Exception:
+                traceback.print_exc()
+                failures += 1
     if not args.only:
         print("# --- full roofline table ---")
         try:

@@ -18,9 +18,18 @@ trace (N tenants x M requests sharing per-tenant system prompts) and
 cache on vs off — into BENCH_prefix.json (token identity, hit rate,
 prefill-token reduction).
 
+``--trace repetitive`` is the speculative-decoding exemplar: a single
+latency-bound stream (batch 1) of motif-tiled prompts whose greedy
+continuations loop, so n-gram drafting ( ``--spec-decode on --spec-k N``)
+verifies many tokens per model pass; ``bench_spec_comparison`` replays
+it twice — speculation on vs off — into BENCH_spec.json (token
+identity, dispatches per token, accept rate).
+
 Run:  PYTHONPATH=src python benchmarks/serve_trace.py [--quick]
       PYTHONPATH=src python benchmarks/serve_trace.py --quick \
           --trace shared-prefix --prefix-cache on
+      PYTHONPATH=src python benchmarks/serve_trace.py --quick \
+          --trace repetitive --batch 1 --spec-decode on
 """
 from __future__ import annotations
 
@@ -44,6 +53,9 @@ class Tenant:
     at_step: int = 0     # burst tenants: every request arrives here
     shared_prefix: int = 0   # leading tokens all of the tenant's requests
                              # share (its "system prompt"); 0 = fully unique
+    motif: int = 0           # > 0: prompts are a per-request motif of this
+                             # many tokens tiled to prompt_len (repetitive
+                             # text — speculative-decoding fodder)
 
 
 def default_tenants(quick: bool = False) -> List[Tenant]:
@@ -71,11 +83,29 @@ def shared_prefix_tenants(quick: bool = False) -> List[Tenant]:
             for c in "ABCD"]
 
 
+def repetitive_tenants(quick: bool = False) -> List[Tenant]:
+    """The repetitive-text trace (BENCH_spec.json): one latency-bound
+    stream (run it with max_batch=1 — the regime where batching cannot
+    amortize dispatches and speculation is the only lever) of long-gen
+    requests whose prompts tile a short motif.  Greedy decode on such
+    prompts falls into loops, which is exactly the repetitive-output
+    regime (templates, code, retrieval) n-gram drafting exploits."""
+    if quick:
+        return [Tenant("loop", 3, 0.0, 24, 40, at_step=0, motif=4)]
+    return [Tenant("loop", 6, 0.0, 32, 64, at_step=0, motif=4)]
+
+
 def prompt_for(cfg, t: Tenant, rid: int):
     """Request ``rid``'s prompt: the tenant's system prompt (stable
-    per-tenant seed) + a unique per-request tail."""
+    per-tenant seed) + a unique per-request tail — or, for ``motif``
+    tenants, a per-request motif tiled to prompt_len."""
     import jax
     import zlib
+    if t.motif > 0:
+        pat = np.asarray(jax.random.randint(jax.random.PRNGKey(rid),
+                                            (t.motif,), 2, cfg.vocab_size),
+                         np.int32)
+        return np.tile(pat, -(-t.prompt_len // t.motif))[:t.prompt_len]
     tail_len = t.prompt_len - t.shared_prefix
     parts = []
     if t.shared_prefix > 0:
@@ -103,7 +133,8 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
            arch: str = "tiny-100m", link_mode: str = "circuit",
            prefill_budget: float = 2.0, fused: bool = True,
            max_window: int = 8, warmup: bool = False, params=None,
-           prefix_cache: bool = False):
+           prefix_cache: bool = False, spec_decode: bool = False,
+           spec_k: int = 8):
     """Drive the engine window by window, injecting arrivals between
     dispatches.  With ``fused`` the engine decodes multi-token windows,
     capped to the next pending arrival so the trace's admission clock
@@ -122,9 +153,11 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
                      key=lambda a: a[0])
     max_len = max(t.prompt_len + t.gen for t in tenants)
     if not n_pages:
-        # ~75% of worst-case demand: page pressure without thrash
+        # ~75% of worst-case demand: page pressure without thrash — but
+        # never below one request's peak need (batch-1 traces would
+        # otherwise be rejected at submit)
         worst = max_batch * (-(-max_len // page_size))
-        n_pages = max(int(worst * 0.75), 2) + 1
+        n_pages = max(int(worst * 0.75), -(-max_len // page_size), 2) + 1
 
     cfg = get_tiny_config(arch)
     if params is None:
@@ -137,7 +170,8 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
                       page_size=page_size, n_pages=n_pages,
                       max_len=max_len, link_mode=link_mode,
                       prefill_budget=prefill_budget, fused=fused,
-                      max_window=max_window, prefix_cache=prefix_cache)
+                      max_window=max_window, prefix_cache=prefix_cache,
+                      spec_decode=spec_decode, spec_k=spec_k)
     if warmup:
         # compile every window bucket + a prefill per DISTINCT prompt
         # shape in the trace (prefill retraces per length) outside the
@@ -198,7 +232,15 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
         occupancy_mean=float(np.mean(occupancy)) / max(n_pages - 1, 1),
         occupancy_peak=m["peak_pages"] / max(n_pages - 1, 1),
         preemptions=m["preemptions"], n_pages=n_pages,
-        page_size=page_size, prefill_tokens=m["prefill_tokens"])
+        page_size=page_size, prefill_tokens=m["prefill_tokens"],
+        model_passes=m["model_passes"],
+        dispatches_per_token=m["dispatches_per_token"])
+    if eng.spec is not None:
+        totals.update(
+            accept_rate=m["accept_rate"], spec_drafted=m["spec_drafted"],
+            spec_accepted=m["spec_accepted"],
+            spec_verifies=m["spec_verifies"],
+            spec_rollbacks=m["spec_rollbacks"])
     if eng.cache is not None:
         totals.update(
             hit_rate=m["prefix_hit_rate"],
@@ -334,6 +376,69 @@ def bench_prefix_comparison(*, quick: bool = True, seed: int = 0,
     return payload
 
 
+def bench_spec_comparison(*, quick: bool = True, seed: int = 0,
+                          page_size: int = 8, max_window: int = 8,
+                          spec_k: int = 8, arch: str = "tiny-100m"):
+    """Replay the repetitive single-stream trace twice — speculative
+    decoding on vs off — with shared params and warmed-up compiles,
+    asserting per-request token identity (acceptance only ever keeps
+    the verifier's own greedy tokens, so speculation is a dispatch
+    transform, not a sampler change).
+
+    Runs at max_batch=1: the latency-bound regime where cross-request
+    batching cannot amortize model passes, so ``dispatches_per_token``
+    isolates what drafting+verification buys (off is ~1.0 pass/token
+    even with fused windows — a K-step scan is K sequential passes; a
+    K+1-wide verify is ONE).
+
+    Returns the BENCH_spec.json payload (see scripts/check_bench.py):
+    the headline ``on.dispatches_per_token`` (< 0.7 is the acceptance
+    bar — >= 1.4x fewer model dispatches per emitted token) plus accept
+    rate and verify/rollback counts.
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+
+    tenants = repetitive_tenants(quick)
+    max_len = max(t.prompt_len + t.gen for t in tenants)
+    n_pages = (-(-max_len // page_size)) + 1       # exact single-slot pool
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    out, toks = {}, {}
+    for mode, spec in (("on", True), ("off", False)):
+        eng, rows, totals = replay(tenants, seed=seed, max_batch=1,
+                                   page_size=page_size, n_pages=n_pages,
+                                   fused=True, max_window=max_window,
+                                   spec_decode=spec, spec_k=spec_k,
+                                   warmup=True, params=params, arch=arch)
+        toks[mode] = {r.rid: list(r.tokens) for r in eng.sched.finished}
+        out[mode] = dict(
+            tokens=totals["tokens"], steps=totals["steps"],
+            model_passes=totals["model_passes"],
+            dispatches_per_token=totals["dispatches_per_token"],
+            tok_per_s=totals["tok_per_s"],
+            decode_tok_per_s=totals["decode_tok_per_s"],
+            preemptions=totals["preemptions"])
+        if spec:
+            out[mode].update(
+                accept_rate=totals["accept_rate"],
+                spec_drafted=totals["spec_drafted"],
+                spec_accepted=totals["spec_accepted"],
+                spec_verifies=totals["spec_verifies"],
+                spec_rollbacks=totals["spec_rollbacks"])
+    return {
+        "schema": "swallow.bench.spec/v1",
+        "arch": arch, "batch": 1, "page_size": page_size,
+        "max_window": max_window, "spec_k": spec_k,
+        "trace": "repetitive", "quick": quick, "seed": seed,
+        "on": out["on"], "off": out["off"],
+        "tokens_match": toks["on"] == toks["off"],
+        "dispatch_reduction": out["off"]["dispatches_per_token"]
+        / max(out["on"]["dispatches_per_token"], 1e-9),
+    }
+
+
 def format_table(rows, totals) -> str:
     out = [f"# paged serve trace — {len(rows)} tenants, "
            f"{totals['n_pages']} pages x {totals['page_size']} tokens",
@@ -354,6 +459,13 @@ def format_table(rows, totals) -> str:
                f"mean {t['occupancy_mean'] * 100:.0f}% / peak "
                f"{t['occupancy_peak'] * 100:.0f}%; "
                f"{t['preemptions']} preemptions")
+    if "accept_rate" in t:
+        out.append(f"spec decode: {t['model_passes']} model passes "
+                   f"({t['dispatches_per_token']:.2f}/token), "
+                   f"{t['accept_rate'] * 100:.0f}% accept rate "
+                   f"({t['spec_accepted']}/{t['spec_drafted']} drafts, "
+                   f"{t['spec_verifies']} verifies, "
+                   f"{t['spec_rollbacks']} page rollbacks)")
     if "hit_rate" in t:
         out.append(f"prefix cache: {t['hit_rate'] * 100:.0f}% hit rate, "
                    f"{t['prefill_tokens_cached']} prefill tokens served "
@@ -365,11 +477,14 @@ def format_table(rows, totals) -> str:
 
 
 def fleet_view(eng) -> str:
-    """Per-tenant gauges through the nOS serving surface."""
+    """Per-tenant gauges through the nOS serving surface.  The
+    speculative-decoding gauges are engine-wide (acceptance is not
+    tracked per tenant), so every tenant row shows the same pair."""
     from repro.core import nos as nos_mod
     pod = nos_mod.NOS(data_rows=4, model_cols=1)
     est = eng.decode_estimate      # engine-priced step time & energy
     j_per_token = est.energy.total_j / max(eng.max_batch, 1)
+    m = eng.metrics()
     tenants = sorted({r.tenant for r in eng.sched.finished})
     for name in tenants:
         fin = [r for r in eng.sched.finished if r.tenant == name]
@@ -384,7 +499,9 @@ def fleet_view(eng) -> str:
             queue_latency_s=(float(np.mean(ttft)) if ttft else 0.0)
             * est.step_time_s,
             preemptions=sum(r.preemptions for r in fin),
-            energy_j=tokens * j_per_token)
+            energy_j=tokens * j_per_token,
+            accept_rate=m.get("accept_rate"),
+            dispatches_per_token=m.get("dispatches_per_token"))
     return pod.serving_table()
 
 
@@ -405,22 +522,31 @@ def main():
     ap.add_argument("--window", type=int, default=8,
                     help="max fused window (tokens per device dispatch)")
     ap.add_argument("--trace", default="mixed",
-                    choices=["mixed", "shared-prefix"],
+                    choices=["mixed", "shared-prefix", "repetitive"],
                     help="mixed: the bursty Poisson tenants; "
                          "shared-prefix: N tenants x M requests sharing "
-                         "per-tenant system prompts")
+                         "per-tenant system prompts; repetitive: the "
+                         "single-stream motif trace speculation feeds on")
     ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
                     help="radix-tree prefix sharing on the page store")
+    ap.add_argument("--spec-decode", default="off", choices=["on", "off"],
+                    help="n-gram speculative decoding (draft from the "
+                         "sequence's own history, verify K+1 positions "
+                         "in one dispatch)")
+    ap.add_argument("--spec-k", type=int, default=8,
+                    help="max draft tokens per verification dispatch")
     args = ap.parse_args()
-    tenants = (shared_prefix_tenants(args.quick)
-               if args.trace == "shared-prefix"
-               else default_tenants(args.quick))
+    tenants = {"shared-prefix": shared_prefix_tenants,
+               "repetitive": repetitive_tenants,
+               "mixed": default_tenants}[args.trace](args.quick)
     eng, rows, totals = replay(tenants, seed=args.seed,
                                max_batch=args.batch,
                                page_size=args.page_size, n_pages=args.pages,
                                link_mode=args.link_mode, fused=args.fused,
                                max_window=args.window,
-                               prefix_cache=args.prefix_cache == "on")
+                               prefix_cache=args.prefix_cache == "on",
+                               spec_decode=args.spec_decode == "on",
+                               spec_k=args.spec_k)
     print(format_table(rows, totals))
     print("[nOS] fleet serving view:")
     print(fleet_view(eng))

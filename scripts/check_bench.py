@@ -17,11 +17,20 @@ that ``benchmarks/run.py --json`` emits.
   positive, and ``prefill_token_reduction`` must clear
   ``PERF_SMOKE_MIN_PREFIX_REDUCTION`` (default 2.0 — the reduction is a
   token *count* ratio, deterministic on any host).
+* ``BENCH_spec.json`` (swallow.bench.spec/v1): speculative-decoding
+  on/off stat blocks on the repetitive single-stream trace.
+  ``tokens_match`` must be true (speculation is a dispatch transform,
+  not a sampler change), ``on.accept_rate`` must be positive,
+  ``on.dispatches_per_token`` must stay under
+  ``PERF_SMOKE_MAX_SPEC_DISPATCHES`` (default 0.7) and
+  ``dispatch_reduction`` must clear ``PERF_SMOKE_MIN_SPEC_REDUCTION``
+  (default 1.4) — both are model-pass *count* ratios, deterministic on
+  any host.
 
 Run from the repo root:
     python benchmarks/run.py --only micro --json
     python scripts/check_bench.py BENCH_micro.json BENCH_serve.json \
-        BENCH_prefix.json
+        BENCH_prefix.json BENCH_spec.json
 """
 from __future__ import annotations
 
@@ -133,9 +142,53 @@ def check_prefix(doc: dict) -> list:
     return errs
 
 
+REQUIRED_SPEC_ON_KEYS = ("tokens", "steps", "model_passes",
+                         "dispatches_per_token", "accept_rate",
+                         "spec_drafted", "spec_accepted", "spec_verifies")
+REQUIRED_SPEC_OFF_KEYS = ("tokens", "steps", "model_passes",
+                          "dispatches_per_token")
+
+
+def check_spec(doc: dict) -> list:
+    errs = []
+    if doc.get("schema") != "swallow.bench.spec/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    for mode, keys in (("on", REQUIRED_SPEC_ON_KEYS),
+                       ("off", REQUIRED_SPEC_OFF_KEYS)):
+        blk = doc.get(mode)
+        if not isinstance(blk, dict):
+            errs.append(f"missing {mode} block")
+            continue
+        for key in keys:
+            if not _finite_pos(blk.get(key)):
+                errs.append(f"{mode}.{key}: non-finite {blk.get(key)!r}")
+    if doc.get("tokens_match") is not True:
+        errs.append("tokens_match is not true: speculative decoding "
+                    "changed the emitted tokens")
+    if not errs:
+        if doc["on"]["accept_rate"] <= 0.0:
+            errs.append("on.accept_rate is 0: the repetitive trace never "
+                        "accepted a draft")
+        max_dpt = float(os.environ.get("PERF_SMOKE_MAX_SPEC_DISPATCHES",
+                                       "0.7"))
+        dpt = doc["on"]["dispatches_per_token"]
+        if dpt >= max_dpt:
+            errs.append(f"on.dispatches_per_token {dpt:.3f} "
+                        f">= allowed {max_dpt}")
+        min_red = float(os.environ.get("PERF_SMOKE_MIN_SPEC_REDUCTION",
+                                       "1.4"))
+        red = doc.get("dispatch_reduction")
+        if not _finite_pos(red):
+            errs.append(f"dispatch_reduction: non-finite {red!r}")
+        elif red < min_red:
+            errs.append(f"dispatch_reduction {red:.3f} "
+                        f"< required {min_red}")
+    return errs
+
+
 def main() -> None:
     paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json",
-                             "BENCH_prefix.json"]
+                             "BENCH_prefix.json", "BENCH_spec.json"]
     failures = []
     for path in paths:
         try:
@@ -149,6 +202,8 @@ def main() -> None:
             errs = check_micro(doc)
         elif "prefix" in schema or "prefix" in os.path.basename(path):
             errs = check_prefix(doc)
+        elif "spec" in schema or "spec" in os.path.basename(path):
+            errs = check_spec(doc)
         else:
             errs = check_serve(doc)
         for e in errs:

@@ -64,6 +64,9 @@ class Job:
     shared_pages: int = 0              # pages owned by the radix tree
     prefix_hit_rate: float = 0.0       # admissions served from shared pages
     bytes_deduped: int = 0             # KV bytes NOT re-prefilled
+    # -- speculative decoding (repro.serving.spec_decode) --------------------
+    accept_rate: float = 0.0           # draft tokens the verifier kept
+    dispatches_per_token: float = 0.0  # sequential model passes per token
 
 
 @dataclass
@@ -202,14 +205,20 @@ class NOS:
                        energy_j: Optional[float] = None,
                        shared_pages: Optional[int] = None,
                        prefix_hit_rate: Optional[float] = None,
-                       bytes_deduped: Optional[int] = None):
+                       bytes_deduped: Optional[int] = None,
+                       accept_rate: Optional[float] = None,
+                       dispatches_per_token: Optional[float] = None):
         """Serving-engine telemetry (§VIII: nOS owns per-application
         accounting).  The paged engine calls this per replay/step batch;
         ``energy_j`` accrues (engine-priced decode energy), ``peak_pages``
         is monotone, the rest are gauges.  The prefix-sharing gauges
         (``shared_pages`` / ``prefix_hit_rate`` / ``bytes_deduped``)
         surface the §X-B overlay: how much of the striped store is
-        serving more than one tenant, and how much prefill it saved."""
+        serving more than one tenant, and how much prefill it saved.
+        The speculative-decoding gauges (``accept_rate`` /
+        ``dispatches_per_token``) surface the §V payload-per-dispatch
+        lever: how many sequential model passes each emitted token
+        cost."""
         job = self.jobs[name]
         if pages_held is not None:
             job.pages_held = pages_held
@@ -230,13 +239,18 @@ class NOS:
             job.prefix_hit_rate = prefix_hit_rate
         if bytes_deduped is not None:
             job.bytes_deduped = bytes_deduped
+        if accept_rate is not None:
+            job.accept_rate = accept_rate
+        if dispatches_per_token is not None:
+            job.dispatches_per_token = dispatches_per_token
 
     def serving_table(self) -> str:
         """Fleet view of the serving gauges (pages, tokens, TTFT, and the
         prefix-sharing overlay columns)."""
         rows = [f"{'job':<18} {'pages':>6} {'peak':>5} {'tokens':>8} "
                 f"{'ttft_s':>9} {'preempt':>7} {'energy_J':>10} "
-                f"{'shared':>6} {'hit%':>5} {'dedupKB':>8}"]
+                f"{'shared':>6} {'hit%':>5} {'dedupKB':>8} "
+                f"{'acc%':>5} {'disp/tok':>8}"]
         for j in self.jobs.values():
             if j.tokens_out == 0 and j.peak_pages == 0:
                 continue
@@ -245,7 +259,9 @@ class NOS:
                         f"{j.preemptions:>7} {j.energy_j:>10.3g} "
                         f"{j.shared_pages:>6} "
                         f"{j.prefix_hit_rate * 100:>5.0f} "
-                        f"{j.bytes_deduped / 1024:>8.0f}")
+                        f"{j.bytes_deduped / 1024:>8.0f} "
+                        f"{j.accept_rate * 100:>5.0f} "
+                        f"{j.dispatches_per_token:>8.2f}")
         return "\n".join(rows)
 
     def placement_table(self) -> str:

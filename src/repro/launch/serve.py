@@ -129,7 +129,9 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
                       link_mode=args.link_mode,
                       prefill_budget=args.prefill_budget,
                       fused=args.fused, max_window=args.window,
-                      prefix_cache=args.prefix_cache == "on")
+                      prefix_cache=args.prefix_cache == "on",
+                      spec_decode=args.spec_decode == "on",
+                      spec_k=args.spec_k)
     prompts = _stream_prompts(args, cfg)
     # warmup both jitted paths (prefill + every fused-window bucket),
     # then reset clocks
@@ -176,7 +178,9 @@ def report_fleet(args, cfg, eng, tokens_out: int):
         energy_j=eng.steps_run * est.energy.total_j * est.layout.n_chips,
         shared_pages=m.get("shared_pages"),
         prefix_hit_rate=m.get("prefix_hit_rate"),
-        bytes_deduped=m.get("bytes_deduped"))
+        bytes_deduped=m.get("bytes_deduped"),
+        accept_rate=m.get("accept_rate"),
+        dispatches_per_token=m.get("dispatches_per_token"))
     print("[nOS] fleet serving view:")
     print(pod.serving_table())
 
@@ -219,6 +223,13 @@ def main():
                     help="give every request the same leading N tokens "
                          "(a system prompt) so the prefix cache has "
                          "something to share")
+    ap.add_argument("--spec-decode", default="off", choices=["on", "off"],
+                    help="paged engine: n-gram speculative decoding — "
+                         "draft from each sequence's own history, verify "
+                         "K+1 positions in one dispatch, roll back "
+                         "rejected pages (docs/SERVING.md)")
+    ap.add_argument("--spec-k", type=int, default=8,
+                    help="max draft tokens per verification dispatch")
     args = ap.parse_args()
 
     if args.devices:
@@ -272,6 +283,14 @@ def main():
               f"{m['h2d_syncs']} h2d + {m['d2h_syncs']} d2h "
               f"({m['syncs_per_token']:.2f} per token); decode "
               f"{m['decode_tok_per_s']:.1f} tok/s")
+        if eng.spec is not None:
+            print(f"[paged] spec decode: {m['model_passes']} model passes "
+                  f"for {m['tokens_out']} tokens "
+                  f"({m['dispatches_per_token']:.2f} dispatches/token); "
+                  f"accept rate {m['accept_rate'] * 100:.0f}% "
+                  f"({m['spec_accepted']}/{m['spec_drafted']} drafts over "
+                  f"{m['spec_verifies']} verifies, "
+                  f"{m['spec_rollbacks']} page rollbacks)")
         if eng.cache is not None:
             print(f"[paged] prefix cache: {m['prefix_hit_rate'] * 100:.0f}%"
                   f" hit rate ({m['prefix_hits']}/{m['prefix_lookups']}), "

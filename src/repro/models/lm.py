@@ -533,23 +533,13 @@ def decode_window_paged(params, cfg, tokens, pools, block_tables, pos,
     return jnp.moveaxis(toks, 0, 1), tok, pos, pools
 
 
-def prefill_suffix_paged(params, cfg, tokens, pools, block_row, start,
-                         n_valid):
-    """Chunked prefill of a prompt *suffix* against the paged pools — the
-    prefix-cache hit path.  The cached prefix (positions 0..start-1)
-    already lives in shared pages named by ``block_row``; only the
-    uncached suffix runs through the model, in ONE batched dispatch:
-    each layer scatters the suffix kv into the request's pages and
-    attends causally over the whole page run (cached prefix + suffix),
-    same arithmetic as the decode path, no new kernel.
-
-    tokens (1,W) int32 suffix ids, padded to a bucket width W; ``start``
-    scalar int32 cached-prefix length; ``n_valid`` scalar int32 true
-    suffix length (padded slots scatter to the null page, whose garbage
-    is masked by design).  Returns (next-token logits (1,1,V) at the
-    last *valid* suffix position — the request's first generated token —
-    and the updated pools).
-    """
+def _suffix_forward_paged(params, cfg, tokens, pools, block_row, start,
+                          n_valid):
+    """Shared body of :func:`prefill_suffix_paged` and
+    :func:`verify_window_paged`: run a W-token continuation (positions
+    start..start+W-1) through every layer's ``apply_prefill_paged``,
+    scattering its kv into the sequence's pages and attending causally
+    over the whole page run.  Returns (hidden states (1,W,D), pools)."""
     x = embed_tokens(params, cfg, tokens)
     B, W = tokens.shape
     positions = (start + jnp.arange(W, dtype=jnp.int32))[None]
@@ -577,10 +567,61 @@ def prefill_suffix_paged(params, cfg, tokens, pools, block_row, start,
         else:
             x, new_seg = cycle_apply(seg_p, seg_pool, x)
         new_pools.append(new_seg)
+    return x, new_pools
 
+
+def prefill_suffix_paged(params, cfg, tokens, pools, block_row, start,
+                         n_valid):
+    """Chunked prefill of a prompt *suffix* against the paged pools — the
+    prefix-cache hit path.  The cached prefix (positions 0..start-1)
+    already lives in shared pages named by ``block_row``; only the
+    uncached suffix runs through the model, in ONE batched dispatch:
+    each layer scatters the suffix kv into the request's pages and
+    attends causally over the whole page run (cached prefix + suffix),
+    same arithmetic as the decode path, no new kernel.
+
+    tokens (1,W) int32 suffix ids, padded to a bucket width W; ``start``
+    scalar int32 cached-prefix length; ``n_valid`` scalar int32 true
+    suffix length (padded slots scatter to the null page, whose garbage
+    is masked by design).  Returns (next-token logits (1,1,V) at the
+    last *valid* suffix position — the request's first generated token —
+    and the updated pools).
+    """
+    x, new_pools = _suffix_forward_paged(params, cfg, tokens, pools,
+                                         block_row, start, n_valid)
     h_last = jnp.take(x, n_valid - 1, axis=1)[:, None]     # (1,1,D)
     h_last = nn.rmsnorm(h_last, params["final_norm"]["scale"], cfg.norm_eps)
     return head_logits(params, cfg, h_last), new_pools
+
+
+def verify_window_paged(params, cfg, tokens, pools, block_row, start,
+                        n_valid):
+    """Speculative-decoding verification: score K+1 continuation
+    positions of ONE sequence in ONE batched dispatch.
+
+    ``tokens`` (1,W) holds [last emitted token, draft_1..draft_K] padded
+    to a pow2 bucket width W; ``start`` is the sequence's KV write
+    position (the last emitted token's KV lands there, exactly as a
+    decode step would place it) and ``n_valid`` = K+1.  The body is the
+    same per-layer ``apply_prefill_paged`` path as the prefix-cache
+    suffix prefill — kv for all K+1 inputs is scattered into the
+    sequence's pages (padding routed to the null page) and every
+    position attends causally over the whole page run — so scoring K+1
+    positions costs one model pass instead of K+1 sequential decode
+    steps, and the arithmetic matches the decode path token-for-token.
+
+    Returns (logits (1,W,V) at every position — position j's greedy
+    argmax is the model's true next token after input j, which the
+    engine compares against draft j+1 to accept the longest matching
+    prefix — and the updated pools).  Rejected positions' KV stays in
+    the pages but is masked by position and overwritten before the
+    write position reaches it; whole rejected pages are rolled back via
+    ``PageAllocator.truncate_to``.
+    """
+    x, new_pools = _suffix_forward_paged(params, cfg, tokens, pools,
+                                         block_row, start, n_valid)
+    h = nn.rmsnorm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    return head_logits(params, cfg, h), new_pools
 
 
 def decode_step(params, cfg, tokens, caches, pos, *, impl=None):

@@ -10,10 +10,14 @@
                radix tree over token IDs whose nodes own ref-counted,
                immutable KV pages (copy-on-write on divergence, LRU
                eviction under pool pressure)
+  spec_decode — §V's payload-per-dispatch argument applied to model
+               passes: weightless n-gram drafting verified in one
+               batched dispatch (accept-prefix + rollback), cutting
+               dispatches per emitted token below 1.0
 
-Entry points: ``repro.launch.serve --engine paged [--prefix-cache on]``
-and ``benchmarks/serve_trace.py``; docs in docs/SERVING.md and
-docs/PREFIX_CACHE.md.
+Entry points: ``repro.launch.serve --engine paged [--prefix-cache on]
+[--spec-decode on]`` and ``benchmarks/serve_trace.py``; docs in
+docs/SERVING.md, docs/PREFIX_CACHE.md and docs/TESTING.md.
 """
 from repro.serving.engine import PagedEngine
 from repro.serving.paged_kv import NULL_PAGE, PageAllocator
@@ -21,7 +25,9 @@ from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,
                                         RadixNode)
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      StepPlan)
+from repro.serving.spec_decode import NGramSpec, SpecStats, propose_ngram
 
 __all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
            "PrefixCache", "PrefixMatch", "RadixNode",
-           "ContinuousBatchScheduler", "Request", "StepPlan"]
+           "ContinuousBatchScheduler", "Request", "StepPlan",
+           "NGramSpec", "SpecStats", "propose_ngram"]

@@ -35,12 +35,27 @@ tokens are bit-identical with the cache on or off (pinned by
 tests/test_prefix_cache.py) — sharing moves KV entries, never changes
 them.
 
+Speculative decoding (``spec_decode=True``): each running sequence
+drafts up to K tokens from its own prompt+output history
+(:mod:`repro.serving.spec_decode`, weightless n-gram lookup) and a
+single ``verify_window_paged`` dispatch scores all K+1 positions against
+the paged KV — the accepted prefix plus the verifier's bonus token land
+from ONE model pass, cutting *model dispatches per emitted token* below
+1.0 (the ``dispatches_per_token`` observable).  Speculation is capped by
+the scheduler's ``safe_horizon`` (no scheduling event inside the
+window), rejected KV is appended then rolled back
+(``PageAllocator.truncate_to`` releases whole rejected pages; partial
+slots are masked by position), and slots with no draft ride the normal
+fused window — so greedy tokens stay bit-identical with speculation on
+or off (tests/test_spec_decode.py).
+
 Greedy decoding throughout: fused vs per-step vs dense token equality is
 an acceptance gate (tests/test_serving.py), and it is also what makes
 recompute-preemption exact.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import Dict, List, Optional
 
@@ -48,6 +63,34 @@ import numpy as np
 
 from repro.serving.paged_kv import NULL_PAGE, PageAllocator
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
+from repro.serving.spec_decode import NGramSpec, SpecStats
+
+
+@functools.lru_cache(maxsize=8)
+def _jitted_steps(cfg):
+    """One set of jitted step functions per (hashable, frozen) config —
+    engines constructed with the same config share compile caches
+    instead of re-tracing per instance (a large win for the test suite
+    and for on/off A-B benchmark runs).  Donation is per-call, so
+    sharing the jitted callables across engines is safe: each engine
+    donates its own pools.  Bounded so a long-lived process sweeping
+    many configs does not retain compiled executables forever."""
+    import jax
+    from repro import steps as steps_mod
+    return {
+        "prefill": jax.jit(steps_mod.make_paged_prefill_step(cfg),
+                           donate_argnums=(2,)),
+        "serve": jax.jit(steps_mod.make_paged_serve_step(cfg),
+                         donate_argnums=(2,)),
+        "scan": jax.jit(steps_mod.make_paged_serve_scan(cfg),
+                        static_argnames=("k",), donate_argnums=(2,)),
+        "suffix": jax.jit(steps_mod.make_paged_suffix_prefill(cfg),
+                          donate_argnums=(2,)),
+        "verify": jax.jit(steps_mod.make_verify_window(cfg),
+                          donate_argnums=(2,)),
+        "copy_page": jax.jit(steps_mod.make_page_copy(),
+                             donate_argnums=(0,)),
+    }
 
 
 class PagedEngine:
@@ -65,11 +108,10 @@ class PagedEngine:
                  max_len: int = 256, n_nodes: int = 1,
                  link_mode: str = "circuit", prefill_budget: float = 2.0,
                  fused: bool = True, max_window: int = 8,
-                 prefix_cache: bool = False):
-        import jax
+                 prefix_cache: bool = False, spec_decode: bool = False,
+                 spec_k: int = 8, spec_ngram: int = 3):
         import jax.numpy as jnp
         from repro.models import lm, modules as nn
-        from repro import steps as steps_mod
 
         assert lm.paged_decodable(cfg), \
             f"{cfg.name} is not paged-decodable (attention-only, causal)"
@@ -81,6 +123,8 @@ class PagedEngine:
         self.nmax = -(-max_len // page_size)
         self.fused = fused
         self.max_window = max(1, int(max_window))
+        self.spec = NGramSpec(k=spec_k, max_n=spec_ngram) \
+            if spec_decode else None
         self._jnp = jnp
 
         self.alloc = PageAllocator(n_pages=n_pages, page_size=page_size,
@@ -107,16 +151,13 @@ class PagedEngine:
 
         self.pools = lm.init_paged_caches(cfg, n_pages=n_pages,
                                           page_size=page_size)
-        self._prefill = jax.jit(steps_mod.make_paged_prefill_step(cfg),
-                                donate_argnums=(2,))
-        self._serve = jax.jit(steps_mod.make_paged_serve_step(cfg),
-                              donate_argnums=(2,))
-        self._scan = jax.jit(steps_mod.make_paged_serve_scan(cfg),
-                             static_argnames=("k",), donate_argnums=(2,))
-        self._suffix = jax.jit(steps_mod.make_paged_suffix_prefill(cfg),
-                               donate_argnums=(2,))
-        self._copy_page = jax.jit(steps_mod.make_page_copy(),
-                                  donate_argnums=(0,))
+        steps = _jitted_steps(cfg)
+        self._prefill = steps["prefill"]
+        self._serve = steps["serve"]
+        self._scan = steps["scan"]
+        self._suffix = steps["suffix"]
+        self._verify = steps["verify"]
+        self._copy_page = steps["copy_page"]
         # KV bytes one token occupies across the whole stack (k + v, every
         # layer) — the unit behind the bytes_deduped gauge
         self.kv_bytes_per_token = (cfg.n_layers * 2 * cfg.n_kv_heads
@@ -150,6 +191,10 @@ class PagedEngine:
         self.block_row_writes = 0
         self.peak_pages = 0
         self.prefill_tokens = 0        # prompt tokens actually computed
+        # sequential model executions (a fused K-scan counts K): the
+        # denominator-side of dispatches_per_token, the observable
+        # speculative decoding attacks
+        self.model_passes = 0
         self.t0 = time.time()
 
     def reset_metrics(self):
@@ -165,6 +210,9 @@ class PagedEngine:
         self.h2d_syncs = self.d2h_syncs = self.block_row_writes = 0
         self.peak_pages = 0
         self.prefill_tokens = 0
+        self.model_passes = 0
+        if self.spec is not None:
+            self.spec.stats = SpecStats()
         if self.cache is not None:
             from repro.serving.prefix_cache import PrefixCacheStats
             self.cache.stats = PrefixCacheStats()
@@ -299,24 +347,40 @@ class PagedEngine:
         self.submit(variant, gen, rid=f"warmsfx{self._n_warm}b")
         self.run()
 
+    def verify_buckets(self) -> List[int]:
+        """The pow2 verify widths speculation will dispatch — derived
+        from the same ``_pow2_ceil`` rule the runtime uses for drafts of
+        1..spec_k tokens plus the last emitted token, so warmup can
+        never compile a different width set than the decode loop
+        requests."""
+        if self.spec is None:
+            return []
+        return sorted({self._pow2_ceil(m + 1)
+                       for m in range(1, self.spec.k + 1)})
+
     def warmup_windows(self):
-        """Compile every scan bucket against inactive slots (all-null
-        block rows write only the null page, whose garbage is masked by
-        design) so trace timing is steady-state."""
-        if not self.fused:
-            return
+        """Compile every scan bucket (and, with speculation on, every
+        verify bucket) against inactive slots / null rows — null-page
+        writes are masked by design — so trace timing is steady-state."""
         jnp = self._jnp
-        zeros_tok = jnp.zeros((self.max_batch, 1), jnp.int32)
-        zeros_pos = jnp.zeros((self.max_batch,), jnp.int32)
-        null_rows = jnp.full((self.max_batch, self.nmax), NULL_PAGE,
-                             jnp.int32)
-        inactive = jnp.zeros((self.max_batch,), jnp.int32)
-        for k in self.window_sizes():
-            toks, _, _, self.pools = self._scan(
-                self.params, zeros_tok, self.pools, null_rows, zeros_pos,
-                inactive, k=k)
-            np.asarray(toks)
-        self._dirty = True            # device state was clobbered
+        if self.fused or self.spec is not None:
+            zeros_tok = jnp.zeros((self.max_batch, 1), jnp.int32)
+            zeros_pos = jnp.zeros((self.max_batch,), jnp.int32)
+            null_rows = jnp.full((self.max_batch, self.nmax), NULL_PAGE,
+                                 jnp.int32)
+            inactive = jnp.zeros((self.max_batch,), jnp.int32)
+            for k in self.window_sizes():
+                toks, _, _, self.pools = self._scan(
+                    self.params, zeros_tok, self.pools, null_rows,
+                    zeros_pos, inactive, k=k)
+                np.asarray(toks)
+            self._dirty = True        # device state was clobbered
+        null_row = jnp.full((self.nmax,), NULL_PAGE, jnp.int32)
+        for w in self.verify_buckets():
+            logits, self.pools = self._verify(
+                self.params, jnp.zeros((1, w), jnp.int32), self.pools,
+                null_row, jnp.int32(0), jnp.int32(1))
+            np.asarray(logits)
 
     # -- prefill (full, or cached-prefix COW + suffix) ---------------------
     def _do_prefill(self, req: Request, row: np.ndarray, jnp) -> int:
@@ -333,6 +397,7 @@ class PagedEngine:
                 self.params, jnp.asarray(req.prompt[None]), self.pools,
                 jnp.asarray(row))
             self.h2d_syncs += 1        # prompt + block row push
+            self.model_passes += 1
             tok = int(jnp.argmax(logits, -1)[0, 0])
             self.d2h_syncs += 1        # blocking first-token pull
             self.prefill_tokens += req.prompt_len
@@ -348,13 +413,14 @@ class PagedEngine:
             self.cache.release_cow(match)
         suffix = np.asarray(req.prompt[L:], np.int32)
         slen = int(suffix.shape[0])
-        k = 1 << max(slen - 1, 0).bit_length()      # pow2 bucket >= slen
+        k = self._pow2_ceil(slen)
         padded = np.zeros((1, k), np.int32)
         padded[0, :slen] = suffix
         logits, self.pools = self._suffix(
             self.params, jnp.asarray(padded), self.pools, jnp.asarray(row),
             jnp.int32(L), jnp.int32(slen))
         self.h2d_syncs += 1            # suffix + block row push
+        self.model_passes += 1
         tok = int(jnp.argmax(logits, -1)[0, 0])
         self.d2h_syncs += 1            # blocking first-token pull
         self.prefill_tokens += slen
@@ -367,12 +433,166 @@ class PagedEngine:
         # log2(max_window)+1 scan shapes ever compile
         return 1 << (max(k, 1).bit_length() - 1)
 
+    @staticmethod
+    def _pow2_ceil(n: int) -> int:
+        # smallest power of two >= n: the ONE bucket rule shared by the
+        # suffix-prefill widths, the verify widths and verify warmup
+        return 1 << max(n - 1, 0).bit_length()
+
     def _pick_window(self, max_window: Optional[int]) -> int:
         cap = self.max_window if max_window is None \
             else max(1, min(self.max_window, max_window))
         # quantizing inside safe_horizon keeps page reservation exact:
         # only the dispatched window's pages are grabbed ahead of need
         return self.sched.safe_horizon(cap, quantize=self._pow2_floor)
+
+    def _spec_window(self, max_window: Optional[int]) -> List[Request]:
+        """One speculative decode window.
+
+        Each running slot drafts up to K tokens from its own
+        prompt+output history (weightless n-gram lookup); drafting slots
+        are verified one dispatch each (``verify_window_paged`` scores
+        all K+1 positions in one model pass), non-drafting slots ride
+        the normal fused scan with the drafting slots masked to null
+        rows (their in-scan writes land on the null page, masked by
+        design).  Speculation depth is capped by the scheduler's
+        ``safe_horizon`` — no scheduling event can land inside the
+        window, and every write position is page-reserved up front —
+        and rejected drafts roll their whole pages back via
+        ``PageAllocator.truncate_to``.  Emitted tokens are bit-identical
+        to the plain path by the acceptance rule
+        (:meth:`repro.serving.spec_decode.NGramSpec.accept`)."""
+        jnp = self._jnp
+        finished: List[Request] = []
+        cap = max(self.max_window, self.spec.k + 1)
+        if max_window is not None:
+            cap = max(1, min(cap, max_window))
+        # exact reservation (no pow2 quantize): a verify may write any of
+        # the k horizon positions, so the horizon's pages are the
+        # window's.  Deliberate tradeoff: drafts are not known yet, so
+        # slots that end up riding the (possibly smaller, pow2-floored)
+        # scan hold their horizon pages one window early — a few pages
+        # of extra pressure; under a dry pool the horizon shrinks the
+        # same way the plain path's does
+        k = self.sched.safe_horizon(cap)
+        self._refresh_slots()
+        active = dict(self.sched.running)
+        drafts: Dict[int, List[int]] = {}
+        for slot, req in active.items():
+            d = self.spec.propose(req.prompt, req.tokens, k - 1)
+            if d:
+                drafts[slot] = d
+        kk_est = self._pow2_floor(min(k, self.max_window)) if self.fused \
+            else 1
+        if drafts:
+            # pay a verify pass only where it beats the scan it
+            # displaces.  When every slot drafts deeply (mean potential
+            # emission > batch width) the B verifies replace the scan
+            # outright and win; otherwise the scan runs anyway, so a
+            # draft is worth its +1 pass only if it can emit more than
+            # the scan window already gives that slot for free —
+            # without this gate, wide batches of shallow drafts COST
+            # passes instead of saving them
+            all_draft = len(drafts) == len(active)
+            deep = sum(len(d) + 1 for d in drafts.values()) \
+                > len(active) * len(active)
+            if not (all_draft and deep):
+                drafts = {s: d for s, d in drafts.items()
+                          if len(d) + 1 > kk_est}
+        scan_slots = [s for s in active if s not in drafts]
+        t_dec = time.time()
+        advanced = 0          # scheduler-clock steps complete_step took
+        emitted_max = 0       # largest per-slot emission this window
+        if scan_slots:
+            kk = kk_est
+            if drafts:
+                # ONE sync event: canonical tokens/pos plus this window's
+                # masked rows/mask (drafting slots write the null page);
+                # the canonical d_block/d_active stay host-side — the
+                # _dirty fold below re-pushes them next plain window
+                bt = self.block_tables.copy()
+                act = self.active.copy()
+                for s in drafts:
+                    bt[s] = NULL_PAGE
+                    act[s] = 0
+                self.d_tokens = jnp.asarray(self.tokens)
+                self.d_pos = jnp.asarray(self.pos)
+                d_bt, d_act = jnp.asarray(bt), jnp.asarray(act)
+                self.h2d_syncs += 1
+            else:
+                self._push(force=not self.fused)
+                d_bt, d_act = self.d_block, self.d_active
+            toks, d_tok, d_pos, self.pools = self._scan(
+                self.params, self.d_tokens, self.pools, d_bt, self.d_pos,
+                d_act, k=kk)
+            tok_np = np.asarray(toks).reshape(self.max_batch, kk)
+            self.d2h_syncs += 1
+            self.decode_steps += kk
+            self.model_passes += kk
+            self.windows_run += 1
+            for j in range(kk):
+                emitted: Dict[int, int] = {s: int(tok_np[s, j])
+                                           for s in scan_slots}
+                self.decode_tokens += len(emitted)
+                self.tokens_emitted += len(emitted)
+                finished += self.sched.complete_step(emitted)
+            advanced = emitted_max = kk
+            if not drafts:
+                # pure scan window: adopt the device carry, exactly like
+                # the plain fused path
+                self.d_tokens, self.d_pos = d_tok, d_pos
+        for slot in sorted(drafts):
+            req = active[slot]
+            d = drafts[slot]
+            m = len(d)
+            W = self._pow2_ceil(m + 1)
+            padded = np.zeros((1, W), np.int32)
+            padded[0, 0] = req.tokens[-1]
+            padded[0, 1:m + 1] = d
+            logits, self.pools = self._verify(
+                self.params, jnp.asarray(padded), self.pools,
+                jnp.asarray(self.block_tables[slot]), jnp.int32(req.pos),
+                jnp.int32(m + 1))
+            self.h2d_syncs += 1           # draft + block row push
+            greedy = np.asarray(jnp.argmax(logits[0, :m + 1], -1),
+                                np.int32)
+            self.d2h_syncs += 1           # blocking verdict pull
+            self.decode_steps += 1
+            self.model_passes += 1
+            self.windows_run += 1         # a verify IS a device dispatch
+            out = self.spec.accept(d, greedy)
+            self.decode_tokens += len(out)
+            self.tokens_emitted += len(out)
+            finished += self.sched.complete_spec(req, out)
+            if req.state == "running" and len(out) <= m:
+                # rejected drafts: release their whole pages (the kept
+                # tail page's stale slots are masked by position and
+                # overwritten before the write position reaches them)
+                if self.alloc.truncate_to(req.rid, req.pos):
+                    self.spec.stats.rollbacks += 1
+                # pop-then-regrow can restore the same page COUNT with
+                # different physical pages — invisible to the (rid,
+                # preemptions, len) signature — so forget it: the next
+                # refresh must rewrite the device block row
+                self._slot_sig[req.slot] = None
+            emitted_max = max(emitted_max, len(out))
+        if drafts:
+            # the device carry is stale for drafting slots (and the scan
+            # saw masked rows): fold the mirror and re-push next window
+            for slot, req in self.sched.running.items():
+                self.tokens[slot, 0] = req.tokens[-1] if req.tokens else 0
+                self.pos[slot] = req.pos
+            self._dirty = True
+        else:
+            for slot, req in self.sched.running.items():
+                self.tokens[slot, 0] = int(tok_np[slot, advanced - 1])
+                self.pos[slot] = req.pos
+        self.decode_time_s += time.time() - t_dec
+        # the window consumed max(scan depth, deepest verified emission)
+        # scheduler-clock steps; complete_step already advanced `advanced`
+        self.sched.step_idx += max(emitted_max - advanced, 0)
+        self.steps_run += max(emitted_max, 1)
+        return finished
 
     def step(self, max_window: Optional[int] = None) -> List[Request]:
         """Plan, prefill admissions, decode one fused window (or one
@@ -402,7 +622,9 @@ class PagedEngine:
                 self._occupy_slot(req, row, tok)
             else:                          # gen == 1: finished at prefill
                 finished.append(req)
-        if self.sched.running:
+        if self.sched.running and self.spec is not None:
+            finished += self._spec_window(max_window)
+        elif self.sched.running:
             k = self._pick_window(max_window) if self.fused else 1
             self._refresh_slots()
             active = dict(self.sched.running)
@@ -424,6 +646,7 @@ class PagedEngine:
             self.decode_time_s += time.time() - t_dec
             tok_np = tok_np.reshape(self.max_batch, k)
             self.decode_steps += k
+            self.model_passes += k
             self.windows_run += 1
             for j in range(k):
                 emitted: Dict[int, int] = {s: int(tok_np[s, j])
@@ -485,6 +708,11 @@ class PagedEngine:
             "syncs_per_token": (self.h2d_syncs + self.d2h_syncs)
             / max(emitted, 1),
             "block_row_writes": self.block_row_writes,
+            # sequential model executions per emitted token — the
+            # dispatch-amortization observable speculation attacks
+            # (a fused K-scan is K passes; a K+1-wide verify is ONE)
+            "model_passes": self.model_passes,
+            "dispatches_per_token": self.model_passes / max(emitted, 1),
             "ttft_steps_mean": float(np.mean(ttft)) if ttft else 0.0,
             "ttft_steps_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
             "pages_in_use": self.alloc.pages_in_use,
@@ -494,6 +722,15 @@ class PagedEngine:
             "preemptions": sum(r.preemptions for r in self.sched.all_requests),
             "prefill_tokens": self.prefill_tokens,
         }
+        if self.spec is not None:
+            s = self.spec.stats
+            out.update({
+                "spec_drafted": s.drafted,
+                "spec_accepted": s.accepted,
+                "spec_verifies": s.verifies,
+                "spec_rollbacks": s.rollbacks,
+                "accept_rate": s.accept_rate,
+            })
         if self.cache is not None:
             out.update(self.cache.metrics())
             out["bytes_deduped"] = (self.cache.stats.tokens_cached

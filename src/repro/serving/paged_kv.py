@@ -199,6 +199,26 @@ class PageAllocator:
             pass
         return len(self.held[rid]) * self.page_size
 
+    def truncate_to(self, rid: str, n_tokens: int) -> int:
+        """Speculative rollback: shrink ``rid``'s allocation to exactly
+        the pages covering token positions below ``n_tokens`` (whole
+        rejected/over-reserved tail pages are released).  Only this
+        request's references are dropped — a tail page another holder
+        shares survives via its refcount (``release_page`` semantics),
+        and the null page is never involved because it is never held.
+        KV slots past ``n_tokens`` inside the *kept* tail page are not
+        wiped: they are masked by position and overwritten before the
+        sequence's write position ever reaches them (the same argument
+        as COW page copies).  Returns how many pages actually returned
+        to the free list."""
+        pages = self.held[rid]
+        keep = -(-max(n_tokens, 0) // self.page_size)
+        freed = 0
+        while len(pages) > keep:
+            if self.release_page(pages.pop()):
+                freed += 1
+        return freed
+
     def free(self, rid: str) -> int:
         """Release every reference ``rid`` holds; returns how many pages
         actually returned to the free list (shared pages survive until

@@ -31,6 +31,13 @@ tenant) still holds never return to the free list, and the pool-pressure
 loop falls through to LRU cache eviction (``PageAllocator.reclaim``)
 before killing further tenants.
 
+Speculative decoding (:mod:`repro.serving.spec_decode`): the scheduler
+records verified multi-token emissions through :meth:`complete_spec` —
+each token in the batch is the greedy argmax at its position, so the
+conservation and recompute-exactness properties are unchanged; only the
+clock bookkeeping differs (the engine advances ``step_idx`` once per
+window by the deepest per-slot emission).
+
 Pure host-side state machine: no jax imports.  The engine applies the
 returned plan to device arrays.
 """
@@ -300,6 +307,23 @@ class ContinuousBatchScheduler:
                 done.append(req)
         self.step_idx += 1
         return done
+
+    def complete_spec(self, req: Request, tokens: List[int]) -> List[Request]:
+        """Record one verified speculative emission for ONE request:
+        ``tokens`` is the accepted draft prefix plus the verifier's
+        bonus/correction token — every element is the greedy argmax of
+        the model at its position, so speculation never changes emitted
+        tokens, only how many model passes produced them.  The verify
+        dispatch wrote KV for positions ``pos .. pos+len(tokens)-2``
+        (the last token's KV is not yet written — the same invariant as
+        :meth:`complete_step`); rejected-draft KV past that is masked by
+        position and its whole pages are rolled back by the engine via
+        :meth:`PageAllocator.truncate_to`.  Does NOT advance
+        ``step_idx`` — the engine advances the clock once per window by
+        the largest per-slot emission.  Returns ``[req]`` on finish."""
+        req.pos += len(tokens)
+        req.tokens.extend(int(t) for t in tokens)
+        return [req] if self._maybe_finish(req) else []
 
     def _maybe_finish(self, req: Request) -> bool:
         if not req.done:

@@ -1,0 +1,119 @@
+"""Swallow §V applied to the model-dispatch "interconnect": weightless
+n-gram speculative decoding for the paged serving engine.
+
+The paper's throughput argument is about the communication-to-computation
+ratio: a fixed per-message overhead is amortized by making every message
+carry more useful payload.  PR 3 applied that to host<->device syncs
+(O(1)/window); this module applies it to *model dispatches per emitted
+token* — the remaining per-token fixed cost.  A decode step is one model
+pass for one token; speculative decoding turns it into one model pass
+for up to K+1 tokens: a draft of K tokens is *proposed for free* (no
+model, no weights — pure host-side string matching) and *verified in one
+batched dispatch* (:func:`repro.models.lm.verify_window_paged`, the same
+``apply_prefill_paged`` arithmetic as the prefix-cache suffix path), so
+the accepted prefix plus the verifier's own bonus/correction token all
+land from a single pass.
+
+Drafting is prompt-lookup (n-gram) speculation: match the last ``n``
+tokens of the sequence's own prompt+output history against an earlier
+occurrence in that same history, and propose the tokens that followed
+it.  Repetitive text — templated output, code, retrieval-heavy prompts,
+or the fixed-point loops greedy decode falls into — drafts almost
+perfectly; adversarial text drafts nothing and the engine degrades to
+the plain fused-window path.  Either way the *emitted* tokens are
+bit-identical to non-speculative greedy decode, because acceptance only
+keeps drafts that equal the verifier's greedy argmax and the first
+mismatch is replaced by that argmax (pinned by
+tests/test_spec_decode.py across prefix-cache hits, preemption and
+fused windows).
+
+Pure host-side logic: no jax imports.  The verify dispatch and the
+page rollback (:meth:`repro.serving.paged_kv.PageAllocator.truncate_to`)
+live in :mod:`repro.serving.engine`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+
+def propose_ngram(history: Sequence[int], k: int, *, max_n: int = 3,
+                  min_n: int = 1) -> List[int]:
+    """Prompt-lookup drafting: find the *earliest* earlier occurrence of
+    the history's last ``n`` tokens (longest ``n`` first, ``max_n`` down
+    to ``min_n``) and propose up to ``k`` tokens that followed it.
+    Earliest — not most recent — because the match nearest the end has
+    the least history left after it: on a looping sequence the latest
+    occurrence only ever yields a 1-token draft, while the earliest
+    yields the whole period.
+
+    Returns [] when nothing matches — the caller falls back to plain
+    decode.  O(n * len(history)) per candidate ``n``; histories are
+    bounded by the engine's ``max_len``, so this stays microseconds-cheap
+    next to a model dispatch.
+    """
+    L = len(history)
+    if k < 1 or L < min_n + 1:
+        return []
+    hist = [int(t) for t in history]
+    for n in range(min(max_n, L - 1), min_n - 1, -1):
+        pattern = hist[L - n:]
+        for i in range(L - n):
+            if hist[i:i + n] == pattern:
+                return hist[i + n:i + n + k]
+    return []
+
+
+@dataclass
+class SpecStats:
+    """Acceptance accounting for the engine's ``accept_rate`` /
+    ``dispatches_per_token`` observables."""
+    drafted: int = 0       # draft tokens proposed to the verifier
+    accepted: int = 0      # draft tokens the verifier kept
+    verifies: int = 0      # verification dispatches run
+    rollbacks: int = 0     # verifies that released rejected pages
+
+    @property
+    def accept_rate(self) -> float:
+        return self.accepted / max(self.drafted, 1)
+
+
+class NGramSpec:
+    """Per-engine speculative-decoding policy: draft depth, n-gram
+    bounds, and acceptance stats.  Weightless — the proposer never
+    touches model state, only the request's token history."""
+
+    def __init__(self, k: int = 8, max_n: int = 3, min_n: int = 1):
+        assert k >= 1 and max_n >= min_n >= 1
+        self.k = k
+        self.max_n = max_n
+        self.min_n = min_n
+        self.stats = SpecStats()
+
+    def propose(self, prompt: Sequence[int], tokens: Sequence[int],
+                k_cap: int) -> List[int]:
+        """Draft up to ``min(self.k, k_cap)`` tokens from the sequence's
+        own prompt+output history."""
+        k = min(self.k, k_cap)
+        if k < 1:
+            return []
+        history = [int(t) for t in prompt] + [int(t) for t in tokens]
+        return propose_ngram(history, k, max_n=self.max_n,
+                             min_n=self.min_n)
+
+    def accept(self, draft: Sequence[int],
+               greedy: Sequence[int]) -> List[int]:
+        """Greedy acceptance rule: keep the longest draft prefix that
+        matches the verifier's argmax at each position, then append the
+        verifier's own token at the first mismatch (or the bonus token
+        when everything matched).  The result is therefore *exactly*
+        the token sequence non-speculative greedy decode would emit —
+        speculation changes dispatch count, never tokens."""
+        a = 0
+        while a < len(draft) and int(greedy[a]) == int(draft[a]):
+            a += 1
+        emitted = [int(t) for t in draft[:a]] + [int(greedy[a])]
+        self.stats.drafted += len(draft)
+        self.stats.accepted += a
+        self.stats.verifies += 1
+        return emitted

@@ -110,6 +110,24 @@ def make_paged_suffix_prefill(cfg: ModelConfig):
     return suffix_prefill
 
 
+def make_verify_window(cfg: ModelConfig):
+    """Speculative-decoding verification window (one sequence, one
+    dispatch).
+
+    (params, tokens (1,W) [last token + K padded drafts], pools,
+     block_row (nmax,), start, n_valid) -> (logits (1,W,V) at every
+    position, updated pools).  Reuses the suffix-prefill layer path
+    (``attention.apply_prefill_paged``) so scoring K+1 positions costs
+    one model pass with decode-identical arithmetic.  Jit with the pools
+    donated; the padded width W is the only retrace axis (the engine
+    buckets it to powers of two).
+    """
+    def verify_window(params, tokens, pools, block_row, start, n_valid):
+        return lm.verify_window_paged(params, cfg, tokens, pools,
+                                      block_row, start, n_valid)
+    return verify_window
+
+
 def make_page_copy():
     """Copy-on-write: duplicate one physical page across every layer's
     k/v pool in a single device dispatch.

@@ -1,13 +1,34 @@
-"""Test fixtures.  NOTE: no XLA_FLAGS here — tests must see ONE device;
-multi-device behaviour is tested via subprocesses (test_multidevice.py)."""
+"""Shared test fixtures and serving-test helpers.
+
+NOTE: no XLA_FLAGS here — tests must see ONE device; multi-device
+behaviour is tested via subprocesses (test_multidevice.py).
+
+The serving suites (test_serving.py, test_prefix_cache.py,
+test_spec_decode.py, test_serving_fuzz.py) share one tiny config + one
+set of params (``get_tiny_model``), one prompt builder
+(``seeded_prompts``), one engine factory (``make_engine``) and one
+greedy reference (``dense_oracle``) — the
+dense oracle is the root of the exactness ladder documented in
+docs/TESTING.md (dense -> paged -> fused -> cached -> speculative).
+Engines built from the same config share jitted step functions
+(``repro.serving.engine._jitted_steps``), so the first test pays the
+compile and the rest run warm.
+"""
 import os
 import sys
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+
+TINY_ARCH = "tiny-100m"
+_TINY = {}
+_DENSE_STEPS = {}
 
 
 @pytest.fixture(scope="session")
@@ -28,3 +49,95 @@ def make_batch(cfg, B=2, S=64, seed=7):
         import repro.models.lm as lm
         batch["positions"] = lm.default_positions(cfg, B, S)
     return batch
+
+
+# --- shared serving fixtures ---------------------------------------------------
+def get_tiny_model():
+    """(cfg, params) for the tiny serving config — initialized once per
+    process.  Module-level (not only a fixture) so helpers and
+    module-scope oracles can reach it too."""
+    if "cfg" not in _TINY:
+        from repro.configs import get_tiny_config
+        from repro.models import lm
+        cfg = get_tiny_config(TINY_ARCH)
+        _TINY["cfg"] = cfg
+        _TINY["params"] = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return _TINY["cfg"], _TINY["params"]
+
+
+def seeded_prompts(cfg, n, length, *, seed=0, shared=0, motif=0):
+    """``n`` deterministic int32 prompts of ``length`` tokens.
+
+    ``shared`` > 0 gives every prompt the same leading tokens (prefix-
+    cache fodder; pick a non-page-aligned value to force COW).
+    ``motif`` > 0 instead tiles a per-prompt ``motif``-token pattern
+    (speculation fodder: n-gram lookup drafts the period).
+    """
+    out = []
+    base = None
+    if shared > 0:
+        base = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(seed + 10_000), (min(shared, length),), 2,
+            cfg.vocab_size), np.int32)
+    for i in range(n):
+        if motif > 0:
+            pat = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(seed + i), (motif,), 2,
+                cfg.vocab_size), np.int32)
+            p = np.tile(pat, -(-length // motif))[:length]
+        else:
+            tail_len = length - (len(base) if base is not None else 0)
+            tail = np.asarray(jax.random.randint(
+                jax.random.PRNGKey(seed + i), (tail_len,), 2,
+                cfg.vocab_size), np.int32)
+            p = tail if base is None else np.concatenate([base, tail])
+        out.append(np.asarray(p, np.int32))
+    return out
+
+
+def make_engine(cfg, params, **kw):
+    """PagedEngine with small-test defaults; any kwarg overrides."""
+    from repro.serving import PagedEngine
+    defaults = dict(max_batch=3, page_size=4, n_pages=48, max_len=32)
+    defaults.update(kw)
+    return PagedEngine(cfg, params, **defaults)
+
+
+def dense_oracle(cfg, params, prompts, gens, max_len):
+    """Greedy reference through the dense (non-paged) path: request i ->
+    ``"r{i}"`` -> its token list.  ``gens`` is an int or a per-request
+    list.  This is the root oracle every serving configuration must
+    match bit-for-bit."""
+    from repro import steps as steps_mod
+    key = (cfg, max_len)
+    if key not in _DENSE_STEPS:
+        _DENSE_STEPS[key] = (
+            jax.jit(steps_mod.make_prefill_step(cfg, max_len=max_len)),
+            jax.jit(steps_mod.make_serve_step(cfg)))
+    prefill, serve = _DENSE_STEPS[key]
+    if isinstance(gens, int):
+        gens = [gens] * len(prompts)
+    out = {}
+    for i, (p, gen) in enumerate(zip(prompts, gens)):
+        p = jnp.asarray(p)
+        S = p.shape[0]
+        logits, caches = prefill(params, p[None])
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [int(tok[0, 0])]
+        for j in range(gen - 1):
+            tok, logits, caches = serve(params, tok, caches,
+                                        jnp.int32(S + j))
+            toks.append(int(tok[0, 0]))
+        out[f"r{i}"] = toks
+    return out
+
+
+def run_example(name: str, timeout: int = 300):
+    """Run examples/<name> in a subprocess with src on PYTHONPATH."""
+    import subprocess
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    return subprocess.run(
+        [sys.executable, os.path.join(ROOT, "examples", name)],
+        cwd=ROOT, env=env, capture_output=True, text=True, timeout=timeout)

@@ -1,28 +1,33 @@
-"""Smoke tests for examples/ — each example must run end to end (they
-carry their own internal assertions, e.g. shared_memory.py checks store
-semantics and cache-on/off token identity)."""
+"""Smoke tests for examples/ and benchmark CLIs — each example must run
+end to end (they carry their own internal assertions, e.g.
+shared_memory.py checks store semantics and cache-on/off token
+identity).  The subprocess runner lives in conftest.run_example."""
 import os
 import subprocess
 import sys
 
 import pytest
 
-ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
-
-
-def _run_example(name: str, timeout: int = 300):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
-        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-    return subprocess.run(
-        [sys.executable, os.path.join(ROOT, "examples", name)],
-        cwd=ROOT, env=env, capture_output=True, text=True, timeout=timeout)
+from conftest import ROOT, run_example
 
 
 def test_shared_memory_example_runs():
-    proc = _run_example("shared_memory.py")
+    proc = run_example("shared_memory.py")
     assert proc.returncode == 0, proc.stderr[-2000:]
     out = proc.stdout
     assert "semantics check OK" in out
     assert "tokens identical with cache on/off: True" in out
     assert "hit rate" in out
+
+
+def test_bench_run_only_rejects_unknown_section():
+    """benchmarks/run.py --only with a name matching no section must
+    fail loudly (listing the valid titles), not silently run nothing."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks", "run.py"),
+         "--only", "definitely-not-a-section"],
+        cwd=ROOT, capture_output=True, text=True, timeout=120)
+    assert proc.returncode != 0
+    err = proc.stderr + proc.stdout
+    assert "definitely-not-a-section" in err
+    assert "micro: serve" in err        # valid titles are listed

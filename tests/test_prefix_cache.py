@@ -7,6 +7,7 @@ import jax
 import numpy as np
 import pytest
 
+from conftest import get_tiny_model, make_engine
 from repro.serving import (ContinuousBatchScheduler, PageAllocator,
                            PagedEngine, PrefixCache, Request)
 
@@ -238,25 +239,11 @@ def test_preempt_before_first_token_releases_cow_reference():
 
 
 # --- engine acceptance gate: cache on == cache off, bit for bit ---------------
-CFG = None
-PARAMS = None
-
-
-def _engine_fixture():
-    global CFG, PARAMS
-    if CFG is None:
-        from repro.configs import get_tiny_config
-        from repro.models import lm
-        CFG = get_tiny_config("tiny-100m")
-        PARAMS = lm.init_params(jax.random.PRNGKey(0), CFG)
-    return CFG, PARAMS
-
-
 def _run_engine(prompts, gens, *, cache, n_pages, max_batch=3, page_size=4,
                 max_len=None, budget=2.0, fused=True):
-    cfg, params = _engine_fixture()
+    cfg, params = get_tiny_model()
     max_len = max_len or max(p.shape[0] + g for p, g in zip(prompts, gens))
-    eng = PagedEngine(cfg, params, max_batch=max_batch, page_size=page_size,
+    eng = make_engine(cfg, params, max_batch=max_batch, page_size=page_size,
                       n_pages=n_pages, max_len=max_len, fused=fused,
                       prefill_budget=budget, prefix_cache=cache)
     for i, (p, g) in enumerate(zip(prompts, gens)):
@@ -268,7 +255,7 @@ def _run_engine(prompts, gens, *, cache, n_pages, max_batch=3, page_size=4,
 def _shared_prefix_prompts(n, total=14, shared=10, seed=0):
     """n prompts sharing a ``shared``-token prefix that is NOT page
     aligned (page_size=4): divergence lands inside a page -> forced COW."""
-    cfg, _ = _engine_fixture()
+    cfg, _ = get_tiny_model()
     base = np.asarray(jax.random.randint(jax.random.PRNGKey(seed), (shared,),
                                          2, cfg.vocab_size), np.int32)
     out = []
@@ -299,7 +286,7 @@ def test_engine_cache_hits_donated_partial_tail():
     """A follow-up prompt that extends a finished request's sequence
     (prompt + its generated tokens) hits the donated pages, including a
     COW off the partially filled tail page."""
-    cfg, params = _engine_fixture()
+    cfg, params = get_tiny_model()
     S, gen = 9, 5
     p0 = np.asarray(jax.random.randint(jax.random.PRNGKey(9), (S,), 2,
                                        cfg.vocab_size), np.int32)
@@ -328,7 +315,7 @@ def test_engine_tokens_identical_under_preemption_and_eviction():
     """Tight pool: page pressure drives tenant preemption (cache off)
     and LRU cache eviction (cache on, distinct prompts bloat the tree) —
     tokens still match the cache-off run exactly."""
-    cfg, _ = _engine_fixture()
+    cfg, _ = get_tiny_model()
     prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(70 + i),
                                              (12,), 2, cfg.vocab_size),
                np.int32) for i in range(6)]
@@ -363,8 +350,8 @@ def test_engine_preempted_request_recomputes_exactly_through_cache():
 
 
 def test_engine_cache_off_by_default_and_metrics_gated():
-    cfg, params = _engine_fixture()
-    eng = PagedEngine(cfg, params, max_batch=2, page_size=4, n_pages=16,
+    cfg, params = get_tiny_model()
+    eng = make_engine(cfg, params, max_batch=2, page_size=4, n_pages=16,
                       max_len=16)
     assert eng.cache is None
     assert "prefix_hit_rate" not in eng.metrics()

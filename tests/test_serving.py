@@ -1,10 +1,14 @@
 """Paged-KV serving engine: allocator striping, paged-vs-dense numerics,
-scheduler conservation under preemption, trace-replay smoke."""
+scheduler conservation under preemption, trace-replay smoke.
+
+Shared fixtures (tiny model, prompts, dense oracle) live in conftest.py
+— docs/TESTING.md documents the oracle ladder they anchor."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import dense_oracle, get_tiny_model, seeded_prompts
 from repro.core.memory_server import striped_owner
 from repro.serving import (ContinuousBatchScheduler, NULL_PAGE,
                            PageAllocator, PagedEngine, Request)
@@ -141,33 +145,14 @@ def test_paged_decode_ignores_null_page_garbage():
 
 
 # --- engine: paged and dense produce identical tokens -------------------------
-def _dense_reference(cfg, params, prompts, gen, max_len):
-    from repro import steps as steps_mod
-    prefill = jax.jit(steps_mod.make_prefill_step(cfg, max_len=max_len))
-    serve = jax.jit(steps_mod.make_serve_step(cfg))
-    out = {}
-    for i, p in enumerate(prompts):
-        S = p.shape[0]
-        logits, caches = prefill(params, p[None])
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        toks = [int(tok[0, 0])]
-        for j in range(gen - 1):
-            tok, logits, caches = serve(params, tok, caches, jnp.int32(S + j))
-            toks.append(int(tok[0, 0]))
-        out[f"r{i}"] = toks
-    return out
 
 
 def test_paged_engine_tokens_match_dense_under_preemption():
-    from repro.configs import get_tiny_config
-    from repro.models import lm
-    cfg = get_tiny_config("tiny-100m")
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = get_tiny_model()
     S, gen, n_req = 12, 6, 6
     max_len = S + gen
-    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
-                                  cfg.vocab_size) for i in range(n_req)]
-    dense = _dense_reference(cfg, params, prompts, gen, max_len)
+    prompts = seeded_prompts(cfg, n_req, S)
+    dense = dense_oracle(cfg, params, prompts, gen, max_len)
     # tight pool + unthrottled admission -> preemption must occur
     eng = PagedEngine(cfg, params, max_batch=3, page_size=4, n_pages=14,
                       max_len=max_len, prefill_budget=0.0)
@@ -185,14 +170,10 @@ def test_paged_engine_tokens_match_dense_under_preemption():
 def test_paged_engine_interleaves_arrivals():
     """A request submitted mid-flight is served without disturbing the
     tokens of in-flight requests (continuous batching, not batch swap)."""
-    from repro.configs import get_tiny_config
-    from repro.models import lm
-    cfg = get_tiny_config("tiny-100m")
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = get_tiny_model()
     S, gen = 8, 5
-    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
-                                  cfg.vocab_size) for i in range(3)]
-    dense = _dense_reference(cfg, params, prompts, gen, S + gen)
+    prompts = seeded_prompts(cfg, 3, S)
+    dense = dense_oracle(cfg, params, prompts, gen, S + gen)
     eng = PagedEngine(cfg, params, max_batch=2, page_size=4, n_pages=16,
                       max_len=S + gen)
     eng.submit(np.asarray(prompts[0]), gen, rid="r0")
@@ -217,18 +198,12 @@ def test_fused_windows_match_perstep_and_dense():
     completions land mid-trace and windows get cut to the horizon, and
     prompt_len == 2*page_size so windows start exactly on a page
     boundary and cross another one mid-window (pre-reserved)."""
-    from repro.configs import get_tiny_config
-    from repro.models import lm
-    cfg = get_tiny_config("tiny-100m")
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = get_tiny_model()
     S, page = 8, 4
     gens = [3, 5, 8, 2, 6, 4]
     max_len = S + max(gens)
-    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
-                                  cfg.vocab_size) for i in range(len(gens))]
-    dense = {}
-    for i, (p, g) in enumerate(zip(prompts, gens)):
-        dense[f"r{i}"] = _dense_reference(cfg, params, [p], g, max_len)["r0"]
+    prompts = seeded_prompts(cfg, len(gens), S)
+    dense = dense_oracle(cfg, params, prompts, gens, max_len)
 
     def run(fused):
         eng = PagedEngine(cfg, params, max_batch=3, page_size=page,
@@ -250,15 +225,11 @@ def test_fused_windows_match_dense_under_forced_preemption():
     """Same tight-pool trace as the per-step preemption gate, but with
     fused windows: horizon shrinks instead of preempting mid-window,
     and the recompute stays exact."""
-    from repro.configs import get_tiny_config
-    from repro.models import lm
-    cfg = get_tiny_config("tiny-100m")
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = get_tiny_model()
     S, gen, n_req = 12, 6, 6
     max_len = S + gen
-    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
-                                  cfg.vocab_size) for i in range(n_req)]
-    dense = _dense_reference(cfg, params, prompts, gen, max_len)
+    prompts = seeded_prompts(cfg, n_req, S)
+    dense = dense_oracle(cfg, params, prompts, gen, max_len)
     eng = PagedEngine(cfg, params, max_batch=3, page_size=4, n_pages=14,
                       max_len=max_len, prefill_budget=0.0, fused=True,
                       max_window=8)
@@ -275,13 +246,9 @@ def test_fused_windows_match_dense_under_forced_preemption():
 def test_fused_transfer_counters_drop_to_per_window():
     """Host<->device syncs: O(1 per token) per-step vs O(1 per window)
     fused — the transfer counter is the acceptance observable."""
-    from repro.configs import get_tiny_config
-    from repro.models import lm
-    cfg = get_tiny_config("tiny-100m")
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    cfg, params = get_tiny_model()
     S, gen = 8, 9          # first token at prefill + one full 8-window
-    prompts = [jax.random.randint(jax.random.PRNGKey(i), (S,), 2,
-                                  cfg.vocab_size) for i in range(2)]
+    prompts = seeded_prompts(cfg, 2, S)
 
     def run(fused):
         eng = PagedEngine(cfg, params, max_batch=2, page_size=4,
@@ -311,12 +278,8 @@ def test_fused_transfer_counters_drop_to_per_window():
 def test_metrics_count_emitted_tokens_in_flight():
     """tokens_out counts emitted work (prefill first token + decode),
     not just finished requests; finished-only is reported alongside."""
-    from repro.configs import get_tiny_config
-    from repro.models import lm
-    cfg = get_tiny_config("tiny-100m")
-    params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    prompt = jax.random.randint(jax.random.PRNGKey(0), (8,), 2,
-                                cfg.vocab_size)
+    cfg, params = get_tiny_model()
+    [prompt] = seeded_prompts(cfg, 1, 8)
     eng = PagedEngine(cfg, params, max_batch=2, page_size=4, n_pages=16,
                       max_len=16, fused=True, max_window=8)
     eng.submit(np.asarray(prompt), 6)

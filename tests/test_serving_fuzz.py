@@ -1,0 +1,88 @@
+"""Differential serving fuzz: one small randomized arrival trace
+replayed across the full flag cube {prefix-cache on/off} x {fused
+on/off} x {spec-decode on/off} — every configuration must emit greedy
+tokens identical to the dense oracle, request for request.
+
+The trace deliberately mixes the features' trigger conditions: shared
+prefixes that diverge mid-page (COW), motif-tiled prompts whose greedy
+continuations loop (speculation accepts), staggered arrivals (admission
+events cap fused windows and speculation horizons), and a pool small
+enough for growth pressure.  The oracle and each configuration's output
+are memoized per run so the 8-point cube costs one engine replay each,
+all sharing one compiled step set (conftest / engine._jitted_steps).
+"""
+import numpy as np
+import pytest
+
+from conftest import dense_oracle, get_tiny_model, make_engine, \
+    seeded_prompts
+
+PAGE = 4
+MAX_BATCH = 2
+N_PAGES = 26
+CUBE = [(pc, fz, sp) for pc in (False, True) for fz in (False, True)
+        for sp in (False, True)]
+
+_MEMO = {}
+
+
+def _trace():
+    """(prompts, gens, arrival steps) — deterministic, seeded."""
+    cfg, _ = get_tiny_model()
+    shared = seeded_prompts(cfg, 2, 12, shared=9, seed=21)   # mid-page COW
+    loops = seeded_prompts(cfg, 2, 12, motif=4, seed=33)     # spec fodder
+    plain = seeded_prompts(cfg, 2, 12, seed=45)
+    prompts = [shared[0], loops[0], plain[0], shared[1], loops[1],
+               plain[1]]
+    gens = [6, 9, 4, 7, 8, 5]
+    arrivals = [0, 0, 1, 3, 5, 9]
+    return prompts, gens, arrivals
+
+
+def _replay(prefix_cache, fused, spec):
+    """Drive the engine like the trace benchmark: submissions land when
+    the scheduler clock reaches their arrival step, windows never decode
+    past the next arrival."""
+    cfg, params = get_tiny_model()
+    prompts, gens, arrivals = _trace()
+    max_len = max(p.shape[0] + g for p, g in zip(prompts, gens))
+    eng = make_engine(cfg, params, max_batch=MAX_BATCH, page_size=PAGE,
+                      n_pages=N_PAGES, max_len=max_len, fused=fused,
+                      prefix_cache=prefix_cache, spec_decode=spec,
+                      spec_k=4, max_window=4)
+    pending = sorted(zip(arrivals, range(len(prompts))))
+    while pending or eng.sched.waiting or eng.sched.running:
+        while pending and pending[0][0] <= eng.sched.step_idx:
+            _, i = pending.pop(0)
+            eng.submit(np.asarray(prompts[i]), gens[i], rid=f"r{i}")
+        if eng.sched.waiting or eng.sched.running:
+            cap = pending[0][0] - eng.sched.step_idx if pending else None
+            eng.step(max_window=cap)
+        else:
+            eng.sched.step_idx += 1
+    assert eng.alloc.check_conservation()
+    if eng.cache is None:
+        assert eng.alloc.pages_in_use == 0
+    return eng, {r.rid: list(r.tokens) for r in eng.sched.finished}
+
+
+def _oracle():
+    if "oracle" not in _MEMO:
+        cfg, params = get_tiny_model()
+        prompts, gens, _ = _trace()
+        max_len = max(p.shape[0] + g for p, g in zip(prompts, gens))
+        _MEMO["oracle"] = dense_oracle(cfg, params, prompts, gens, max_len)
+    return _MEMO["oracle"]
+
+
+@pytest.mark.parametrize("prefix_cache,fused,spec", CUBE)
+def test_flag_cube_matches_dense_oracle(prefix_cache, fused, spec):
+    eng, toks = _replay(prefix_cache, fused, spec)
+    assert len(toks) == len(_oracle())
+    assert toks == _oracle(), (prefix_cache, fused, spec)
+    m = eng.metrics()
+    # the features actually engaged on their trigger configs
+    if prefix_cache:
+        assert m["prefix_hits"] >= 1
+    if spec:
+        assert m["spec_verifies"] >= 1 and m["accept_rate"] > 0.0

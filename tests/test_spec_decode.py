@@ -1,0 +1,256 @@
+"""N-gram speculative decoding: proposer semantics, rollback
+(``PageAllocator.truncate_to``) refcount safety, scheduler
+``complete_spec`` bookkeeping, and the acceptance gate — greedy tokens
+bit-identical with speculation on or off, under prefix-cache hits,
+forced preemption and fused windows, with ``dispatches_per_token``
+actually dropping on repetitive text."""
+import numpy as np
+import pytest
+
+from conftest import dense_oracle, get_tiny_model, make_engine, \
+    seeded_prompts
+from repro.serving import (ContinuousBatchScheduler, NGramSpec,
+                           PageAllocator, Request, propose_ngram)
+
+
+# --- proposer: weightless prompt-lookup drafting -------------------------------
+def test_propose_ngram_prefers_longest_ngram_and_earliest_match():
+    #          0  1  2  3  4  5  6  7
+    history = [1, 2, 3, 9, 1, 2, 3, 9]          # period-4 loop
+    # last 3 tokens [2,3,9] occur earliest at i=1 -> continuation from 4
+    assert propose_ngram(history, 4, max_n=3) == [1, 2, 3, 9]
+    # k is clipped at the end of history
+    assert propose_ngram(history, 99, max_n=3) == [1, 2, 3, 9]
+    # the n=2 pattern [1,2] matches earliest at i=1 -> continuation from 3
+    h = [5, 1, 2, 7, 7, 1, 2]
+    assert propose_ngram(h, 3, max_n=3) == [7, 7, 1]
+    # n=1 fallback when nothing longer matches
+    assert propose_ngram([4, 8, 4], 2, max_n=3) == [8, 4]
+
+
+def test_propose_ngram_empty_cases():
+    assert propose_ngram([], 4) == []
+    assert propose_ngram([7], 4) == []                 # no earlier history
+    assert propose_ngram([1, 2, 3], 0) == []           # k = 0
+    assert propose_ngram([1, 2, 3], 4) == []           # no repeat at all
+    # min_n=2 refuses a unigram-only match
+    assert propose_ngram([1, 5, 2, 5], 2, max_n=3, min_n=2) == []
+
+
+def test_ngram_spec_accept_rule_is_greedy_exact():
+    spec = NGramSpec(k=8)
+    # full accept: drafts match greedy everywhere -> drafts + bonus token
+    assert spec.accept([4, 5, 6], [4, 5, 6, 7]) == [4, 5, 6, 7]
+    # first mismatch replaced by the verifier's own token, rest dropped
+    assert spec.accept([4, 9, 6], [4, 5, 6, 7]) == [4, 5]
+    # immediate mismatch still emits exactly the greedy token
+    assert spec.accept([9], [4, 5]) == [4]
+    s = spec.stats
+    assert (s.drafted, s.accepted, s.verifies) == (7, 4, 3)
+    assert s.accept_rate == pytest.approx(4 / 7)
+
+
+# --- allocator: speculative rollback -------------------------------------------
+def test_truncate_to_releases_whole_rejected_pages():
+    a = PageAllocator(n_pages=12, page_size=4, n_nodes=2)
+    a.alloc("r", 5)                       # capacity 20 tokens
+    assert a.truncate_to("r", 9) == 2     # keep ceil(9/4) = 3 pages
+    assert len(a.held["r"]) == 3 and a.free_pages == 8
+    assert a.truncate_to("r", 9) == 0     # idempotent
+    assert a.truncate_to("r", 12) == 0    # already within bound
+    assert a.check_conservation()
+    a.free("r")
+    assert a.pages_in_use == 0
+
+
+def test_truncate_to_respects_refcounts_of_shared_pages():
+    a = PageAllocator(n_pages=12, page_size=4, n_nodes=1)
+    pages = list(a.alloc("r", 4))         # snapshot: held mutates in place
+    a.share(pages[3])                     # e.g. a cache node took the tail
+    freed = a.truncate_to("r", 4)         # drop pages 1..3 (keep 1)
+    assert freed == 2                     # the shared page did NOT free
+    assert a.refcount_of(pages[3]) == 1   # other holder's reference lives
+    assert len(a.held["r"]) == 1
+    assert a.check_conservation()
+    a.release_page(pages[3])
+    a.free("r")
+    assert a.free_pages == 11
+
+
+def test_truncate_to_zero_and_conservation():
+    a = PageAllocator(n_pages=8, page_size=4, n_nodes=1)
+    a.alloc("r", 3)
+    assert a.truncate_to("r", 0) == 3     # keep nothing
+    assert a.held["r"] == [] and a.check_conservation()
+    a.free("r")
+
+
+# --- scheduler: multi-token verified emission ----------------------------------
+def test_complete_spec_advances_pos_and_finishes():
+    a = PageAllocator(n_pages=16, page_size=4, n_nodes=1)
+    s = ContinuousBatchScheduler(a, max_batch=2)
+    s.submit(Request(rid="r", prompt_len=4, gen=6))
+    plan = s.plan_step()
+    req = plan.admitted[0]
+    s.note_first_token(req, 11)
+    assert req.pos == 4
+    assert s.complete_spec(req, [12, 13, 14]) == []
+    assert req.pos == 7 and req.tokens == [11, 12, 13, 14]
+    done = s.complete_spec(req, [15, 16])         # reaches gen = 6
+    assert done == [req] and req.state == "finished"
+    assert req.tokens == [11, 12, 13, 14, 15, 16]
+    assert a.pages_in_use == 0 and s.conserved(1)
+
+
+# --- engine acceptance gates: spec on == spec off == dense ---------------------
+def _run(prompts, gens, *, n_pages=48, budget=2.0, fused=True,
+         spec=False, cache=False, max_batch=3, spec_k=6, max_len=None):
+    cfg, params = get_tiny_model()
+    max_len = max_len or max(p.shape[0] + g for p, g in zip(prompts, gens))
+    eng = make_engine(cfg, params, max_batch=max_batch, n_pages=n_pages,
+                      max_len=max_len, prefill_budget=budget, fused=fused,
+                      spec_decode=spec, spec_k=spec_k, prefix_cache=cache)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        eng.submit(np.asarray(p), g, rid=f"r{i}")
+    fin = eng.run()
+    return eng, {r.rid: list(r.tokens) for r in fin}
+
+
+def test_spec_tokens_identical_and_dispatches_drop():
+    """The base gate: speculation on/off/dense all emit the same tokens,
+    and on the looping continuations the tiny model produces, verified
+    windows cut model passes per token."""
+    cfg, params = get_tiny_model()
+    S, gens = 12, [14, 12, 16, 10]
+    prompts = seeded_prompts(cfg, len(gens), S, motif=4)
+    max_len = S + max(gens)
+    dense = dense_oracle(cfg, params, prompts, gens, max_len)
+    eng_off, toks_off = _run(prompts, gens, spec=False)
+    eng_on, toks_on = _run(prompts, gens, spec=True)
+    assert toks_on == toks_off == dense
+    m_on, m_off = eng_on.metrics(), eng_off.metrics()
+    assert m_on["spec_verifies"] >= 1 and m_on["accept_rate"] > 0.0
+    assert m_on["model_passes"] < m_off["model_passes"]
+    assert m_on["dispatches_per_token"] < m_off["dispatches_per_token"]
+    assert eng_on.alloc.check_conservation()
+    assert eng_on.alloc.pages_in_use == 0
+
+
+def test_spec_tokens_identical_under_forced_preemption():
+    """Tight pool + unthrottled admission: preemption occurs with
+    speculation on, recompute (re-drafting from a shorter history) stays
+    bit-exact, and every page is returned."""
+    cfg, params = get_tiny_model()
+    S, gen, n_req = 12, 6, 6
+    max_len = S + gen
+    prompts = seeded_prompts(cfg, n_req, S)
+    dense = dense_oracle(cfg, params, prompts, gen, max_len)
+    eng, toks = _run(prompts, [gen] * n_req, n_pages=14, budget=0.0,
+                     spec=True)
+    assert toks == dense
+    assert eng.metrics()["preemptions"] >= 1
+    assert eng.alloc.check_conservation() and eng.alloc.pages_in_use == 0
+
+
+def test_spec_tokens_identical_with_prefix_cache_hits():
+    """Speculation composed with COW prefix sharing: hits skip prefill,
+    drafts verify against pages that start shared, and tokens still
+    match the all-off run exactly."""
+    cfg, params = get_tiny_model()
+    total, shared = 14, 10            # divergence mid-page (page_size 4)
+    gens = [10, 9, 11, 8]
+    prompts = seeded_prompts(cfg, len(gens), total, shared=shared, seed=3)
+    eng_off, toks_off = _run(prompts, gens)
+    eng_on, toks_on = _run(prompts, gens, spec=True, cache=True)
+    assert toks_on == toks_off
+    m = eng_on.metrics()
+    assert m["prefix_hits"] >= 1
+    assert m["spec_verifies"] >= 1
+    assert eng_on.alloc.check_conservation()
+    assert eng_on.alloc.pages_in_use == eng_on.cache.shared_pages
+
+
+def test_spec_rollback_releases_pages_and_stays_exact():
+    """A rejected draft that crossed a page boundary rolls whole pages
+    back to the free list (truncate_to) without perturbing tokens."""
+    cfg, params = get_tiny_model()
+    S, gens = 12, [18, 16]
+    prompts = seeded_prompts(cfg, len(gens), S, motif=3, seed=11)
+    max_len = S + max(gens)
+    dense = dense_oracle(cfg, params, prompts, gens, max_len)
+    eng, toks = _run(prompts, gens, spec=True, spec_k=8, max_batch=2)
+    assert toks == dense
+    m = eng.metrics()
+    assert m["spec_rollbacks"] >= 1, "trace never exercised rollback"
+    assert eng.alloc.check_conservation() and eng.alloc.pages_in_use == 0
+
+
+def test_spec_forced_rejection_invalidates_row_signature_and_stays_exact():
+    """Adversarial proposer: every draft is wrong, so every verify
+    rejects and rolls pages back.  Pop-then-regrow can restore the same
+    page COUNT with different physical pages — invisible to the (rid,
+    preemptions, len) dirty-tracking signature — so the engine must
+    forget the slot signature on rollback (or a stale device block row
+    would write one tenant's KV into another's page).  Tokens must stay
+    bit-identical to dense throughout, and the signature must be
+    observed invalidated on a rollback window."""
+    cfg, params = get_tiny_model()
+    S, gen, n_req = 8, 8, 3
+    max_len = S + gen
+    prompts = seeded_prompts(cfg, n_req, S, seed=5)
+    dense = dense_oracle(cfg, params, prompts, gen, max_len)
+    eng = make_engine(cfg, params, max_batch=2, n_pages=13,
+                      max_len=max_len, prefill_budget=0.0,
+                      spec_decode=True, spec_k=4)
+
+    def wrong(prompt, tokens, k_cap):
+        if k_cap < 1 or not tokens:
+            return []
+        return [(int(tokens[-1]) + 1) % cfg.vocab_size] * min(3, k_cap)
+    eng.spec.propose = wrong
+    for i, p in enumerate(prompts):
+        eng.submit(np.asarray(p), gen, rid=f"r{i}")
+    saw_invalidation = False
+    while eng.sched.waiting or eng.sched.running:
+        before = eng.spec.stats.verifies
+        eng.step()
+        if eng.spec.stats.verifies > before and eng.sched.running:
+            # the rejected slot's signature was forgotten this window
+            saw_invalidation |= any(
+                eng._slot_sig[s] is None for s in eng.sched.running)
+    assert saw_invalidation
+    assert eng.spec.stats.accepted == 0          # every draft was wrong
+    assert eng.spec.stats.rollbacks >= 1
+    toks = {r.rid: list(r.tokens) for r in eng.sched.finished}
+    assert toks == dense
+    assert eng.alloc.check_conservation() and eng.alloc.pages_in_use == 0
+
+
+def test_spec_shallow_drafts_never_cost_passes_at_wide_batch():
+    """The worth-it gate: when the batch is wide and drafts are shallow
+    (draft depth <= the fused window the slot rides for free), the
+    engine must NOT pay a verify pass per slot — the batched scan
+    amortizes better.  Speculation on may match but never materially
+    exceed the plain path's model passes, and tokens stay identical."""
+    cfg, params = get_tiny_model()
+    S, gen, n_req = 12, 12, 3
+    max_len = S + gen
+    prompts = seeded_prompts(cfg, n_req, S, motif=4, seed=2)
+    dense = dense_oracle(cfg, params, prompts, gen, max_len)
+    eng_off, toks_off = _run(prompts, [gen] * n_req, spec=False,
+                             max_len=max_len)
+    # spec_k=2: drafts of at most 2 tokens against 4..8-token windows
+    eng_on, toks_on = _run(prompts, [gen] * n_req, spec=True, spec_k=2,
+                           max_len=max_len)
+    assert toks_on == toks_off == dense
+    m_on, m_off = eng_on.metrics(), eng_off.metrics()
+    assert m_on["model_passes"] <= m_off["model_passes"]
+
+
+def test_spec_off_by_default_and_metrics_gated():
+    cfg, params = get_tiny_model()
+    eng = make_engine(cfg, params)
+    assert eng.spec is None
+    m = eng.metrics()
+    assert "accept_rate" not in m
+    assert "model_passes" in m and "dispatches_per_token" in m
