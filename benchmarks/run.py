@@ -107,7 +107,8 @@ def main() -> None:
                        f"dispatches_per_token="
                        f"{d['on']['dispatches_per_token']:.3f} vs "
                        f"{d['off']['dispatches_per_token']:.3f}, "
-                       f"accept_rate={d['on']['accept_rate']:.2f}"),
+                       f"accept_rate={d['on']['accept_rate']:.2f}, "
+                       f"spec_speedup={d['spec_speedup']:.2f}x"),
         ]
         for fname, bench_fn, summarize in comparisons:
             try:

@@ -20,10 +20,13 @@ prefill-token reduction).
 
 ``--trace repetitive`` is the speculative-decoding exemplar: a single
 latency-bound stream (batch 1) of motif-tiled prompts whose greedy
-continuations loop, so n-gram drafting ( ``--spec-decode on --spec-k N``)
-verifies many tokens per model pass; ``bench_spec_comparison`` replays
-it twice — speculation on vs off — into BENCH_spec.json (token
-identity, dispatches per token, accept rate).
+continuations loop, so device-resident n-gram drafting
+(``--spec-decode on``, with ``--spec-k auto`` adaptive depth or a
+fixed integer) verifies many tokens per model pass;
+``bench_spec_comparison`` replays it twice — speculation on vs off —
+into BENCH_spec.json (token identity, dispatches per token, accept
+rate, and the wall-clock split wall_s = scan_s + draft_verify_s +
+host_s with the spec_speedup verdict).
 
 Run:  PYTHONPATH=src python benchmarks/serve_trace.py [--quick]
       PYTHONPATH=src python benchmarks/serve_trace.py --quick \
@@ -134,7 +137,7 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
            prefill_budget: float = 2.0, fused: bool = True,
            max_window: int = 8, warmup: bool = False, params=None,
            prefix_cache: bool = False, spec_decode: bool = False,
-           spec_k: int = 8):
+           spec_k="auto"):
     """Drive the engine window by window, injecting arrivals between
     dispatches.  With ``fused`` the engine decodes multi-token windows,
     capped to the next pending arrival so the trace's admission clock
@@ -227,6 +230,7 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
         steps=eng.steps_run, windows=m["windows"], tokens=m["tokens_out"],
         tokens_finished=m["tokens_finished"],
         tok_per_s=m["tok_per_s"], decode_tok_per_s=m["decode_tok_per_s"],
+        wall_s=m["wall_s"], decode_s=m["decode_s"],
         h2d_syncs=m["h2d_syncs"], d2h_syncs=m["d2h_syncs"],
         syncs_per_token=m["syncs_per_token"],
         occupancy_mean=float(np.mean(occupancy)) / max(n_pages - 1, 1),
@@ -240,7 +244,9 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
             accept_rate=m["accept_rate"], spec_drafted=m["spec_drafted"],
             spec_accepted=m["spec_accepted"],
             spec_verifies=m["spec_verifies"],
-            spec_rollbacks=m["spec_rollbacks"])
+            spec_rollbacks=m["spec_rollbacks"],
+            spec_k_mean=m["spec_k_mean"],
+            spec_verify_s=m["spec_verify_s"])
     if eng.cache is not None:
         totals.update(
             hit_rate=m["prefix_hit_rate"],
@@ -378,7 +384,7 @@ def bench_prefix_comparison(*, quick: bool = True, seed: int = 0,
 
 def bench_spec_comparison(*, quick: bool = True, seed: int = 0,
                           page_size: int = 8, max_window: int = 8,
-                          spec_k: int = 8, arch: str = "tiny-100m"):
+                          spec_k="auto", arch: str = "tiny-100m"):
     """Replay the repetitive single-stream trace twice — speculative
     decoding on vs off — with shared params and warmed-up compiles,
     asserting per-request token identity (acceptance only ever keeps
@@ -389,12 +395,20 @@ def bench_spec_comparison(*, quick: bool = True, seed: int = 0,
     batching cannot amortize model passes, so ``dispatches_per_token``
     isolates what drafting+verification buys (off is ~1.0 pass/token
     even with fused windows — a K-step scan is K sequential passes; a
-    K+1-wide verify is ONE).
+    K+1-wide verify is ONE).  Speculation runs the device-resident
+    fused draft+verify chain with ``spec_k="auto"`` adaptive depth by
+    default — the configuration the engine ships.
 
     Returns the BENCH_spec.json payload (see scripts/check_bench.py):
-    the headline ``on.dispatches_per_token`` (< 0.7 is the acceptance
-    bar — >= 1.4x fewer model dispatches per emitted token) plus accept
-    rate and verify/rollback counts.
+    the headline ``spec_speedup`` (on/off wall tok_per_s, >= 1.0 is the
+    bar — speculation must WIN wall-clock, not just dispatch counts),
+    ``on.dispatches_per_token`` (< 0.7 — >= 1.4x fewer model dispatches
+    per emitted token), and the honesty split of where each run's wall
+    time went: ``scan_s`` (plain fused-scan device time),
+    ``draft_verify_s`` (the speculative dispatch chain), ``host_s``
+    (everything that is not a device dispatch — scheduling, accounting,
+    h2d/d2h marshalling).  PR 5 hid a 5.6x wall-clock REGRESSION behind
+    a 5x dispatch-count win precisely because this split was missing.
     """
     import jax
     from repro.configs import get_tiny_config
@@ -413,12 +427,21 @@ def bench_spec_comparison(*, quick: bool = True, seed: int = 0,
                                    spec_decode=spec, spec_k=spec_k,
                                    warmup=True, params=params, arch=arch)
         toks[mode] = {r.rid: list(r.tokens) for r in eng.sched.finished}
+        verify_s = totals.get("spec_verify_s", 0.0)
         out[mode] = dict(
             tokens=totals["tokens"], steps=totals["steps"],
             model_passes=totals["model_passes"],
             dispatches_per_token=totals["dispatches_per_token"],
             tok_per_s=totals["tok_per_s"],
             decode_tok_per_s=totals["decode_tok_per_s"],
+            # the wall-clock honesty split: wall = scan + draft/verify
+            # + host-side overhead
+            wall_s=totals["wall_s"],
+            scan_s=totals["decode_s"] - verify_s,
+            draft_verify_s=verify_s,
+            host_s=totals["wall_s"] - totals["decode_s"],
+            h2d_syncs=totals["h2d_syncs"],
+            d2h_syncs=totals["d2h_syncs"],
             preemptions=totals["preemptions"])
         if spec:
             out[mode].update(
@@ -426,9 +449,10 @@ def bench_spec_comparison(*, quick: bool = True, seed: int = 0,
                 spec_drafted=totals["spec_drafted"],
                 spec_accepted=totals["spec_accepted"],
                 spec_verifies=totals["spec_verifies"],
-                spec_rollbacks=totals["spec_rollbacks"])
+                spec_rollbacks=totals["spec_rollbacks"],
+                spec_k_mean=totals["spec_k_mean"])
     return {
-        "schema": "swallow.bench.spec/v1",
+        "schema": "swallow.bench.spec/v2",
         "arch": arch, "batch": 1, "page_size": page_size,
         "max_window": max_window, "spec_k": spec_k,
         "trace": "repetitive", "quick": quick, "seed": seed,
@@ -436,6 +460,8 @@ def bench_spec_comparison(*, quick: bool = True, seed: int = 0,
         "tokens_match": toks["on"] == toks["off"],
         "dispatch_reduction": out["off"]["dispatches_per_token"]
         / max(out["on"]["dispatches_per_token"], 1e-9),
+        "spec_speedup": out["on"]["tok_per_s"]
+        / max(out["off"]["tok_per_s"], 1e-9),
     }
 
 
@@ -465,7 +491,10 @@ def format_table(rows, totals) -> str:
                    f"{t['accept_rate'] * 100:.0f}% accept rate "
                    f"({t['spec_accepted']}/{t['spec_drafted']} drafts, "
                    f"{t['spec_verifies']} verifies, "
-                   f"{t['spec_rollbacks']} page rollbacks)")
+                   f"{t['spec_rollbacks']} page rollbacks); "
+                   f"mean K {t['spec_k_mean']:.1f}, draft+verify "
+                   f"{t['spec_verify_s']:.3f}s of {t['decode_s']:.3f}s "
+                   f"decode")
     if "hit_rate" in t:
         out.append(f"prefix cache: {t['hit_rate'] * 100:.0f}% hit rate, "
                    f"{t['prefill_tokens_cached']} prefill tokens served "
@@ -533,9 +562,12 @@ def main():
                     help="n-gram speculative decoding (draft from the "
                          "sequence's own history, verify K+1 positions "
                          "in one dispatch)")
-    ap.add_argument("--spec-k", type=int, default=8,
-                    help="max draft tokens per verification dispatch")
+    ap.add_argument("--spec-k", default="auto",
+                    help="max draft tokens per verification dispatch, or "
+                         "'auto' for per-request adaptive depth from the "
+                         "acceptance EWMA (the default)")
     args = ap.parse_args()
+    spec_k = args.spec_k if args.spec_k == "auto" else int(args.spec_k)
     tenants = {"shared-prefix": shared_prefix_tenants,
                "repetitive": repetitive_tenants,
                "mixed": default_tenants}[args.trace](args.quick)
@@ -546,7 +578,7 @@ def main():
                                max_window=args.window,
                                prefix_cache=args.prefix_cache == "on",
                                spec_decode=args.spec_decode == "on",
-                               spec_k=args.spec_k)
+                               spec_k=spec_k)
     print(format_table(rows, totals))
     print("[nOS] fleet serving view:")
     print(fleet_view(eng))

@@ -17,15 +17,19 @@ that ``benchmarks/run.py --json`` emits.
   positive, and ``prefill_token_reduction`` must clear
   ``PERF_SMOKE_MIN_PREFIX_REDUCTION`` (default 2.0 — the reduction is a
   token *count* ratio, deterministic on any host).
-* ``BENCH_spec.json`` (swallow.bench.spec/v1): speculative-decoding
-  on/off stat blocks on the repetitive single-stream trace.
-  ``tokens_match`` must be true (speculation is a dispatch transform,
-  not a sampler change), ``on.accept_rate`` must be positive,
-  ``on.dispatches_per_token`` must stay under
-  ``PERF_SMOKE_MAX_SPEC_DISPATCHES`` (default 0.7) and
+* ``BENCH_spec.json`` (swallow.bench.spec/v2): speculative-decoding
+  on/off stat blocks on the repetitive single-stream trace, including
+  the wall-clock honesty split (``wall_s`` = ``scan_s`` +
+  ``draft_verify_s`` + ``host_s``).  ``tokens_match`` must be true
+  (speculation is a dispatch transform, not a sampler change),
+  ``on.accept_rate`` must be positive, ``on.dispatches_per_token``
+  must stay under ``PERF_SMOKE_MAX_SPEC_DISPATCHES`` (default 0.7),
   ``dispatch_reduction`` must clear ``PERF_SMOKE_MIN_SPEC_REDUCTION``
   (default 1.4) — both are model-pass *count* ratios, deterministic on
-  any host.
+  any host — and ``spec_speedup`` (on.tok_per_s / off.tok_per_s, the
+  wall-clock verdict) must clear ``PERF_SMOKE_SPEC_SPEEDUP_MIN``
+  (default 1.0: speculation must never lose to the plain scan it
+  replaces).
 
 Run from the repo root:
     python benchmarks/run.py --only micro --json
@@ -144,14 +148,17 @@ def check_prefix(doc: dict) -> list:
 
 REQUIRED_SPEC_ON_KEYS = ("tokens", "steps", "model_passes",
                          "dispatches_per_token", "accept_rate",
-                         "spec_drafted", "spec_accepted", "spec_verifies")
+                         "spec_drafted", "spec_accepted", "spec_verifies",
+                         "spec_k_mean", "tok_per_s", "wall_s", "scan_s",
+                         "draft_verify_s", "host_s")
 REQUIRED_SPEC_OFF_KEYS = ("tokens", "steps", "model_passes",
-                          "dispatches_per_token")
+                          "dispatches_per_token", "tok_per_s", "wall_s",
+                          "scan_s", "draft_verify_s", "host_s")
 
 
 def check_spec(doc: dict) -> list:
     errs = []
-    if doc.get("schema") != "swallow.bench.spec/v1":
+    if doc.get("schema") != "swallow.bench.spec/v2":
         errs.append(f"bad schema: {doc.get('schema')!r}")
     for mode, keys in (("on", REQUIRED_SPEC_ON_KEYS),
                        ("off", REQUIRED_SPEC_OFF_KEYS)):
@@ -183,6 +190,17 @@ def check_spec(doc: dict) -> list:
         elif red < min_red:
             errs.append(f"dispatch_reduction {red:.3f} "
                         f"< required {min_red}")
+        # the wall-clock verdict: fewer dispatches must actually buy
+        # wall time, or speculation is a pessimization on this host
+        min_speedup = float(os.environ.get("PERF_SMOKE_SPEC_SPEEDUP_MIN",
+                                           "1.0"))
+        speedup = doc.get("spec_speedup")
+        if not _finite_pos(speedup):
+            errs.append(f"spec_speedup: non-finite {speedup!r}")
+        elif speedup < min_speedup:
+            errs.append(f"spec_speedup {speedup:.3f} "
+                        f"< required {min_speedup}: speculation lost "
+                        "wall-clock to the plain scan")
     return errs
 
 

@@ -67,6 +67,7 @@ class Job:
     # -- speculative decoding (repro.serving.spec_decode) --------------------
     accept_rate: float = 0.0           # draft tokens the verifier kept
     dispatches_per_token: float = 0.0  # sequential model passes per token
+    spec_k: float = 0.0                # mean adaptive draft depth requested
 
 
 @dataclass
@@ -207,7 +208,8 @@ class NOS:
                        prefix_hit_rate: Optional[float] = None,
                        bytes_deduped: Optional[int] = None,
                        accept_rate: Optional[float] = None,
-                       dispatches_per_token: Optional[float] = None):
+                       dispatches_per_token: Optional[float] = None,
+                       spec_k: Optional[float] = None):
         """Serving-engine telemetry (§VIII: nOS owns per-application
         accounting).  The paged engine calls this per replay/step batch;
         ``energy_j`` accrues (engine-priced decode energy), ``peak_pages``
@@ -216,9 +218,10 @@ class NOS:
         surface the §X-B overlay: how much of the striped store is
         serving more than one tenant, and how much prefill it saved.
         The speculative-decoding gauges (``accept_rate`` /
-        ``dispatches_per_token``) surface the §V payload-per-dispatch
-        lever: how many sequential model passes each emitted token
-        cost."""
+        ``dispatches_per_token`` / ``spec_k``) surface the §V
+        payload-per-dispatch lever: how many sequential model passes
+        each emitted token cost, and how deep the per-tenant adaptive
+        controller is currently drafting."""
         job = self.jobs[name]
         if pages_held is not None:
             job.pages_held = pages_held
@@ -243,6 +246,8 @@ class NOS:
             job.accept_rate = accept_rate
         if dispatches_per_token is not None:
             job.dispatches_per_token = dispatches_per_token
+        if spec_k is not None:
+            job.spec_k = spec_k
 
     def serving_table(self) -> str:
         """Fleet view of the serving gauges (pages, tokens, TTFT, and the
@@ -250,7 +255,7 @@ class NOS:
         rows = [f"{'job':<18} {'pages':>6} {'peak':>5} {'tokens':>8} "
                 f"{'ttft_s':>9} {'preempt':>7} {'energy_J':>10} "
                 f"{'shared':>6} {'hit%':>5} {'dedupKB':>8} "
-                f"{'acc%':>5} {'disp/tok':>8}"]
+                f"{'acc%':>5} {'disp/tok':>8} {'K':>5}"]
         for j in self.jobs.values():
             if j.tokens_out == 0 and j.peak_pages == 0:
                 continue
@@ -261,7 +266,8 @@ class NOS:
                         f"{j.prefix_hit_rate * 100:>5.0f} "
                         f"{j.bytes_deduped / 1024:>8.0f} "
                         f"{j.accept_rate * 100:>5.0f} "
-                        f"{j.dispatches_per_token:>8.2f}")
+                        f"{j.dispatches_per_token:>8.2f} "
+                        f"{j.spec_k:>5.1f}")
         return "\n".join(rows)
 
     def placement_table(self) -> str:

@@ -180,7 +180,8 @@ def report_fleet(args, cfg, eng, tokens_out: int):
         prefix_hit_rate=m.get("prefix_hit_rate"),
         bytes_deduped=m.get("bytes_deduped"),
         accept_rate=m.get("accept_rate"),
-        dispatches_per_token=m.get("dispatches_per_token"))
+        dispatches_per_token=m.get("dispatches_per_token"),
+        spec_k=m.get("spec_k_mean"))
     print("[nOS] fleet serving view:")
     print(pod.serving_table())
 
@@ -228,9 +229,14 @@ def main():
                          "draft from each sequence's own history, verify "
                          "K+1 positions in one dispatch, roll back "
                          "rejected pages (docs/SERVING.md)")
-    ap.add_argument("--spec-k", type=int, default=8,
-                    help="max draft tokens per verification dispatch")
+    ap.add_argument("--spec-k", default="auto",
+                    help="max draft tokens per verification dispatch: an "
+                         "integer for a fixed depth, or 'auto' (default) "
+                         "for the per-tenant acceptance-EWMA adaptive "
+                         "controller (AdaptiveK)")
     args = ap.parse_args()
+    if args.spec_k != "auto":
+        args.spec_k = int(args.spec_k)
 
     if args.devices:
         os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + \
@@ -291,6 +297,11 @@ def main():
                   f"({m['spec_accepted']}/{m['spec_drafted']} drafts over "
                   f"{m['spec_verifies']} verifies, "
                   f"{m['spec_rollbacks']} page rollbacks)")
+            if eng.spec.adaptive:
+                print(f"[paged] spec depth: adaptive, mean K "
+                      f"{m['spec_k_mean']:.1f}; draft+verify "
+                      f"{m['spec_verify_s']:.3f}s of {m['decode_s']:.3f}s "
+                      f"decode")
         if eng.cache is not None:
             print(f"[paged] prefix cache: {m['prefix_hit_rate'] * 100:.0f}%"
                   f" hit rate ({m['prefix_hits']}/{m['prefix_lookups']}), "

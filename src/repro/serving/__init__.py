@@ -13,7 +13,9 @@
   spec_decode — §V's payload-per-dispatch argument applied to model
                passes: weightless n-gram drafting verified in one
                batched dispatch (accept-prefix + rollback), cutting
-               dispatches per emitted token below 1.0
+               dispatches per emitted token below 1.0; the proposer
+               runs on device by default (fused draft+verify chain)
+               with per-request adaptive draft depth (AdaptiveK)
 
 Entry points: ``repro.launch.serve --engine paged [--prefix-cache on]
 [--spec-decode on]`` and ``benchmarks/serve_trace.py``; docs in
@@ -25,9 +27,11 @@ from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,
                                         RadixNode)
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      StepPlan)
-from repro.serving.spec_decode import NGramSpec, SpecStats, propose_ngram
+from repro.serving.spec_decode import (AdaptiveK, NGramSpec, SpecStats,
+                                       device_propose, propose_ngram)
 
 __all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
            "PrefixCache", "PrefixMatch", "RadixNode",
            "ContinuousBatchScheduler", "Request", "StepPlan",
-           "NGramSpec", "SpecStats", "propose_ngram"]
+           "NGramSpec", "SpecStats", "AdaptiveK", "propose_ngram",
+           "device_propose"]

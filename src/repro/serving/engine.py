@@ -41,13 +41,23 @@ drafts up to K tokens from its own prompt+output history
 single ``verify_window_paged`` dispatch scores all K+1 positions against
 the paged KV — the accepted prefix plus the verifier's bonus token land
 from ONE model pass, cutting *model dispatches per emitted token* below
-1.0 (the ``dispatches_per_token`` observable).  Speculation is capped by
-the scheduler's ``safe_horizon`` (no scheduling event inside the
-window), rejected KV is appended then rolled back
-(``PageAllocator.truncate_to`` releases whole rejected pages; partial
-slots are masked by position), and slots with no draft ride the normal
-fused window — so greedy tokens stay bit-identical with speculation on
-or off (tests/test_spec_decode.py).
+1.0 (the ``dispatches_per_token`` observable).  Drafting itself runs on
+device by default (``spec_proposer="device"``): each slot's token
+history is a device-resident row appended by the fused
+draft+verify+accept dispatch chain (``make_spec_draft_verify``), so a
+steady-state speculation window moves no draft bytes over the
+host↔device link at all — the payload-per-message lesson applied to the
+drafting path, which is what turns PR 5's dispatch-count win into a
+wall-clock win.  K adapts per request from an acceptance EWMA
+(``spec_k="auto"``) and a priced gate (:meth:`PagedEngine._spec_gate`,
+on :func:`repro.core.costs.estimate` numbers) buys a verify only where
+it beats the scan it displaces.  Speculation is capped by the
+scheduler's ``safe_horizon`` (no scheduling event inside the window),
+rejected KV is appended then rolled back (``PageAllocator.truncate_to``
+releases whole rejected pages; partial slots are masked by position),
+and slots the gate prices out ride the normal fused window — so greedy
+tokens stay bit-identical with speculation on or off
+(tests/test_spec_decode.py, tests/test_serving_fuzz.py).
 
 Greedy decoding throughout: fused vs per-step vs dense token equality is
 an acceptance gate (tests/test_serving.py), and it is also what makes
@@ -88,6 +98,9 @@ def _jitted_steps(cfg):
                           donate_argnums=(2,)),
         "verify": jax.jit(steps_mod.make_verify_window(cfg),
                           donate_argnums=(2,)),
+        "spec": jax.jit(steps_mod.make_spec_draft_verify(cfg),
+                        static_argnames=("W", "max_n", "min_n"),
+                        donate_argnums=(1, 2)),
         "copy_page": jax.jit(steps_mod.make_page_copy(),
                              donate_argnums=(0,)),
     }
@@ -109,12 +122,14 @@ class PagedEngine:
                  link_mode: str = "circuit", prefill_budget: float = 2.0,
                  fused: bool = True, max_window: int = 8,
                  prefix_cache: bool = False, spec_decode: bool = False,
-                 spec_k: int = 8, spec_ngram: int = 3):
+                 spec_k=8, spec_ngram: int = 3,
+                 spec_proposer: str = "device"):
         import jax.numpy as jnp
         from repro.models import lm, modules as nn
 
         assert lm.paged_decodable(cfg), \
             f"{cfg.name} is not paged-decodable (attention-only, causal)"
+        assert spec_proposer in ("device", "host")
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -123,8 +138,18 @@ class PagedEngine:
         self.nmax = -(-max_len // page_size)
         self.fused = fused
         self.max_window = max(1, int(max_window))
-        self.spec = NGramSpec(k=spec_k, max_n=spec_ngram) \
-            if spec_decode else None
+        self.spec = None
+        self._spec_host = spec_proposer == "host"
+        if spec_decode:
+            # "auto": adapt K per request from its acceptance EWMA, with
+            # headroom to draft past max_window (a deep verify is still
+            # ONE dispatch — depth is nearly free when acceptance earns it)
+            if spec_k == "auto":
+                self.spec = NGramSpec(
+                    k=max(2 * self.max_window - 1, 3), max_n=spec_ngram,
+                    adaptive=True)
+            else:
+                self.spec = NGramSpec(k=int(spec_k), max_n=spec_ngram)
         self._jnp = jnp
 
         self.alloc = PageAllocator(n_pages=n_pages, page_size=page_size,
@@ -157,6 +182,7 @@ class PagedEngine:
         self._scan = steps["scan"]
         self._suffix = steps["suffix"]
         self._verify = steps["verify"]
+        self._spec_step = steps["spec"]
         self._copy_page = steps["copy_page"]
         # KV bytes one token occupies across the whole stack (k + v, every
         # layer) — the unit behind the bytes_deduped gauge
@@ -177,8 +203,18 @@ class PagedEngine:
         self.d_block = jnp.asarray(self.block_tables)
         self.d_active = jnp.asarray(self.active)
         self._dirty = False
+        self._dirty_block = False
         # dirty-tracking signature per slot: (rid, preemptions, n_pages)
         self._slot_sig: List[Optional[tuple]] = [None] * max_batch
+        # device-resident token histories for speculative drafting: row s
+        # holds slot s's prompt+output tokens (the device proposer's
+        # input AND output — accepted emissions are appended on device,
+        # so steady-state speculation pushes no history at all).
+        # _hist_state[s] = ((rid, preemptions), device-valid length):
+        # the dirty-tracking key that decides when a row must be pushed
+        self.d_hist = jnp.zeros((max_batch, max_len), jnp.int32) \
+            if self.spec is not None else None
+        self._hist_state: List[Optional[tuple]] = [None] * max_batch
         self._n_submitted = 0
         self.steps_run = 0
         self.windows_run = 0
@@ -186,6 +222,7 @@ class PagedEngine:
         self.decode_tokens = 0
         self.tokens_emitted = 0
         self.decode_time_s = 0.0
+        self.spec_time_s = 0.0     # draft+verify subset of decode_time_s
         self.h2d_syncs = 0
         self.d2h_syncs = 0
         self.block_row_writes = 0
@@ -207,6 +244,7 @@ class PagedEngine:
         self.steps_run = self.windows_run = 0
         self.decode_steps = self.decode_tokens = self.tokens_emitted = 0
         self.decode_time_s = 0.0
+        self.spec_time_s = 0.0
         self.h2d_syncs = self.d2h_syncs = self.block_row_writes = 0
         self.peak_pages = 0
         self.prefill_tokens = 0
@@ -263,7 +301,9 @@ class PagedEngine:
         self.pos[slot] = 0
         self.active[slot] = 0
         self._slot_sig[slot] = None
+        self._hist_state[slot] = None
         self._dirty = True
+        self._dirty_block = True
 
     def _occupy_slot(self, req: Request, row: np.ndarray, token: int):
         self.block_tables[req.slot] = row
@@ -273,6 +313,7 @@ class PagedEngine:
         self._slot_sig[req.slot] = self._sig(req)
         self.block_row_writes += 1
         self._dirty = True
+        self._dirty_block = True
 
     def _refresh_slots(self):
         """Re-sync the mirror with scheduler state, rewriting only block
@@ -285,6 +326,7 @@ class PagedEngine:
                 self._slot_sig[slot] = sig
                 self.block_row_writes += 1
                 self._dirty = True
+                self._dirty_block = True
             last = req.tokens[-1] if req.tokens else 0
             if self.tokens[slot, 0] != last:
                 self.tokens[slot, 0] = last
@@ -308,6 +350,38 @@ class PagedEngine:
         self.d_active = jnp.asarray(self.active)
         self.h2d_syncs += 1
         self._dirty = False
+        self._dirty_block = False
+
+    def _push_block(self):
+        """Push only the block tables (the one array a pure-verify
+        window reads) — the scan bundle can stay dirty host-side, so
+        steady-state speculation syncs nothing but page growth."""
+        if not self._dirty_block:
+            return
+        self.d_block = self._jnp.asarray(self.block_tables)
+        self.h2d_syncs += 1
+        self._dirty_block = False
+
+    def _sync_hist(self, slot: int, req: Request):
+        """Ensure the slot's device history row covers the request's
+        current ``pos + 1`` tokens (prompt + emitted so far; ``pos`` is
+        the next KV write position, so the last emitted token is
+        history's tail).  The fused draft+verify appends emissions on
+        device, so in steady state this is a no-op; a push happens only
+        when the row is behind — slot reuse, preemption/recompute, or a
+        scan window having advanced the request host-side."""
+        need = req.pos + 1
+        key = (req.rid, req.preemptions)
+        st = self._hist_state[slot]
+        if st is not None and st[0] == key and st[1] >= need:
+            return
+        row = np.zeros((self.max_len,), np.int32)
+        hist = list(int(t) for t in req.prompt) + \
+            [int(t) for t in req.tokens]
+        row[:len(hist)] = hist
+        self.d_hist = self.d_hist.at[slot].set(self._jnp.asarray(row))
+        self.h2d_syncs += 1
+        self._hist_state[slot] = (key, len(hist))
 
     # -- fused-window warmup ----------------------------------------------
     def window_sizes(self) -> List[int]:
@@ -375,12 +449,29 @@ class PagedEngine:
                     zeros_pos, inactive, k=k)
                 np.asarray(toks)
             self._dirty = True        # device state was clobbered
-        null_row = jnp.full((self.nmax,), NULL_PAGE, jnp.int32)
-        for w in self.verify_buckets():
-            logits, self.pools = self._verify(
-                self.params, jnp.zeros((1, w), jnp.int32), self.pools,
-                null_row, jnp.int32(0), jnp.int32(1))
-            np.asarray(logits)
+        if self.spec is not None and not self._spec_host:
+            # warm the fused draft+verify chain, one compile per pow2
+            # verify width, against null rows (writes masked by design);
+            # the warmup clobbers d_hist rows, so mark them all stale
+            null_rows = jnp.full((self.max_batch, self.nmax), NULL_PAGE,
+                                 jnp.int32)
+            for w in self.verify_buckets():
+                emit, _, _, self.d_hist, self.pools = self._spec_step(
+                    self.params, self.d_hist, self.pools, null_rows,
+                    jnp.int32(0), jnp.int32(0), jnp.int32(w - 1),
+                    W=w, max_n=self.spec.max_n, min_n=self.spec.min_n)
+                np.asarray(emit)
+            # warm the history row-set scatter _sync_hist dispatches
+            self.d_hist = self.d_hist.at[0].set(
+                jnp.zeros((self.max_len,), jnp.int32))
+            self._hist_state = [None] * self.max_batch
+        else:
+            null_row = jnp.full((self.nmax,), NULL_PAGE, jnp.int32)
+            for w in self.verify_buckets():
+                logits, self.pools = self._verify(
+                    self.params, jnp.zeros((1, w), jnp.int32), self.pools,
+                    null_row, jnp.int32(0), jnp.int32(1))
+                np.asarray(logits)
 
     # -- prefill (full, or cached-prefix COW + suffix) ---------------------
     def _do_prefill(self, req: Request, row: np.ndarray, jnp) -> int:
@@ -446,73 +537,118 @@ class PagedEngine:
         # only the dispatched window's pages are grabbed ahead of need
         return self.sched.safe_horizon(cap, quantize=self._pow2_floor)
 
-    def _spec_window(self, max_window: Optional[int]) -> List[Request]:
-        """One speculative decode window.
+    def _spec_gate(self, active: Dict[int, Request],
+                   ks: Dict[int, int], kk_est: int) -> Dict[int, int]:
+        """The priced worth-it gate: a verify pass is bought only where
+        the tokens it is *expected* to emit — ``e = 1 + accept_EWMA *
+        K`` — beat the fused scan it displaces, on the cost engine's own
+        seconds (``sched.decode_cost_s`` / ``sched.prefill_cost_s`` both
+        come from :func:`repro.core.costs.estimate`).  Two regimes,
+        compared in product form (no divisions):
 
-        Each running slot drafts up to K tokens from its own
-        prompt+output history (weightless n-gram lookup); drafting slots
-        are verified one dispatch each (``verify_window_paged`` scores
-        all K+1 positions in one model pass), non-drafting slots ride
-        the normal fused scan with the drafting slots masked to null
-        rows (their in-scan writes land on the null page, masked by
-        design).  Speculation depth is capped by the scheduler's
-        ``safe_horizon`` — no scheduling event can land inside the
-        window, and every write position is page-reserved up front —
-        and rejected drafts roll their whole pages back via
-        ``PageAllocator.truncate_to``.  Emitted tokens are bit-identical
-        to the plain path by the acceptance rule
-        (:meth:`repro.serving.spec_decode.NGramSpec.accept`)."""
+        * pure speculation — every slot drafts, so the B verifies
+          replace the scan outright: worth it iff the expected emission
+          rate beats the scan's, ``sum(e) * t_scan > B * kk *
+          sum(t_verify)``;
+        * mixed — the scan runs anyway for the other slots, so a
+          drafting slot pays its verify *on top* of the ``kk`` tokens
+          the window would hand it for free, and must clear the
+          marginal bar ``(e_s - kk) * t_scan > t_verify_s * B * kk``.
+          Shallow drafts against a wide free window are priced out —
+          the regime where PR 5's heuristic gate lost wall-clock.
+        """
+        if not ks:
+            return ks
+        price = getattr(self.sched, "prefill_cost_s", None)
+        scan_s = kk_est * float(self.sched.decode_cost_s or 0.0)
+        if price is None or scan_s <= 0.0:
+            return dict(ks)            # unpriced scheduler: keep drafts
+        n = len(active)
+        e = {s: 1.0 + self.spec.rate_for(active[s].tenant) * K
+             for s, K in ks.items()}
+        tv = {s: float(price(self._pow2_ceil(K + 1)))
+              for s, K in ks.items()}
+        if len(ks) == n and sum(e.values()) * scan_s \
+                > n * kk_est * sum(tv.values()):
+            return dict(ks)
+        return {s: K for s, K in ks.items()
+                if (e[s] - kk_est) * scan_s > tv[s] * n * kk_est}
+
+    def _spec_window(self, max_window: Optional[int]) -> List[Request]:
+        """One speculative decode window: draft -> verify -> accept as a
+        device-resident dispatch chain.
+
+        Depth: each running slot asks its per-tenant controller
+        (:meth:`repro.serving.spec_decode.NGramSpec.draft_k` — the
+        acceptance-EWMA adaptive target, or the fixed ``spec_k``) for a
+        draft depth K clamped to the scheduler's ``safe_horizon`` and
+        snapped to the pow2 verify buckets; the priced gate
+        (:meth:`_spec_gate`) then keeps only the verifies the cost model
+        expects to beat the scan they displace.  Rejected slots ride the
+        normal fused scan with speculating slots masked to null rows
+        (their in-scan writes land on the null page, masked by design).
+
+        Dispatch (``spec_proposer="device"``, the default): ONE jitted
+        chain per slot — ``device_propose`` over the slot's
+        device-resident history row, ``verify_window_paged`` over the
+        draft, greedy acceptance, history append — with only ``(emitted,
+        n_emit, m)`` pulled back; no draft ever materializes on the
+        host, and steady-state windows push nothing but page growth
+        (``_push_block``).  ``spec_proposer="host"`` keeps the PR-5
+        reference path (host n-gram propose + padded ``_verify``): the
+        middle rung of the differential oracle ladder and the hook
+        adversarial tests monkeypatch.
+
+        Speculation depth is capped by the scheduler's ``safe_horizon``
+        — no scheduling event can land inside the window, and every
+        write position is page-reserved up front (exact reservation, no
+        pow2 quantize: a verify may write any horizon position).
+        Rejected drafts roll their whole pages back via
+        ``PageAllocator.truncate_to`` and forget the slot signature
+        (pop-then-regrow can alias page counts).  Emitted tokens are
+        bit-identical to the plain path in every mode by the acceptance
+        rule (:meth:`repro.serving.spec_decode.NGramSpec.accept`)."""
         jnp = self._jnp
         finished: List[Request] = []
         cap = max(self.max_window, self.spec.k + 1)
         if max_window is not None:
             cap = max(1, min(cap, max_window))
-        # exact reservation (no pow2 quantize): a verify may write any of
-        # the k horizon positions, so the horizon's pages are the
-        # window's.  Deliberate tradeoff: drafts are not known yet, so
-        # slots that end up riding the (possibly smaller, pow2-floored)
-        # scan hold their horizon pages one window early — a few pages
-        # of extra pressure; under a dry pool the horizon shrinks the
-        # same way the plain path's does
         k = self.sched.safe_horizon(cap)
         self._refresh_slots()
         active = dict(self.sched.running)
-        drafts: Dict[int, List[int]] = {}
+        ks: Dict[int, int] = {}
+        host_drafts: Dict[int, List[int]] = {}
         for slot, req in active.items():
-            d = self.spec.propose(req.prompt, req.tokens, k - 1)
-            if d:
-                drafts[slot] = d
+            K = self.spec.draft_k(req.tenant, k)
+            if K < 1:
+                continue
+            if self._spec_host:
+                d = self.spec.propose(req.prompt, req.tokens, K)
+                if not d:
+                    continue          # no match: ride the scan
+                host_drafts[slot] = d
+                ks[slot] = len(d)
+            else:
+                ks[slot] = K          # draft length discovered on device
         kk_est = self._pow2_floor(min(k, self.max_window)) if self.fused \
             else 1
-        if drafts:
-            # pay a verify pass only where it beats the scan it
-            # displaces.  When every slot drafts deeply (mean potential
-            # emission > batch width) the B verifies replace the scan
-            # outright and win; otherwise the scan runs anyway, so a
-            # draft is worth its +1 pass only if it can emit more than
-            # the scan window already gives that slot for free —
-            # without this gate, wide batches of shallow drafts COST
-            # passes instead of saving them
-            all_draft = len(drafts) == len(active)
-            deep = sum(len(d) + 1 for d in drafts.values()) \
-                > len(active) * len(active)
-            if not (all_draft and deep):
-                drafts = {s: d for s, d in drafts.items()
-                          if len(d) + 1 > kk_est}
-        scan_slots = [s for s in active if s not in drafts]
+        ks = self._spec_gate(active, ks, kk_est)
+        host_drafts = {s: d for s, d in host_drafts.items() if s in ks}
+        scan_slots = [s for s in active if s not in ks]
         t_dec = time.time()
         advanced = 0          # scheduler-clock steps complete_step took
         emitted_max = 0       # largest per-slot emission this window
+        tok_np = None
         if scan_slots:
             kk = kk_est
-            if drafts:
+            if ks:
                 # ONE sync event: canonical tokens/pos plus this window's
-                # masked rows/mask (drafting slots write the null page);
-                # the canonical d_block/d_active stay host-side — the
-                # _dirty fold below re-pushes them next plain window
+                # masked rows/mask (speculating slots write the null
+                # page); the canonical d_block/d_active stay host-side —
+                # the _dirty fold below re-pushes them next plain window
                 bt = self.block_tables.copy()
                 act = self.active.copy()
-                for s in drafts:
+                for s in ks:
                     bt[s] = NULL_PAGE
                     act[s] = 0
                 self.d_tokens = jnp.asarray(self.tokens)
@@ -537,30 +673,58 @@ class PagedEngine:
                 self.tokens_emitted += len(emitted)
                 finished += self.sched.complete_step(emitted)
             advanced = emitted_max = kk
-            if not drafts:
+            if not ks:
                 # pure scan window: adopt the device carry, exactly like
                 # the plain fused path
                 self.d_tokens, self.d_pos = d_tok, d_pos
-        for slot in sorted(drafts):
+        st = self.spec.stats
+        if ks and not self._spec_host:
+            # device chain inputs: history rows for any slot that fell
+            # behind (slot reuse / preemption / scan advance), plus page
+            # growth — in steady state only the latter moves
+            for slot in sorted(ks):
+                self._sync_hist(slot, active[slot])
+            self._push_block()
+        for slot in sorted(ks):
             req = active[slot]
-            d = drafts[slot]
-            m = len(d)
-            W = self._pow2_ceil(m + 1)
-            padded = np.zeros((1, W), np.int32)
-            padded[0, 0] = req.tokens[-1]
-            padded[0, 1:m + 1] = d
-            logits, self.pools = self._verify(
-                self.params, jnp.asarray(padded), self.pools,
-                jnp.asarray(self.block_tables[slot]), jnp.int32(req.pos),
-                jnp.int32(m + 1))
-            self.h2d_syncs += 1           # draft + block row push
-            greedy = np.asarray(jnp.argmax(logits[0, :m + 1], -1),
-                                np.int32)
-            self.d2h_syncs += 1           # blocking verdict pull
+            K = ks[slot]
+            t_sp = time.time()
+            if self._spec_host:
+                d = host_drafts[slot]
+                m = len(d)
+                W = self._pow2_ceil(m + 1)
+                padded = np.zeros((1, W), np.int32)
+                padded[0, 0] = req.tokens[-1]
+                padded[0, 1:m + 1] = d
+                logits, self.pools = self._verify(
+                    self.params, jnp.asarray(padded), self.pools,
+                    jnp.asarray(self.block_tables[slot]),
+                    jnp.int32(req.pos), jnp.int32(m + 1))
+                self.h2d_syncs += 1       # draft + block row push
+                greedy = np.asarray(jnp.argmax(logits[0, :m + 1], -1),
+                                    np.int32)
+                self.d2h_syncs += 1       # blocking verdict pull
+                out = self.spec.accept(d, greedy)   # updates stats
+            else:
+                (emit_d, n_emit_d, m_d, self.d_hist,
+                 self.pools) = self._spec_step(
+                    self.params, self.d_hist, self.pools, self.d_block,
+                    jnp.int32(slot), jnp.int32(req.pos), jnp.int32(K),
+                    W=self._pow2_ceil(K + 1), max_n=self.spec.max_n,
+                    min_n=self.spec.min_n)
+                emit_np = np.asarray(emit_d)   # blocking verdict pull
+                n_emit, m = int(n_emit_d), int(m_d)
+                self.d2h_syncs += 1
+                out = [int(t) for t in emit_np[:n_emit]]
+                st.drafted += m
+                st.accepted += n_emit - 1
+                st.verifies += 1
+            self.spec_time_s += time.time() - t_sp
+            st.k_requested += K
+            self.spec.observe(req.tenant, m, len(out) - 1)
             self.decode_steps += 1
             self.model_passes += 1
             self.windows_run += 1         # a verify IS a device dispatch
-            out = self.spec.accept(d, greedy)
             self.decode_tokens += len(out)
             self.tokens_emitted += len(out)
             finished += self.sched.complete_spec(req, out)
@@ -569,21 +733,27 @@ class PagedEngine:
                 # tail page's stale slots are masked by position and
                 # overwritten before the write position reaches them)
                 if self.alloc.truncate_to(req.rid, req.pos):
-                    self.spec.stats.rollbacks += 1
+                    st.rollbacks += 1
                 # pop-then-regrow can restore the same page COUNT with
                 # different physical pages — invisible to the (rid,
                 # preemptions, len) signature — so forget it: the next
                 # refresh must rewrite the device block row
                 self._slot_sig[req.slot] = None
+            if not self._spec_host:
+                # the fused step appended the emission on device, so the
+                # row now covers exactly pos+1 tokens again — the history
+                # holds only verified tokens, so rollback never touches it
+                self._hist_state[slot] = ((req.rid, req.preemptions),
+                                          req.pos + 1)
             emitted_max = max(emitted_max, len(out))
-        if drafts:
-            # the device carry is stale for drafting slots (and the scan
-            # saw masked rows): fold the mirror and re-push next window
+        if ks:
+            # the device carry is stale for speculating slots (and the
+            # scan saw masked rows): fold the mirror, re-push next window
             for slot, req in self.sched.running.items():
                 self.tokens[slot, 0] = req.tokens[-1] if req.tokens else 0
                 self.pos[slot] = req.pos
             self._dirty = True
-        else:
+        elif tok_np is not None:
             for slot, req in self.sched.running.items():
                 self.tokens[slot, 0] = int(tok_np[slot, advanced - 1])
                 self.pos[slot] = req.pos
@@ -592,6 +762,10 @@ class PagedEngine:
         # scheduler-clock steps; complete_step already advanced `advanced`
         self.sched.step_idx += max(emitted_max - advanced, 0)
         self.steps_run += max(emitted_max, 1)
+        # adaptive state is keyed by tenant, not rid: acceptance
+        # statistics are a workload property, so a tenant's next request
+        # starts at the learned depth instead of re-ramping from the
+        # prior (state is bounded by the tenant count — never forgotten)
         return finished
 
     def step(self, max_window: Optional[int] = None) -> List[Request]:
@@ -692,6 +866,8 @@ class PagedEngine:
         emitted = self.tokens_emitted
         out = {
             "finished": len(fin),
+            "wall_s": dt,
+            "decode_s": self.decode_time_s,
             # emitted counts every token produced (prefill first tokens +
             # decode), including in-flight and preempt-discarded work;
             # finished-only is reported alongside, not silently dropped
@@ -730,6 +906,11 @@ class PagedEngine:
                 "spec_verifies": s.verifies,
                 "spec_rollbacks": s.rollbacks,
                 "accept_rate": s.accept_rate,
+                # mean requested draft depth (the adaptive-K gauge) and
+                # the draft+verify share of decode wall-clock — the
+                # bench-honesty split BENCH_spec reports
+                "spec_k_mean": s.k_mean,
+                "spec_verify_s": self.spec_time_s,
             })
         if self.cache is not None:
             out.update(self.cache.metrics())

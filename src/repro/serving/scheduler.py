@@ -134,12 +134,21 @@ class ContinuousBatchScheduler:
         return plan
 
     def _victim(self, protect: Request) -> Optional[Request]:
-        """Latest-arrived running request; ``protect`` only if alone."""
-        others = [r for r in self.running.values() if r is not protect]
-        pool = others or [r for r in self.running.values()]
-        if not pool:
+        """Latest-arrived running request — ``protect`` included.
+
+        A grower never evicts an earlier-arrived request: when the
+        grower itself is the latest arrival it self-preempts (the
+        caller breaks out of the growth loop) and waits for the pool.
+        The alternative — exempting the grower — is a priority
+        inversion that can livelock: two requests filling a tight pool
+        alternately evict each other one window before completion,
+        forever.  With arrival order respected, the earliest running
+        request is never preempted, so it always finishes, frees its
+        pages, and the pool drains in arrival order."""
+        if not self.running:
             return None
-        return max(pool, key=lambda r: (r.arrived_step, r.seq))
+        return max(self.running.values(),
+                   key=lambda r: (r.arrived_step, r.seq))
 
     def _preempt(self, req: Request, plan: StepPlan):
         # drops only this request's references: pages the prefix cache or
@@ -240,6 +249,24 @@ class ContinuousBatchScheduler:
         applied to the event horizon *before* pages are reserved — so
         reservation never grabs pages a smaller dispatched window won't
         write — and again to the capacity-shrunk result.
+
+        Interplay with adaptive speculation: the horizon is computed
+        for the *largest* window the engine might dispatch (its
+        ``max(max_window, spec_k + 1)`` cap), and the per-tenant
+        adaptive controller then clamps each slot's draft depth to
+        ``horizon - 1`` — a verify emits at most K accepted drafts plus
+        one corrected token, all landing inside the reserved window.
+        The derivation above is unchanged: completion still bounds K by
+        the smallest remaining generation (a deep verify may *finish* a
+        request mid-buffer, but emission is truncated at ``gen`` so the
+        finish lands on the window's last emitted step); admission
+        pressure still collapses the horizon to 1 (shallow drafts near
+        admission events are exactly what the priced worth-it gate then
+        prices out); and page reservation is exact over the horizon, so
+        a rejected draft rolls back pages that were reserved, never
+        pages another slot could have claimed mid-window.  Adaptive K
+        never widens the horizon — it only chooses how much of the
+        already-safe window to spend on drafts.
 
         Call after :meth:`plan_step` (growth already guaranteed the
         current write page, so the result is always >= 1 while anything

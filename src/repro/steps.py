@@ -128,6 +128,72 @@ def make_verify_window(cfg: ModelConfig):
     return verify_window
 
 
+def make_spec_draft_verify(cfg: ModelConfig):
+    """Fused speculative draft+verify for ONE slot (device-resident
+    drafting — no host materialization of candidate drafts).
+
+    (params, history (B,H) device token-history rows, pools,
+     block_tables (B,nmax), slot, start, k) ->
+    (emitted (W,), n_emit, m, history, pools), with the verify width
+    ``W`` static (the engine buckets it to powers of two) and
+    ``max_n``/``min_n`` static n-gram bounds.  ``slot``/``start``/``k``
+    are traced scalars: one compilation per width serves every slot,
+    position and draft depth.
+
+    One dispatch chains the whole speculation round on device:
+
+    1. ``device_propose`` suffix-matches the slot's history row
+       (``hist_len = start + 1`` — ``start`` is the next KV write
+       position, whose token's KV is not yet written) for a draft of up
+       to ``min(k, W-1)`` tokens;
+    2. ``verify_window_paged`` scores last-token + draft (``n_valid =
+       m+1`` positions) against the paged KV in one model pass;
+    3. the greedy acceptance rule keeps the longest matching prefix and
+       appends the verifier's bonus/correction token — ``emitted[:n_emit]``
+       with ``n_emit = accepted + 1`` is exactly what non-speculative
+       greedy decode would emit;
+    4. the accepted tokens are appended to the slot's history row, so
+       the next window drafts from an already-current device history.
+
+    Jit with history and the pools donated; the host pulls only
+    ``(emitted, n_emit, m)`` — one d2h event per verify.
+    """
+    from repro.serving.spec_decode import device_propose
+
+    def draft_verify(params, history, pools, block_tables, slot, start, k,
+                     *, W: int, max_n: int, min_n: int):
+        H = history.shape[-1]
+        row = jax.lax.dynamic_index_in_dim(history, slot, 0,
+                                           keepdims=False)
+        block_row = jax.lax.dynamic_index_in_dim(block_tables, slot, 0,
+                                                 keepdims=False)
+        hist_len = jnp.asarray(start, jnp.int32) + 1
+        draft, m = device_propose(row, hist_len, k, k_max=W - 1,
+                                  max_n=max_n, min_n=min_n)
+        last = row[jnp.clip(hist_len - 1, 0, H - 1)]
+        tokens = jnp.concatenate([last[None], draft])[None, :]   # (1, W)
+        logits, pools = lm.verify_window_paged(params, cfg, tokens, pools,
+                                               block_row, start, m + 1)
+        greedy = jnp.argmax(logits[0], -1).astype(jnp.int32)     # (W,)
+        offs = jnp.arange(W, dtype=jnp.int32)
+        draft_w = jnp.concatenate([draft, jnp.zeros((1,), jnp.int32)])
+        ok = (offs < m) & (greedy == draft_w)
+        a = jnp.sum(jnp.cumprod(ok.astype(jnp.int32)))   # accepted prefix
+        bonus = greedy[a]                # correction (or bonus) token
+        emitted = jnp.where(offs < a, draft_w, 0)
+        emitted = jnp.where(offs == a, bonus, emitted)
+        n_emit = a + 1
+        # append the emission to the history row on device: positions
+        # hist_len .. hist_len+n_emit-1 take emitted[0..n_emit-1]
+        rel = jnp.arange(H, dtype=jnp.int32) - hist_len
+        src = emitted[jnp.clip(rel, 0, W - 1)]
+        new_row = jnp.where((rel >= 0) & (rel < n_emit), src, row)
+        history = jax.lax.dynamic_update_index_in_dim(history, new_row,
+                                                      slot, 0)
+        return emitted, n_emit, m, history, pools
+    return draft_verify
+
+
 def make_page_copy():
     """Copy-on-write: duplicate one physical page across every layer's
     k/v pool in a single device dispatch.

@@ -155,6 +155,45 @@ def test_propose_ngram_drafts_are_history_slices(history, k):
     assert found
 
 
+@settings(max_examples=100, deadline=None)
+@given(st.lists(st.integers(0, 6), min_size=0, max_size=28),
+       st.integers(0, 9), st.integers(1, 3),
+       st.lists(st.integers(0, 6), min_size=0, max_size=4),
+       st.data())
+def test_device_propose_matches_host_proposer(history, k, max_n, junk,
+                                              data):
+    """The differential proposer oracle (docs/TESTING.md rung): the
+    jitted :func:`device_propose` suffix match over a fixed-width,
+    junk-padded device buffer is token-identical to the host reference
+    :func:`propose_ngram` over the exact history — same
+    longest-n-first, earliest-occurrence, end-of-history-clipped
+    drafts, for looping, aperiodic, shorter-than-n and padding-adjacent
+    histories alike.  The padding bytes beyond ``hist_len`` are drawn
+    adversarially (including copies of the history's own tail, the case
+    a missing validity mask would false-match)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serving.spec_decode import device_propose
+
+    H, k_max = 32, 9
+    min_n = data.draw(st.integers(1, max_n))
+    buf = np.zeros((H,), np.int32)
+    buf[:len(history)] = history
+    # adversarial tail padding right past hist_len: junk, then repeat
+    # the history's own tail so clipped indices look like matches
+    pad = junk + list(history[-3:])
+    buf[len(history):len(history) + len(pad)] = pad[:H - len(history)]
+    fn = jax.jit(device_propose, static_argnames=("k_max", "max_n",
+                                                  "min_n"))
+    draft, m = fn(jnp.asarray(buf), jnp.int32(len(history)),
+                  jnp.int32(k), k_max=k_max, max_n=max_n, min_n=min_n)
+    draft, m = np.asarray(draft), int(m)
+    ref = propose_ngram(history, min(k, k_max), max_n=max_n, min_n=min_n)
+    assert list(draft[:m]) == ref
+    assert all(int(t) == 0 for t in draft[m:])   # zero-masked past m
+
+
 @settings(max_examples=60, deadline=None)
 @given(st.lists(st.integers(0, 3), min_size=1, max_size=8),
        st.lists(st.integers(0, 3), min_size=2, max_size=9))

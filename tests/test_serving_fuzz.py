@@ -1,15 +1,19 @@
 """Differential serving fuzz: one small randomized arrival trace
 replayed across the full flag cube {prefix-cache on/off} x {fused
-on/off} x {spec-decode on/off} — every configuration must emit greedy
-tokens identical to the dense oracle, request for request.
+on/off} x {spec-decode on/off} x {adaptive-K on/off} — every
+configuration must emit greedy tokens identical to the dense oracle,
+request for request.
 
 The trace deliberately mixes the features' trigger conditions: shared
 prefixes that diverge mid-page (COW), motif-tiled prompts whose greedy
 continuations loop (speculation accepts), staggered arrivals (admission
 events cap fused windows and speculation horizons), and a pool small
-enough for growth pressure.  The oracle and each configuration's output
-are memoized per run so the 8-point cube costs one engine replay each,
-all sharing one compiled step set (conftest / engine._jitted_steps).
+enough for growth pressure.  Adaptive K (``spec_k="auto"``) rides the
+same trace with per-request EWMA depth control — device-resident
+drafting in both spec modes.  The oracle and each configuration's
+output are memoized per run so the 16-point cube costs one engine
+replay each, all sharing one compiled step set (conftest /
+engine._jitted_steps).
 """
 import numpy as np
 import pytest
@@ -20,8 +24,9 @@ from conftest import dense_oracle, get_tiny_model, make_engine, \
 PAGE = 4
 MAX_BATCH = 2
 N_PAGES = 26
-CUBE = [(pc, fz, sp) for pc in (False, True) for fz in (False, True)
-        for sp in (False, True)]
+CUBE = [(pc, fz, sp, ak)
+        for pc in (False, True) for fz in (False, True)
+        for sp in (False, True) for ak in (False, True)]
 
 _MEMO = {}
 
@@ -39,7 +44,7 @@ def _trace():
     return prompts, gens, arrivals
 
 
-def _replay(prefix_cache, fused, spec):
+def _replay(prefix_cache, fused, spec, adaptive=False):
     """Drive the engine like the trace benchmark: submissions land when
     the scheduler clock reaches their arrival step, windows never decode
     past the next arrival."""
@@ -49,7 +54,7 @@ def _replay(prefix_cache, fused, spec):
     eng = make_engine(cfg, params, max_batch=MAX_BATCH, page_size=PAGE,
                       n_pages=N_PAGES, max_len=max_len, fused=fused,
                       prefix_cache=prefix_cache, spec_decode=spec,
-                      spec_k=4, max_window=4)
+                      spec_k="auto" if adaptive else 4, max_window=4)
     pending = sorted(zip(arrivals, range(len(prompts))))
     while pending or eng.sched.waiting or eng.sched.running:
         while pending and pending[0][0] <= eng.sched.step_idx:
@@ -75,14 +80,49 @@ def _oracle():
     return _MEMO["oracle"]
 
 
-@pytest.mark.parametrize("prefix_cache,fused,spec", CUBE)
-def test_flag_cube_matches_dense_oracle(prefix_cache, fused, spec):
-    eng, toks = _replay(prefix_cache, fused, spec)
+@pytest.mark.parametrize("prefix_cache,fused,spec,adaptive", CUBE)
+def test_flag_cube_matches_dense_oracle(prefix_cache, fused, spec,
+                                        adaptive):
+    eng, toks = _replay(prefix_cache, fused, spec, adaptive)
     assert len(toks) == len(_oracle())
-    assert toks == _oracle(), (prefix_cache, fused, spec)
+    assert toks == _oracle(), (prefix_cache, fused, spec, adaptive)
     m = eng.metrics()
     # the features actually engaged on their trigger configs
     if prefix_cache:
         assert m["prefix_hits"] >= 1
     if spec:
         assert m["spec_verifies"] >= 1 and m["accept_rate"] > 0.0
+        if adaptive:
+            assert eng.spec.adaptive and m["spec_k_mean"] > 0.0
+    else:
+        # adaptive-K is a spec-decode mode: without spec it must be
+        # inert (no controller, no spec metrics)
+        assert eng.spec is None and "accept_rate" not in m
+
+
+def test_adaptive_spec_preemption_and_rollback_stay_exact():
+    """Forced mid-stream preemption + draft rollback under adaptive K:
+    a pool too small for the working set (budget 0 admits greedily)
+    preempts a speculating request mid-window sequence; its recompute
+    re-drafts from a re-pushed device history (the (rid, preemptions)
+    key changed) and the adaptive controller keeps its EWMA across the
+    preemption.  Tokens must stay dense-exact and every page returns."""
+    cfg, params = get_tiny_model()
+    prompts, _, _ = _trace()
+    gens = [10, 14, 8, 11, 13, 9]     # longer tails than the cube trace:
+    max_len = max(p.shape[0] + g       # deep drafts AND pool churn
+                  for p, g in zip(prompts, gens))
+    dense = dense_oracle(cfg, params, prompts, gens, max_len)
+    eng = make_engine(cfg, params, max_batch=MAX_BATCH, page_size=PAGE,
+                      n_pages=11, max_len=max_len, prefill_budget=0.0,
+                      spec_decode=True, spec_k="auto", max_window=4)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        eng.submit(np.asarray(p), g, rid=f"r{i}")
+    fin = eng.run()
+    toks = {r.rid: list(r.tokens) for r in fin}
+    assert toks == dense
+    m = eng.metrics()
+    assert m["preemptions"] >= 1, "pool never forced a preemption"
+    assert m["spec_rollbacks"] >= 1, "trace never exercised rollback"
+    assert m["spec_verifies"] >= 1
+    assert eng.alloc.check_conservation() and eng.alloc.pages_in_use == 0

@@ -9,8 +9,9 @@ import pytest
 
 from conftest import dense_oracle, get_tiny_model, make_engine, \
     seeded_prompts
-from repro.serving import (ContinuousBatchScheduler, NGramSpec,
-                           PageAllocator, Request, propose_ngram)
+from repro.serving import (AdaptiveK, ContinuousBatchScheduler, NGramSpec,
+                           PageAllocator, Request, device_propose,
+                           propose_ngram)
 
 
 # --- proposer: weightless prompt-lookup drafting -------------------------------
@@ -48,6 +49,135 @@ def test_ngram_spec_accept_rule_is_greedy_exact():
     s = spec.stats
     assert (s.drafted, s.accepted, s.verifies) == (7, 4, 3)
     assert s.accept_rate == pytest.approx(4 / 7)
+
+
+# --- device proposer: deterministic differential rungs -------------------------
+def _dev(history, k, *, max_n=3, min_n=1, H=16, k_max=9):
+    """Run the jitted device proposer over a padded buffer and return
+    the draft as a plain list (the host proposer's return shape)."""
+    import jax
+    import jax.numpy as jnp
+    buf = np.zeros((H,), np.int32)
+    buf[:len(history)] = history
+    fn = jax.jit(device_propose,
+                 static_argnames=("k_max", "max_n", "min_n"))
+    draft, m = fn(jnp.asarray(buf), jnp.int32(len(history)),
+                  jnp.int32(k), k_max=k_max, max_n=max_n, min_n=min_n)
+    return [int(t) for t in np.asarray(draft)[:int(m)]]
+
+
+def test_device_propose_matches_host_on_reference_cases():
+    """The named host-proposer unit cases, replayed through the jitted
+    device suffix match — the deterministic rung under the randomized
+    hypothesis differential (tests/test_property_serving.py)."""
+    cases = [
+        ([1, 2, 3, 9, 1, 2, 3, 9], 4, {}),      # period-4 loop
+        ([1, 2, 3, 9, 1, 2, 3, 9], 99, {}),     # k clipped at history end
+        ([5, 1, 2, 7, 7, 1, 2], 3, {}),         # n=2 earliest match
+        ([4, 8, 4], 2, {}),                     # n=1 fallback
+        ([], 4, {}),                            # empty history
+        ([7], 4, {}),                           # no earlier history
+        ([1, 2, 3], 0, {}),                     # k = 0
+        ([1, 2, 3], 4, {}),                     # aperiodic: no match
+        ([1, 5, 2, 5], 2, {"min_n": 2}),        # min_n refuses unigram
+    ]
+    for history, k, kw in cases:
+        want = propose_ngram(history, min(k, 9), max_n=3, **kw)
+        assert _dev(history, k, **kw) == want, (history, k, kw)
+
+
+def test_device_propose_ignores_padding_past_hist_len():
+    """Tokens past ``hist_len`` (stale rolled-back drafts, junk) must
+    never participate in a match: the buffer's tail repeats the
+    history's own suffix, which a missing validity mask would treat as
+    an earlier occurrence."""
+    import jax
+    import jax.numpy as jnp
+    fn = jax.jit(device_propose,
+                 static_argnames=("k_max", "max_n", "min_n"))
+
+    def run(history, pad, k):
+        buf = np.zeros((16,), np.int32)
+        buf[:len(history)] = history
+        buf[len(history):len(history) + len(pad)] = pad
+        draft, m = fn(jnp.asarray(buf), jnp.int32(len(history)),
+                      jnp.int32(k), k_max=9, max_n=3, min_n=1)
+        return [int(t) for t in np.asarray(draft)[:int(m)]]
+
+    # aperiodic history, padding repeats its tail [2,3]: the host finds
+    # nothing, and the padded copy must not be mistaken for a match
+    assert propose_ngram([1, 2, 3], 4, max_n=3) == []
+    assert run([1, 2, 3], [2, 3, 9, 9], 4) == []
+    # looping history: the legit draft clips at hist_len and must not
+    # keep reading into the padding bytes that continue the loop
+    assert propose_ngram([4, 6, 4, 6, 4], 4, max_n=3) == [6, 4]
+    assert run([4, 6, 4, 6, 4], [6, 4, 6, 4], 4) == [6, 4]
+
+
+# --- adaptive K: EWMA algebra, clamping, collapse ------------------------------
+def test_adaptive_k_ewma_update_algebra():
+    ak = AdaptiveK(alpha=0.5, rate=0.75)
+    ak.observe(4, 4)                  # full accept: rate -> 0.875
+    assert ak.rate == pytest.approx(0.875)
+    ak.observe(4, 0)                  # full reject: halfway to 0
+    assert ak.rate == pytest.approx(0.4375)
+    r = ak.rate
+    ak.observe(0, 0)                  # no-draft verify teaches nothing
+    assert ak.rate == r
+    ak.observe(2, 1)
+    assert ak.rate == pytest.approx(r + 0.5 * (0.5 - r))
+
+
+def test_adaptive_k_target_is_expected_accept_run_length():
+    # geometric run length r/(1-r), clamped to k_max
+    assert AdaptiveK(rate=0.75).target(k_max=16) == 3
+    assert AdaptiveK(rate=0.9).target(k_max=16) == 9   # ~0.9/0.1
+    assert AdaptiveK(rate=0.999).target(k_max=16) == 16
+    assert AdaptiveK(rate=1.5).target(k_max=16) == 16  # saturates
+    assert AdaptiveK(rate=0.4).target(k_max=16) == 0   # below break-even
+
+
+def test_adaptive_k_collapses_then_probes():
+    ak = AdaptiveK(alpha=0.5, rate=0.75, probe_every=3)
+    for _ in range(4):
+        ak.observe(3, 0)              # sustained rejection
+    assert ak.rate < 0.1
+    got = [ak.target(8) for _ in range(7)]
+    # disabled (0) with a 1-token probe every probe_every windows
+    assert got == [0, 0, 1, 0, 0, 1, 0]
+    ak.observe(1, 1)                  # an accepted probe re-enables
+    assert ak.target(8) >= 1
+
+
+def test_draft_k_clamps_to_horizon_and_pow2_buckets():
+    spec = NGramSpec(k=15, adaptive=True)
+    # prior rate 0.75 -> target 3; K+1 = 4 is already a verify bucket
+    assert spec.draft_k("r", horizon=16) == 3
+    # horizon clamp: at most horizon-1 drafts, snapped DOWN to a bucket
+    assert spec.draft_k("r", horizon=3) == 1    # cap 2 -> K+1 = 2
+    assert spec.draft_k("r", horizon=2) == 1
+    assert spec.draft_k("r", horizon=1) == 0    # no room to draft
+    # a hot request earns the deep bucket, clamped to k then horizon
+    spec.state("hot").rate = 0.97               # target 32 -> k=15
+    assert spec.draft_k("hot", horizon=16) == 15
+    assert spec.draft_k("hot", horizon=9) == 7  # pow2 snap under the cap
+    # every K the controller emits verifies in an existing pow2 bucket
+    for hz in range(1, 17):
+        K = spec.draft_k("hot", horizon=hz)
+        if K:
+            assert (K + 1) & K == 0             # K+1 is a power of two
+            assert K + 1 <= hz
+
+
+def test_draft_k_sustained_rejection_disables_speculation():
+    spec = NGramSpec(k=8, adaptive=True, probe_every=4)
+    for _ in range(6):
+        spec.observe("r", 4, 0)
+    ks = [spec.draft_k("r", horizon=9) for _ in range(8)]
+    assert ks.count(0) == 6 and ks.count(1) == 2   # probes only
+    spec.forget("r")
+    # fresh state after forget: back to the optimistic prior
+    assert spec.draft_k("r", horizon=9) == 3
 
 
 # --- allocator: speculative rollback -------------------------------------------
@@ -201,7 +331,7 @@ def test_spec_forced_rejection_invalidates_row_signature_and_stays_exact():
     dense = dense_oracle(cfg, params, prompts, gen, max_len)
     eng = make_engine(cfg, params, max_batch=2, n_pages=13,
                       max_len=max_len, prefill_budget=0.0,
-                      spec_decode=True, spec_k=4)
+                      spec_decode=True, spec_k=4, spec_proposer="host")
 
     def wrong(prompt, tokens, k_cap):
         if k_cap < 1 or not tokens:
