@@ -7,7 +7,9 @@ fused-vs-per-step serving comparison with token-identity check),
 ``BENCH_prefix.json`` (the prefix-cache on-vs-off shared-prefix trace:
 hit rate, prefill-token reduction, token identity) and
 ``BENCH_spec.json`` (speculative decoding on-vs-off on the repetitive
-trace: dispatches per token, accept rate, token identity) into
+trace: dispatches per token, accept rate, token identity) and
+``BENCH_slo.json`` (chunked prefill vs monolithic on the overload
+trace: per-SLO-class TTFT percentiles, goodput, token identity) into
 ``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
 unknown pattern is an error listing the valid titles) — the CI
 perf-smoke job runs ``--only micro --json`` and validates the files
@@ -109,6 +111,10 @@ def main() -> None:
                        f"{d['off']['dispatches_per_token']:.3f}, "
                        f"accept_rate={d['on']['accept_rate']:.2f}, "
                        f"spec_speedup={d['spec_speedup']:.2f}x"),
+            ("BENCH_slo.json", st.bench_slo_comparison,
+             lambda d: f"tokens_match={d['tokens_match']}, "
+                       f"p99_ttft_ratio={d['p99_ttft_ratio']:.2f}, "
+                       f"goodput_ratio={d['goodput_ratio']:.2f}"),
         ]
         for fname, bench_fn, summarize in comparisons:
             try:

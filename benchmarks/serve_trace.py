@@ -28,22 +28,41 @@ into BENCH_spec.json (token identity, dispatches per token, accept
 rate, and the wall-clock split wall_s = scan_s + draft_verify_s +
 host_s with the spec_speedup verdict).
 
+``--trace overload`` is the load harness (docs/LOAD_TESTING.md): an
+interactive tenant under diurnal-modulated Poisson arrivals, a batch
+tenant with heavy-tailed Pareto prompt lengths, and a surge tenant that
+dumps a pile at once (overload-and-recover).  Per-request TTFT/TPOT is
+recorded on both the deterministic step clock and the wall clock, and
+``bench_slo_comparison`` replays it twice — ``--chunk-prefill on`` vs
+monolithic — into BENCH_slo.json: p50/p95/p99 TTFT per SLO class,
+goodput (tokens from deadline-met requests), token identity, and the
+gated ``p99_ttft_ratio`` / ``goodput_ratio`` verdicts
+(scripts/check_bench.py::check_slo).
+
 Run:  PYTHONPATH=src python benchmarks/serve_trace.py [--quick]
       PYTHONPATH=src python benchmarks/serve_trace.py --quick \
           --trace shared-prefix --prefix-cache on
       PYTHONPATH=src python benchmarks/serve_trace.py --quick \
           --trace repetitive --batch 1 --spec-decode on
+      PYTHONPATH=src python benchmarks/serve_trace.py --quick \
+          --trace overload --chunk-prefill on
 """
 from __future__ import annotations
 
 import argparse
+import math
 import sys
-from dataclasses import dataclass
-from typing import List, Optional
+from dataclasses import dataclass, replace as dc_replace
+from typing import List, Optional, Union
 
 import numpy as np
 
 sys.path.insert(0, "src")
+
+# Pareto-drawn prompt lengths are quantized to this grid so the
+# monolithic prefill path (which retraces per prompt length) compiles a
+# bounded kernel set; the heavy tail survives quantization
+LEN_QUANTUM = 8
 
 
 @dataclass(frozen=True)
@@ -59,6 +78,14 @@ class Tenant:
     motif: int = 0           # > 0: prompts are a per-request motif of this
                              # many tokens tiled to prompt_len (repetitive
                              # text — speculative-decoding fodder)
+    slo: str = "standard"    # repro.serving.slo class for every request
+    pareto_alpha: float = 0.0   # > 0: prompt lengths are heavy-tailed —
+                                # prompt_len * (1 + Pareto(alpha)), capped
+                                # at max_prompt_len, LEN_QUANTUM-quantized
+    max_prompt_len: int = 0     # Pareto cap (0: 4x prompt_len)
+    rate_period: int = 0     # > 0: diurnal arrivals — the Poisson rate is
+                             # modulated by a sine of this period (steps)
+    rate_amp: float = 0.0    # diurnal modulation depth in [0, 1)
 
 
 def default_tenants(quick: bool = False) -> List[Tenant]:
@@ -98,18 +125,102 @@ def repetitive_tenants(quick: bool = False) -> List[Tenant]:
     return [Tenant("loop", 6, 0.0, 32, 64, at_step=0, motif=4)]
 
 
-def prompt_for(cfg, t: Tenant, rid: int):
+def overload_tenants(quick: bool = False) -> List[Tenant]:
+    """The heavy-traffic trace (BENCH_slo.json, docs/LOAD_TESTING.md):
+
+    * ``interactive`` — short prompts under a diurnal-modulated Poisson
+      stream (the sine-modulated rate is the burst pattern a day of chat
+      traffic shows), SLO class ``interactive`` (tight TTFT deadline);
+    * ``batch`` — heavy-tailed Pareto prompt lengths (alpha ~1.1: most
+      prompts near the floor, rare prompts many times longer — the
+      long-prompt head-of-line hazard), class ``batch``;
+    * ``surge`` — the overload-and-recover phase: a pile of standard
+      requests lands at one step, far over slot capacity, and the queue
+      must drain without starving anyone.
+
+    Full mode is thousands of requests; ``--quick`` keeps the same shape
+    at CI scale."""
+    if quick:
+        return [
+            Tenant("interactive", 18, 0.6, 8, 6, slo="interactive",
+                   rate_period=24, rate_amp=0.8),
+            Tenant("batch", 6, 0.08, 24, 4, slo="batch",
+                   pareto_alpha=1.1, max_prompt_len=96),
+            Tenant("surge", 10, 0.0, 8, 4, at_step=30, slo="standard"),
+        ]
+    return [
+        Tenant("interactive", 1200, 0.8, 12, 8, slo="interactive",
+               rate_period=200, rate_amp=0.8),
+        Tenant("batch", 500, 0.12, 32, 8, slo="batch",
+               pareto_alpha=1.1, max_prompt_len=256),
+        Tenant("surge", 300, 0.0, 12, 6, at_step=400, slo="standard"),
+    ]
+
+
+TRACES = {
+    "mixed": default_tenants,
+    "shared-prefix": shared_prefix_tenants,
+    "repetitive": repetitive_tenants,
+    "overload": overload_tenants,
+}
+
+
+def resolve_tenants(tenants, quick: bool = False) -> List[Tenant]:
+    """Fail-fast trace validation: ``tenants`` may be a trace name, a
+    list of :class:`Tenant`, or None (the default trace).  Anything else
+    — or tenant fields that would only blow up deep inside ``prompt_for``
+    / the engine — exits 2 listing the valid traces, so programmatic
+    callers get the same contract as ``--trace`` argparse choices."""
+    from repro.serving.slo import SLO_CLASSES
+    valid = ", ".join(sorted(TRACES))
+
+    def bail(msg: str):
+        print(f"serve_trace: {msg}; valid traces: {valid}",
+              file=sys.stderr)
+        raise SystemExit(2)
+
+    if tenants is None:
+        return default_tenants(quick)
+    if isinstance(tenants, str):
+        if tenants not in TRACES:
+            bail(f"unknown trace {tenants!r}")
+        return TRACES[tenants](quick)
+    try:
+        tenants = list(tenants)
+    except TypeError:
+        bail(f"tenants must be a trace name or a list of Tenant, "
+             f"got {type(tenants).__name__}")
+    if not tenants:
+        bail("empty tenants list")
+    for t in tenants:
+        if not isinstance(t, Tenant):
+            bail(f"tenants list holds a {type(t).__name__}, not a Tenant")
+        if t.n_requests <= 0 or t.prompt_len <= 0 or t.gen <= 0:
+            bail(f"tenant {t.name!r} has non-positive "
+                 f"n_requests/prompt_len/gen")
+        if t.shared_prefix > t.prompt_len:
+            bail(f"tenant {t.name!r} shared_prefix {t.shared_prefix} "
+                 f"exceeds prompt_len {t.prompt_len}")
+        if t.slo not in SLO_CLASSES:
+            bail(f"tenant {t.name!r} has unknown SLO class {t.slo!r} "
+                 f"(valid: {', '.join(sorted(SLO_CLASSES))})")
+    return tenants
+
+
+def prompt_for(cfg, t: Tenant, rid: int, plen: Optional[int] = None):
     """Request ``rid``'s prompt: the tenant's system prompt (stable
     per-tenant seed) + a unique per-request tail — or, for ``motif``
-    tenants, a per-request motif tiled to prompt_len."""
+    tenants, a per-request motif tiled to the length.  ``plen``
+    overrides the tenant's nominal length (Pareto draws)."""
     import jax
     import zlib
+    plen = t.prompt_len if plen is None else plen
     if t.motif > 0:
         pat = np.asarray(jax.random.randint(jax.random.PRNGKey(rid),
                                             (t.motif,), 2, cfg.vocab_size),
                          np.int32)
-        return np.tile(pat, -(-t.prompt_len // t.motif))[:t.prompt_len]
-    tail_len = t.prompt_len - t.shared_prefix
+        return np.tile(pat, -(-plen // t.motif))[:plen]
+    tail_len = plen - t.shared_prefix
     parts = []
     if t.shared_prefix > 0:
         seed = zlib.crc32(t.name.encode()) % (2 ** 31)
@@ -122,26 +233,55 @@ def prompt_for(cfg, t: Tenant, rid: int):
     return np.concatenate([np.asarray(p, np.int32) for p in parts])
 
 
+def _draw_len(t: Tenant, rng: np.random.Generator) -> int:
+    """Prompt length for one request: the nominal length, or a
+    heavy-tailed Pareto draw quantized to LEN_QUANTUM (bounded compile
+    set) and capped (bounded pool demand)."""
+    if t.pareto_alpha <= 0.0:
+        return t.prompt_len
+    cap = t.max_prompt_len or 4 * t.prompt_len
+    raw = t.prompt_len * (1.0 + rng.pareto(t.pareto_alpha))
+    q = (int(raw) // LEN_QUANTUM) * LEN_QUANTUM
+    return min(cap, max(t.prompt_len, q))
+
+
 def arrivals_for(t: Tenant, rng: np.random.Generator):
-    """(step, tenant) arrival list — Poisson gaps, or one burst."""
+    """(step, prompt_len) arrival list — Poisson gaps (optionally
+    diurnal-modulated), or one burst."""
     if t.rate <= 0.0:
-        return [(t.at_step, t)] * t.n_requests
-    gaps = rng.exponential(1.0 / t.rate, size=t.n_requests)
-    steps = np.floor(np.cumsum(gaps)).astype(int)
-    return [(int(s), t) for s in steps]
+        return [(t.at_step, _draw_len(t, rng))
+                for _ in range(t.n_requests)]
+    out, now = [], 0.0
+    for _ in range(t.n_requests):
+        r = t.rate
+        if t.rate_period > 0 and t.rate_amp > 0.0:
+            # inhomogeneous Poisson via per-gap rate: the day/night sine
+            r = t.rate * (1.0 + t.rate_amp
+                          * math.sin(2.0 * math.pi * now / t.rate_period))
+            r = max(r, 0.05 * t.rate)       # night floor, never zero
+        now += rng.exponential(1.0 / r)
+        out.append((t.at_step + int(now), _draw_len(t, rng)))
+    return out
 
 
-def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
+def replay(tenants: Union[str, List[Tenant], None] = None, *,
+           quick: bool = False, seed: int = 0,
            max_batch: int = 4, page_size: int = 8, n_pages: int = 0,
            arch: str = "tiny-100m", link_mode: str = "circuit",
            prefill_budget: float = 2.0, fused: bool = True,
            max_window: int = 8, warmup: bool = False, params=None,
            prefix_cache: bool = False, spec_decode: bool = False,
-           spec_k="auto"):
+           spec_k="auto", chunk_prefill: bool = False,
+           chunk_tokens: int = 0):
     """Drive the engine window by window, injecting arrivals between
     dispatches.  With ``fused`` the engine decodes multi-token windows,
     capped to the next pending arrival so the trace's admission clock
     stays faithful; ``fused=False`` is the legacy per-step loop.
+
+    ``tenants`` is a trace name from :data:`TRACES`, an explicit
+    ``Tenant`` list, or None (the default trace); anything malformed
+    exits 2 up front (see :func:`resolve_tenants`) instead of failing
+    deep inside ``prompt_for``.
 
     Returns (engine, per-tenant rows, totals).
     """
@@ -150,11 +290,16 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
     from repro.models import lm
     from repro.serving import PagedEngine
 
-    tenants = tenants if tenants is not None else default_tenants()
+    tenants = resolve_tenants(tenants, quick)
     rng = np.random.default_rng(seed)
-    pending = sorted([a for t in tenants for a in arrivals_for(t, rng)],
-                     key=lambda a: a[0])
-    max_len = max(t.prompt_len + t.gen for t in tenants)
+    # materialize the whole trace up front — (step, tenant, rid, plen)
+    # — BEFORE sizing the engine: Pareto tenants only reveal their
+    # worst-case length once drawn
+    arrivals = sorted([(step, t, plen)
+                       for t in tenants
+                       for (step, plen) in arrivals_for(t, rng)],
+                      key=lambda a: a[0])
+    max_len = max(plen + t.gen for (_, t, plen) in arrivals)
     if not n_pages:
         # ~75% of worst-case demand: page pressure without thrash — but
         # never below one request's peak need (batch-1 traces would
@@ -165,22 +310,27 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
     cfg = get_tiny_config(arch)
     if params is None:
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
-    # materialize every arrival's prompt up front: trace construction is
-    # not serving work, and jax.random compiles per prompt shape
-    pending = [(step, t, i, prompt_for(cfg, t, i))
-               for i, (step, t) in enumerate(pending)]
+    # materialize every arrival's prompt up front too: trace
+    # construction is not serving work, and jax.random compiles per
+    # prompt shape
+    pending = [(step, t, i, prompt_for(cfg, t, i, plen))
+               for i, (step, t, plen) in enumerate(arrivals)]
     eng = PagedEngine(cfg, params, max_batch=max_batch,
                       page_size=page_size, n_pages=n_pages,
                       max_len=max_len, link_mode=link_mode,
                       prefill_budget=prefill_budget, fused=fused,
                       max_window=max_window, prefix_cache=prefix_cache,
-                      spec_decode=spec_decode, spec_k=spec_k)
+                      spec_decode=spec_decode, spec_k=spec_k,
+                      chunked_prefill=chunk_prefill,
+                      chunk_tokens=chunk_tokens)
     if warmup:
-        # compile every window bucket + a prefill per DISTINCT prompt
-        # shape in the trace (prefill retraces per length) outside the
-        # timed region
+        # compile every window bucket + a prefill per DISTINCT
+        # materialized prompt length (prefill retraces per length;
+        # chunked engines compile their pow2 chunk buckets the same way)
+        # outside the timed region
         eng.warmup_windows()
-        for i, plen in enumerate(sorted({t.prompt_len for t in tenants})):
+        lens = sorted({p.shape[0] for (_, _, _, p) in pending})
+        for i, plen in enumerate(lens):
             warm = jax.random.randint(jax.random.PRNGKey(10_000 + i),
                                       (plen,), 2, cfg.vocab_size)
             eng.submit(np.asarray(warm), min(2, max_len - plen),
@@ -197,13 +347,14 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
         eng.sched.step_idx = 0
 
     occupancy = []
-    while pending or eng.sched.waiting or eng.sched.running:
+    while pending or eng.sched.waiting or eng.sched.prefilling \
+            or eng.sched.running:
         while pending and pending[0][0] <= eng.sched.step_idx:
             _, t, rid, prompt = pending.pop(0)
             eng.submit(prompt, t.gen, tenant=t.name,
-                       rid=f"{t.name}/{rid}")
+                       rid=f"{t.name}/{rid}", slo=t.slo)
         before = eng.steps_run
-        if eng.sched.waiting or eng.sched.running:
+        if eng.sched.waiting or eng.sched.prefilling or eng.sched.running:
             # never decode past the next arrival: windows respect the
             # trace's clock, not just the scheduler's safe horizon
             cap = pending[0][0] - eng.sched.step_idx if pending else None
@@ -219,11 +370,14 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
     for t in tenants:
         fin = [r for r in eng.sched.finished if r.tenant == t.name]
         ttft = [r.first_token_step - r.arrived_step for r in fin]
+        met = [r for r in fin if r.first_token_step <= r.deadline_step]
         rows.append(dict(
-            tenant=t.name, requests=len(fin),
+            tenant=t.name, slo=t.slo, requests=len(fin),
             tokens=sum(len(r.tokens) for r in fin),
             ttft_mean=float(np.mean(ttft)) if ttft else 0.0,
             ttft_p95=float(np.percentile(ttft, 95)) if ttft else 0.0,
+            ttft_p99=float(np.percentile(ttft, 99)) if ttft else 0.0,
+            slo_met_frac=len(met) / max(len(fin), 1),
             preemptions=sum(r.preemptions for r in fin)))
     m = eng.metrics()
     totals = dict(
@@ -254,7 +408,124 @@ def replay(tenants: Optional[List[Tenant]] = None, *, seed: int = 0,
             cow_copies=m["cow_copies"], shared_pages=m["shared_pages"],
             prefix_evictions=m["prefix_evictions"],
             bytes_deduped=m["bytes_deduped"])
+    if eng.sched.chunked:
+        totals.update(
+            chunk_dispatches=m["chunk_dispatches"],
+            chunk_rounds=m["chunk_rounds"],
+            chunk_tasks=m["chunk_tasks"],
+            chunk_preemptions=m["chunk_preemptions"])
     return eng, rows, totals
+
+
+def slo_stats(eng) -> dict:
+    """Per-SLO-class percentile digest of a finished replay.
+
+    TTFT percentiles are reported on two clocks: the deterministic
+    engine-step clock (``ttft_steps_*`` — what check_bench gates, stable
+    across machines) and the wall clock (``ttft_wall_*_s`` —
+    informational).  ``goodput_tokens`` counts only tokens from requests
+    whose first token landed by their class deadline — the "useful work"
+    number an overloaded fleet optimizes, as opposed to raw throughput
+    that happily burns pages on requests nobody is waiting for any more.
+    """
+    from repro.serving.slo import get_slo
+
+    out = {}
+    for r in eng.sched.finished:
+        out.setdefault(r.slo, []).append(r)
+    digest = {}
+    for name, reqs in sorted(out.items()):
+        slo = get_slo(name)
+        ttft = np.array([r.first_token_step - r.arrived_step
+                         for r in reqs], float)
+        wall = np.array([(r.first_token_wall or 0.0)
+                         - (r.arrived_wall or 0.0) for r in reqs], float)
+        tpot = np.array([((r.finished_wall or 0.0)
+                          - (r.first_token_wall or 0.0))
+                         / max(len(r.tokens) - 1, 1) for r in reqs],
+                        float)
+        met = [r for r in reqs
+               if r.first_token_step <= r.deadline_step]
+        digest[name] = dict(
+            requests=len(reqs),
+            ttft_target_steps=slo.ttft_steps,
+            ttft_steps_p50=float(np.percentile(ttft, 50)),
+            ttft_steps_p95=float(np.percentile(ttft, 95)),
+            ttft_steps_p99=float(np.percentile(ttft, 99)),
+            ttft_wall_p50_s=float(np.percentile(wall, 50)),
+            ttft_wall_p99_s=float(np.percentile(wall, 99)),
+            tpot_wall_mean_s=float(np.mean(tpot)),
+            slo_met_frac=len(met) / max(len(reqs), 1),
+            goodput_tokens=sum(len(r.tokens) for r in met),
+            tokens=sum(len(r.tokens) for r in reqs))
+    return digest
+
+
+def bench_slo_comparison(*, quick: bool = True, seed: int = 0,
+                         max_batch: int = 4, page_size: int = 8,
+                         max_window: int = 8, chunk_tokens: int = 0,
+                         arch: str = "tiny-100m"):
+    """Replay the overload trace twice — chunked prefill (SLO-aware EDF
+    admission, deadline-budgeted chunk rounds) vs the monolithic priced
+    FIFO — with shared params and warmed-up compiles, asserting
+    per-request token identity (chunking is a KV-composition transform,
+    not a sampler change).
+
+    Returns the BENCH_slo.json payload (see
+    scripts/check_bench.py::check_slo).  The gated verdicts are
+    deterministic: ``p99_ttft_ratio`` compares the interactive class's
+    p99 TTFT on the engine-step clock (chunked must not be worse — the
+    whole point of slicing long prefills is that short interactive
+    requests stop waiting behind them), and ``goodput_ratio`` compares
+    deadline-met tokens (chunking must not win latency by throwing away
+    throughput).
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+
+    tenants = overload_tenants(quick)
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    out, toks = {}, {}
+    for mode, chunked in (("chunked", True), ("monolithic", False)):
+        eng, rows, totals = replay(tenants, seed=seed,
+                                   max_batch=max_batch,
+                                   page_size=page_size,
+                                   max_window=max_window,
+                                   chunk_prefill=chunked,
+                                   chunk_tokens=chunk_tokens,
+                                   warmup=True, params=params, arch=arch)
+        toks[mode] = {r.rid: list(r.tokens) for r in eng.sched.finished}
+        per_class = slo_stats(eng)
+        out[mode] = dict(
+            tokens=totals["tokens"], steps=totals["steps"],
+            tok_per_s=totals["tok_per_s"],
+            prefill_tokens=totals["prefill_tokens"],
+            preemptions=totals["preemptions"],
+            goodput_tokens=sum(c["goodput_tokens"]
+                               for c in per_class.values()),
+            slo=per_class)
+        if chunked:
+            out[mode].update(
+                chunk_dispatches=totals["chunk_dispatches"],
+                chunk_rounds=totals["chunk_rounds"],
+                chunk_tasks=totals["chunk_tasks"],
+                chunk_preemptions=totals["chunk_preemptions"])
+    inter_c = out["chunked"]["slo"]["interactive"]
+    inter_m = out["monolithic"]["slo"]["interactive"]
+    return {
+        "schema": "swallow.bench.slo/v1",
+        "arch": arch, "batch": max_batch, "page_size": page_size,
+        "max_window": max_window, "trace": "overload",
+        "quick": quick, "seed": seed,
+        "chunked": out["chunked"], "monolithic": out["monolithic"],
+        "tokens_match": toks["chunked"] == toks["monolithic"],
+        "p99_ttft_ratio": inter_c["ttft_steps_p99"]
+        / max(inter_m["ttft_steps_p99"], 1e-9),
+        "goodput_ratio": out["chunked"]["goodput_tokens"]
+        / max(out["monolithic"]["goodput_tokens"], 1),
+    }
 
 
 def bench_tenants() -> List[Tenant]:
@@ -468,11 +739,14 @@ def bench_spec_comparison(*, quick: bool = True, seed: int = 0,
 def format_table(rows, totals) -> str:
     out = [f"# paged serve trace — {len(rows)} tenants, "
            f"{totals['n_pages']} pages x {totals['page_size']} tokens",
-           f"{'tenant':<10} {'reqs':>5} {'tokens':>7} {'ttft_mean':>10} "
-           f"{'ttft_p95':>9} {'preempt':>8}"]
+           f"{'tenant':<12} {'slo':<11} {'reqs':>5} {'tokens':>7} "
+           f"{'ttft_mean':>10} {'ttft_p95':>9} {'ttft_p99':>9} "
+           f"{'met%':>5} {'preempt':>8}"]
     for r in rows:
-        out.append(f"{r['tenant']:<10} {r['requests']:>5} {r['tokens']:>7} "
-                   f"{r['ttft_mean']:>10.1f} {r['ttft_p95']:>9.1f} "
+        out.append(f"{r['tenant']:<12} {r['slo']:<11} {r['requests']:>5} "
+                   f"{r['tokens']:>7} {r['ttft_mean']:>10.1f} "
+                   f"{r['ttft_p95']:>9.1f} {r['ttft_p99']:>9.1f} "
+                   f"{r['slo_met_frac'] * 100:>4.0f}% "
                    f"{r['preemptions']:>8}")
     t = totals
     out.append(f"{t['steps']} engine steps in {t['windows']} device "
@@ -502,6 +776,11 @@ def format_table(rows, totals) -> str:
                    f"{t['cow_copies']} COW copies, {t['shared_pages']} "
                    f"tree pages, {t['prefix_evictions']} evictions, "
                    f"{t['bytes_deduped'] / 1024:.0f} KiB deduped")
+    if "chunk_dispatches" in t:
+        out.append(f"chunked prefill: {t['chunk_tasks']} chunks in "
+                   f"{t['chunk_rounds']} rounds "
+                   f"({t['chunk_dispatches']} dispatches), "
+                   f"{t['chunk_preemptions']} mid-prefill preemptions")
     return "\n".join(out)
 
 
@@ -510,6 +789,7 @@ def fleet_view(eng) -> str:
     speculative-decoding gauges are engine-wide (acceptance is not
     tracked per tenant), so every tenant row shows the same pair."""
     from repro.core import nos as nos_mod
+    from repro.serving.slo import get_slo
     pod = nos_mod.NOS(data_rows=4, model_cols=1)
     est = eng.decode_estimate      # engine-priced step time & energy
     j_per_token = est.energy.total_j / max(eng.max_batch, 1)
@@ -519,6 +799,11 @@ def fleet_view(eng) -> str:
         fin = [r for r in eng.sched.finished if r.tenant == name]
         ttft = [r.first_token_step - r.arrived_step for r in fin]
         tokens = sum(len(r.tokens) for r in fin)
+        met_tokens = sum(len(r.tokens) for r in fin
+                         if r.first_token_step <= r.deadline_step)
+        # a trace tenant's requests share one SLO class; price its
+        # step-clock deadline to seconds with the engine's own estimate
+        slo = get_slo(fin[0].slo) if fin else None
         pod.submit(nos_mod.Job(name, rows_needed=1))
         pod.update_serving(
             name,
@@ -530,7 +815,12 @@ def fleet_view(eng) -> str:
             preemptions=sum(r.preemptions for r in fin),
             energy_j=tokens * j_per_token,
             accept_rate=m.get("accept_rate"),
-            dispatches_per_token=m.get("dispatches_per_token"))
+            dispatches_per_token=m.get("dispatches_per_token"),
+            ttft_p99_s=(float(np.percentile(ttft, 99)) if ttft else 0.0)
+            * est.step_time_s,
+            ttft_target_s=(slo.ttft_steps * est.step_time_s
+                           if slo else None),
+            goodput_frac=met_tokens / max(tokens, 1))
     return pod.serving_table()
 
 
@@ -551,11 +841,13 @@ def main():
     ap.add_argument("--window", type=int, default=8,
                     help="max fused window (tokens per device dispatch)")
     ap.add_argument("--trace", default="mixed",
-                    choices=["mixed", "shared-prefix", "repetitive"],
+                    choices=sorted(TRACES),
                     help="mixed: the bursty Poisson tenants; "
                          "shared-prefix: N tenants x M requests sharing "
                          "per-tenant system prompts; repetitive: the "
-                         "single-stream motif trace speculation feeds on")
+                         "single-stream motif trace speculation feeds on; "
+                         "overload: the heavy-traffic SLO harness "
+                         "(diurnal interactive + Pareto batch + surge)")
     ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
                     help="radix-tree prefix sharing on the page store")
     ap.add_argument("--spec-decode", default="off", choices=["on", "off"],
@@ -566,20 +858,32 @@ def main():
                     help="max draft tokens per verification dispatch, or "
                          "'auto' for per-request adaptive depth from the "
                          "acceptance EWMA (the default)")
+    ap.add_argument("--chunk-prefill", default="off", choices=["on", "off"],
+                    help="page-aligned chunked prefill with SLO-aware EDF "
+                         "admission (off = monolithic priced FIFO)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="tokens per prefill chunk (0 = 2 pages)")
     args = ap.parse_args()
     spec_k = args.spec_k if args.spec_k == "auto" else int(args.spec_k)
-    tenants = {"shared-prefix": shared_prefix_tenants,
-               "repetitive": repetitive_tenants,
-               "mixed": default_tenants}[args.trace](args.quick)
-    eng, rows, totals = replay(tenants, seed=args.seed,
-                               max_batch=args.batch,
+    eng, rows, totals = replay(args.trace, quick=args.quick,
+                               seed=args.seed, max_batch=args.batch,
                                page_size=args.page_size, n_pages=args.pages,
                                link_mode=args.link_mode, fused=args.fused,
                                max_window=args.window,
                                prefix_cache=args.prefix_cache == "on",
                                spec_decode=args.spec_decode == "on",
-                               spec_k=spec_k)
+                               spec_k=spec_k,
+                               chunk_prefill=args.chunk_prefill == "on",
+                               chunk_tokens=args.chunk_tokens)
     print(format_table(rows, totals))
+    if args.trace == "overload":
+        for cls, d in slo_stats(eng).items():
+            print(f"slo[{cls}]: p50/p95/p99 ttft "
+                  f"{d['ttft_steps_p50']:.0f}/{d['ttft_steps_p95']:.0f}/"
+                  f"{d['ttft_steps_p99']:.0f} steps "
+                  f"(target {d['ttft_target_steps']}), "
+                  f"met {d['slo_met_frac'] * 100:.0f}%, goodput "
+                  f"{d['goodput_tokens']}/{d['tokens']} tokens")
     print("[nOS] fleet serving view:")
     print(fleet_view(eng))
 

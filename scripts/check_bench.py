@@ -31,10 +31,23 @@ that ``benchmarks/run.py --json`` emits.
   (default 1.0: speculation must never lose to the plain scan it
   replaces).
 
+* ``BENCH_slo.json`` (swallow.bench.slo/v1): chunked-prefill vs
+  monolithic stat blocks on the overload trace (diurnal interactive +
+  Pareto batch + surge), each with per-SLO-class TTFT percentile
+  digests.  ``tokens_match`` must be true (chunking is a KV-composition
+  transform, not a sampler change), ``p99_ttft_ratio`` (the interactive
+  class's p99 TTFT on the deterministic engine-step clock,
+  chunked/monolithic) must stay under ``PERF_SMOKE_MAX_P99_TTFT_RATIO``
+  (default 1.0: slicing prefills must never make the interactive tail
+  WORSE), and ``goodput_ratio`` (deadline-met tokens,
+  chunked/monolithic) must clear ``PERF_SMOKE_MIN_GOODPUT_RATIO``
+  (default 1.0: the latency win must not be bought with thrown-away
+  throughput).  All three are deterministic on any host.
+
 Run from the repo root:
     python benchmarks/run.py --only micro --json
     python scripts/check_bench.py BENCH_micro.json BENCH_serve.json \
-        BENCH_prefix.json BENCH_spec.json
+        BENCH_prefix.json BENCH_spec.json BENCH_slo.json
 """
 from __future__ import annotations
 
@@ -204,9 +217,66 @@ def check_spec(doc: dict) -> list:
     return errs
 
 
+REQUIRED_SLO_KEYS = ("tokens", "steps", "tok_per_s", "prefill_tokens",
+                     "goodput_tokens")
+REQUIRED_SLO_CLASS_KEYS = ("requests", "ttft_steps_p50", "ttft_steps_p95",
+                           "ttft_steps_p99", "slo_met_frac",
+                           "goodput_tokens", "tokens")
+
+
+def check_slo(doc: dict) -> list:
+    errs = []
+    if doc.get("schema") != "swallow.bench.slo/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    for mode in ("chunked", "monolithic"):
+        blk = doc.get(mode)
+        if not isinstance(blk, dict):
+            errs.append(f"missing {mode} block")
+            continue
+        for key in REQUIRED_SLO_KEYS:
+            if not _finite_pos(blk.get(key)):
+                errs.append(f"{mode}.{key}: non-finite {blk.get(key)!r}")
+        classes = blk.get("slo")
+        if not isinstance(classes, dict) or not classes:
+            errs.append(f"{mode}.slo: missing per-class digest")
+            continue
+        if "interactive" not in classes:
+            errs.append(f"{mode}.slo: no interactive class (the gated "
+                        "ratio needs one)")
+        for cls, digest in classes.items():
+            for key in REQUIRED_SLO_CLASS_KEYS:
+                if not _finite_pos(digest.get(key)):
+                    errs.append(f"{mode}.slo.{cls}.{key}: non-finite "
+                                f"{digest.get(key)!r}")
+    if doc.get("tokens_match") is not True:
+        errs.append("tokens_match is not true: chunked prefill changed "
+                    "the emitted tokens")
+    if not errs:
+        max_ratio = float(os.environ.get("PERF_SMOKE_MAX_P99_TTFT_RATIO",
+                                         "1.0"))
+        ratio = doc.get("p99_ttft_ratio")
+        if not _finite_pos(ratio):
+            errs.append(f"p99_ttft_ratio: non-finite {ratio!r}")
+        elif ratio > max_ratio:
+            errs.append(f"p99_ttft_ratio {ratio:.3f} > allowed "
+                        f"{max_ratio}: chunked prefill made the "
+                        "interactive p99 TTFT worse")
+        min_good = float(os.environ.get("PERF_SMOKE_MIN_GOODPUT_RATIO",
+                                        "1.0"))
+        good = doc.get("goodput_ratio")
+        if not _finite_pos(good):
+            errs.append(f"goodput_ratio: non-finite {good!r}")
+        elif good < min_good:
+            errs.append(f"goodput_ratio {good:.3f} < required "
+                        f"{min_good}: chunking bought latency with "
+                        "thrown-away throughput")
+    return errs
+
+
 def main() -> None:
     paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json",
-                             "BENCH_prefix.json", "BENCH_spec.json"]
+                             "BENCH_prefix.json", "BENCH_spec.json",
+                             "BENCH_slo.json"]
     failures = []
     for path in paths:
         try:
@@ -222,6 +292,8 @@ def main() -> None:
             errs = check_prefix(doc)
         elif "spec" in schema or "spec" in os.path.basename(path):
             errs = check_spec(doc)
+        elif "slo" in schema or "slo" in os.path.basename(path):
+            errs = check_slo(doc)
         else:
             errs = check_serve(doc)
         for e in errs:

@@ -68,6 +68,10 @@ class Job:
     accept_rate: float = 0.0           # draft tokens the verifier kept
     dispatches_per_token: float = 0.0  # sequential model passes per token
     spec_k: float = 0.0                # mean adaptive draft depth requested
+    # -- SLO telemetry (repro.serving.slo + the chunked scheduler) -----------
+    ttft_p99_s: float = 0.0            # tail first-token latency observed
+    ttft_target_s: float = 0.0         # the class deadline, priced to seconds
+    goodput_frac: float = 0.0          # fraction of tokens from SLO-met reqs
 
 
 @dataclass
@@ -209,7 +213,10 @@ class NOS:
                        bytes_deduped: Optional[int] = None,
                        accept_rate: Optional[float] = None,
                        dispatches_per_token: Optional[float] = None,
-                       spec_k: Optional[float] = None):
+                       spec_k: Optional[float] = None,
+                       ttft_p99_s: Optional[float] = None,
+                       ttft_target_s: Optional[float] = None,
+                       goodput_frac: Optional[float] = None):
         """Serving-engine telemetry (§VIII: nOS owns per-application
         accounting).  The paged engine calls this per replay/step batch;
         ``energy_j`` accrues (engine-priced decode energy), ``peak_pages``
@@ -221,7 +228,12 @@ class NOS:
         ``dispatches_per_token`` / ``spec_k``) surface the §V
         payload-per-dispatch lever: how many sequential model passes
         each emitted token cost, and how deep the per-tenant adaptive
-        controller is currently drafting."""
+        controller is currently drafting.  The SLO gauges (``ttft_p99_s``
+        vs ``ttft_target_s``, ``goodput_frac``) surface the chunked
+        scheduler's deadline contract: tail first-token latency against
+        the tenant's class deadline (priced to seconds by the cost
+        engine's ``decode_cost_s``) and the fraction of emitted tokens
+        that came from requests whose deadline was met."""
         job = self.jobs[name]
         if pages_held is not None:
             job.pages_held = pages_held
@@ -248,17 +260,27 @@ class NOS:
             job.dispatches_per_token = dispatches_per_token
         if spec_k is not None:
             job.spec_k = spec_k
+        if ttft_p99_s is not None:
+            job.ttft_p99_s = ttft_p99_s
+        if ttft_target_s is not None:
+            job.ttft_target_s = ttft_target_s
+        if goodput_frac is not None:
+            job.goodput_frac = goodput_frac
 
     def serving_table(self) -> str:
-        """Fleet view of the serving gauges (pages, tokens, TTFT, and the
-        prefix-sharing overlay columns)."""
+        """Fleet view of the serving gauges (pages, tokens, TTFT, the
+        prefix-sharing overlay columns, and the SLO contract: observed
+        p99 TTFT vs the class target, plus goodput)."""
         rows = [f"{'job':<18} {'pages':>6} {'peak':>5} {'tokens':>8} "
                 f"{'ttft_s':>9} {'preempt':>7} {'energy_J':>10} "
                 f"{'shared':>6} {'hit%':>5} {'dedupKB':>8} "
-                f"{'acc%':>5} {'disp/tok':>8} {'K':>5}"]
+                f"{'acc%':>5} {'disp/tok':>8} {'K':>5} "
+                f"{'p99/tgt_s':>18} {'good%':>5}"]
         for j in self.jobs.values():
             if j.tokens_out == 0 and j.peak_pages == 0:
                 continue
+            slo = f"{j.ttft_p99_s:>8.2e}/{j.ttft_target_s:<8.2e}" \
+                if j.ttft_target_s > 0 else f"{'-':>18}"
             rows.append(f"{j.name:<18} {j.pages_held:>6} {j.peak_pages:>5} "
                         f"{j.tokens_out:>8} {j.queue_latency_s:>9.2e} "
                         f"{j.preemptions:>7} {j.energy_j:>10.3g} "
@@ -267,7 +289,9 @@ class NOS:
                         f"{j.bytes_deduped / 1024:>8.0f} "
                         f"{j.accept_rate * 100:>5.0f} "
                         f"{j.dispatches_per_token:>8.2f} "
-                        f"{j.spec_k:>5.1f}")
+                        f"{j.spec_k:>5.1f} "
+                        f"{slo} "
+                        f"{j.goodput_frac * 100:>5.0f}")
         return "\n".join(rows)
 
     def placement_table(self) -> str:

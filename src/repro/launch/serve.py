@@ -11,6 +11,9 @@ wholesale.  ``--engine paged`` routes through :mod:`repro.serving` — the
 paged-KV continuous-batching engine (Swallow §III farmer-worker over the
 §X-B striped store); both engines decode greedily and produce identical
 tokens on the same prompts (pinned by tests/test_serving.py).
+``--chunk-prefill on`` slices paged prefills into page-aligned chunks
+co-scheduled with decode windows, with ``--slo`` stamping every request's
+class (TTFT deadline + tolerable stall — docs/SERVING.md).
 
 ``--layout auto`` asks the cost engine for the fastest (data, model)
 mesh for the decode shape and reports predicted vs measured per-token
@@ -131,7 +134,9 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
                       fused=args.fused, max_window=args.window,
                       prefix_cache=args.prefix_cache == "on",
                       spec_decode=args.spec_decode == "on",
-                      spec_k=args.spec_k)
+                      spec_k=args.spec_k,
+                      chunked_prefill=args.chunk_prefill == "on",
+                      chunk_tokens=args.chunk_tokens)
     prompts = _stream_prompts(args, cfg)
     # warmup both jitted paths (prefill + every fused-window bucket),
     # then reset clocks
@@ -146,7 +151,7 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
         eng.cache.clear()      # the measured run starts with a cold tree
 
     for i, p in enumerate(prompts):
-        eng.submit(np.asarray(p), args.gen, rid=f"req{i}")
+        eng.submit(np.asarray(p), args.gen, rid=f"req{i}", slo=args.slo)
     t0 = time.time()
     finished = eng.run()
     dt = time.time() - t0
@@ -169,6 +174,11 @@ def report_fleet(args, cfg, eng, tokens_out: int):
                mode=args.link_mode, max_rows=1)
     est = pod.jobs["serve"].estimate
     m = eng.metrics()
+    from repro.serving.slo import get_slo
+    slo = get_slo(args.slo)
+    fin = eng.sched.finished
+    met_tokens = sum(len(r.tokens) for r in fin
+                     if r.first_token_step <= r.deadline_step)
     pod.update_serving(
         "serve", pages_held=eng.alloc.pages_in_use,
         peak_pages=m["peak_pages"],
@@ -181,7 +191,10 @@ def report_fleet(args, cfg, eng, tokens_out: int):
         bytes_deduped=m.get("bytes_deduped"),
         accept_rate=m.get("accept_rate"),
         dispatches_per_token=m.get("dispatches_per_token"),
-        spec_k=m.get("spec_k_mean"))
+        spec_k=m.get("spec_k_mean"),
+        ttft_p99_s=m["ttft_steps_p99"] * est.step_time_s,
+        ttft_target_s=slo.ttft_steps * est.step_time_s,
+        goodput_frac=met_tokens / max(tokens_out, 1))
     print("[nOS] fleet serving view:")
     print(pod.serving_table())
 
@@ -234,6 +247,18 @@ def main():
                          "integer for a fixed depth, or 'auto' (default) "
                          "for the per-tenant acceptance-EWMA adaptive "
                          "controller (AdaptiveK)")
+    ap.add_argument("--chunk-prefill", default="off", choices=["on", "off"],
+                    help="paged engine: split prefills into page-aligned "
+                         "chunks co-scheduled with decode windows under "
+                         "SLO-aware EDF admission (docs/SERVING.md; off = "
+                         "monolithic priced-FIFO prefill)")
+    ap.add_argument("--chunk-tokens", type=int, default=0,
+                    help="tokens per prefill chunk (0 = 2 pages)")
+    ap.add_argument("--slo", default="standard",
+                    choices=["interactive", "standard", "batch"],
+                    help="SLO class stamped on every submitted request "
+                         "(TTFT deadline + tolerable prefill stall; "
+                         "drives the chunked scheduler)")
     args = ap.parse_args()
     if args.spec_k != "auto":
         args.spec_k = int(args.spec_k)
@@ -302,6 +327,13 @@ def main():
                       f"{m['spec_k_mean']:.1f}; draft+verify "
                       f"{m['spec_verify_s']:.3f}s of {m['decode_s']:.3f}s "
                       f"decode")
+        if eng.sched.chunked:
+            print(f"[paged] chunked prefill: {m['chunk_tasks']} chunks in "
+                  f"{m['chunk_rounds']} rounds "
+                  f"({m['chunk_dispatches']} dispatches, "
+                  f"{m['chunk_preemptions']} mid-prefill preemptions); "
+                  f"SLO class {args.slo}, p99 TTFT "
+                  f"{m['ttft_steps_p99']:.1f} steps")
         if eng.cache is not None:
             print(f"[paged] prefix cache: {m['prefix_hit_rate'] * 100:.0f}%"
                   f" hit rate ({m['prefix_hits']}/{m['prefix_lookups']}), "

@@ -594,6 +594,24 @@ def prefill_suffix_paged(params, cfg, tokens, pools, block_row, start,
     return head_logits(params, cfg, h_last), new_pools
 
 
+def chunk_prefill_paged(params, cfg, tokens, pools, block_row, start,
+                        n_valid):
+    """One slice of a chunked prefill: positions ``start ..
+    start+n_valid-1`` of a prompt whose earlier KV (cached prefix or
+    previous chunks — the suffix body cannot tell the difference) is
+    already in the pages named by ``block_row``.  A chunk at offset
+    ``start`` IS a suffix continuation at ``start``, so this shares
+    :func:`prefill_suffix_paged`'s body verbatim; composing k chunks
+    writes the same KV, in the same order, with the same arithmetic, as
+    one monolithic dispatch — the bit-identity the chunked oracle rung
+    pins.  Only the final chunk's returned logits are consumed (the
+    first generated token); intermediate chunks are dispatched for their
+    pool side effect alone.
+    """
+    return prefill_suffix_paged(params, cfg, tokens, pools, block_row,
+                                start, n_valid)
+
+
 def verify_window_paged(params, cfg, tokens, pools, block_row, start,
                         n_valid):
     """Speculative-decoding verification: score K+1 continuation

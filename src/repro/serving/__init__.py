@@ -16,10 +16,14 @@
                dispatches per emitted token below 1.0; the proposer
                runs on device by default (fused draft+verify chain)
                with per-request adaptive draft depth (AdaptiveK)
+  slo        — per-tenant SLO classes (TTFT deadlines on the step
+               clock, tolerable-stall fractions) driving the chunked
+               scheduler's EDF admission and per-window chunk budget
 
 Entry points: ``repro.launch.serve --engine paged [--prefix-cache on]
-[--spec-decode on]`` and ``benchmarks/serve_trace.py``; docs in
-docs/SERVING.md, docs/PREFIX_CACHE.md and docs/TESTING.md.
+[--spec-decode on] [--chunk-prefill on --slo <class>]`` and
+``benchmarks/serve_trace.py``; docs in docs/SERVING.md,
+docs/PREFIX_CACHE.md, docs/LOAD_TESTING.md and docs/TESTING.md.
 """
 from repro.serving.engine import PagedEngine
 from repro.serving.paged_kv import NULL_PAGE, PageAllocator
@@ -27,6 +31,7 @@ from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,
                                         RadixNode)
 from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
                                      StepPlan)
+from repro.serving.slo import DEFAULT_SLO, SLO_CLASSES, SLOClass, get_slo
 from repro.serving.spec_decode import (AdaptiveK, NGramSpec, SpecStats,
                                        device_propose, propose_ngram)
 
@@ -34,4 +39,5 @@ __all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
            "PrefixCache", "PrefixMatch", "RadixNode",
            "ContinuousBatchScheduler", "Request", "StepPlan",
            "NGramSpec", "SpecStats", "AdaptiveK", "propose_ngram",
-           "device_propose"]
+           "device_propose",
+           "SLOClass", "SLO_CLASSES", "DEFAULT_SLO", "get_slo"]

@@ -59,6 +59,18 @@ and slots the gate prices out ride the normal fused window — so greedy
 tokens stay bit-identical with speculation on or off
 (tests/test_spec_decode.py, tests/test_serving_fuzz.py).
 
+Chunked prefill (``chunked_prefill=True``): admission no longer pays a
+prompt's whole prefill up front.  Admitted requests sit in the
+scheduler's ``prefilling`` state (pages fully allocated, slot held, no
+device mirror entry) and each engine step dispatches a budgeted round of
+page-aligned chunk slices (``make_chunk_prefill`` — the suffix-prefill
+body at successive offsets) *before* the decode window, so a 10k-token
+prompt costs each decoding tenant at most the SLO-priced chunk budget
+per window instead of a full stall.  Only the final chunk's logits are
+pulled (the first token); composing chunks writes bit-identical KV to
+one monolithic dispatch, so greedy tokens match with chunking on or off
+(tests/test_serving_fuzz.py's 32-config cube).
+
 Greedy decoding throughout: fused vs per-step vs dense token equality is
 an acceptance gate (tests/test_serving.py), and it is also what makes
 recompute-preemption exact.
@@ -96,6 +108,8 @@ def _jitted_steps(cfg):
                         static_argnames=("k",), donate_argnums=(2,)),
         "suffix": jax.jit(steps_mod.make_paged_suffix_prefill(cfg),
                           donate_argnums=(2,)),
+        "chunk": jax.jit(steps_mod.make_chunk_prefill(cfg),
+                         donate_argnums=(2,)),
         "verify": jax.jit(steps_mod.make_verify_window(cfg),
                           donate_argnums=(2,)),
         "spec": jax.jit(steps_mod.make_spec_draft_verify(cfg),
@@ -123,7 +137,8 @@ class PagedEngine:
                  fused: bool = True, max_window: int = 8,
                  prefix_cache: bool = False, spec_decode: bool = False,
                  spec_k=8, spec_ngram: int = 3,
-                 spec_proposer: str = "device"):
+                 spec_proposer: str = "device",
+                 chunked_prefill: bool = False, chunk_tokens: int = 0):
         import jax.numpy as jnp
         from repro.models import lm, modules as nn
 
@@ -172,7 +187,8 @@ class PagedEngine:
             prefill_cost_s=self._prefill_cost(link_mode, n_nodes),
             decode_cost_s=self.decode_estimate.step_time_s,
             prefill_budget=prefill_budget,
-            prefix_cache=self.cache)
+            prefix_cache=self.cache,
+            chunked=chunked_prefill, chunk_tokens=chunk_tokens)
 
         self.pools = lm.init_paged_caches(cfg, n_pages=n_pages,
                                           page_size=page_size)
@@ -181,6 +197,7 @@ class PagedEngine:
         self._serve = steps["serve"]
         self._scan = steps["scan"]
         self._suffix = steps["suffix"]
+        self._chunk = steps["chunk"]
         self._verify = steps["verify"]
         self._spec_step = steps["spec"]
         self._copy_page = steps["copy_page"]
@@ -228,6 +245,7 @@ class PagedEngine:
         self.block_row_writes = 0
         self.peak_pages = 0
         self.prefill_tokens = 0        # prompt tokens actually computed
+        self.chunk_dispatches = 0      # chunked-prefill model dispatches
         # sequential model executions (a fused K-scan counts K): the
         # denominator-side of dispatches_per_token, the observable
         # speculative decoding attacks
@@ -248,6 +266,9 @@ class PagedEngine:
         self.h2d_syncs = self.d2h_syncs = self.block_row_writes = 0
         self.peak_pages = 0
         self.prefill_tokens = 0
+        self.chunk_dispatches = 0
+        self.sched.chunk_rounds = self.sched.chunk_tasks = 0
+        self.sched.chunk_preemptions = 0
         self.model_passes = 0
         if self.spec is not None:
             self.spec.stats = SpecStats()
@@ -273,7 +294,7 @@ class PagedEngine:
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt, gen: int, *, tenant: str = "default",
-               rid: Optional[str] = None) -> Request:
+               rid: Optional[str] = None, slo: str = "standard") -> Request:
         prompt = np.asarray(prompt, np.int32)
         assert prompt.ndim == 1 and prompt.shape[0] + gen <= self.max_len
         rid = rid or f"r{self._n_submitted}"
@@ -281,7 +302,7 @@ class PagedEngine:
         key = tuple(int(t) for t in prompt) if self.cache is not None \
             else None
         req = Request(rid=rid, prompt_len=int(prompt.shape[0]), gen=gen,
-                      tenant=tenant, prompt=prompt, prompt_key=key)
+                      tenant=tenant, prompt=prompt, prompt_key=key, slo=slo)
         self.sched.submit(req)
         return req
 
@@ -516,6 +537,80 @@ class PagedEngine:
         self.d2h_syncs += 1            # blocking first-token pull
         self.prefill_tokens += slen
         return tok
+
+    # -- chunked prefill (page-aligned slices between decode windows) ------
+    def _begin_chunked(self, req: Request):
+        """Chunked admission: no model pass yet — only the COW copy when
+        the prefix-cache match diverges mid-page, exactly as
+        :meth:`_do_prefill`'s hit branch would have done.  The block row
+        rides into each chunk dispatch directly (the device mirror never
+        sees a prefilling slot)."""
+        jnp = self._jnp
+        match = req.prefix_match
+        if self.cache is not None and match is not None \
+                and match.cow_src is not None:
+            dst = self.alloc.held[req.rid][req.cached_tokens
+                                           // self.page_size]
+            self.pools = self._copy_page(self.pools,
+                                         jnp.int32(match.cow_src),
+                                         jnp.int32(dst))
+            self.cache.stats.cow_copies += 1
+            self.cache.release_cow(match)
+
+    def _do_chunk(self, req: Request, start: int, n: int) -> Optional[int]:
+        """Dispatch ONE page-aligned prefill chunk — positions ``start ..
+        start+n-1`` — padded to a pow2 bucket (same rule as the suffix
+        path, so a heavy-tailed length distribution compiles O(log)
+        kernels).  Returns the first greedy token when this was the final
+        chunk, else None (intermediate logits are never pulled: one d2h
+        per request, not per chunk)."""
+        jnp = self._jnp
+        row = self._block_row(req.rid)
+        seg = np.asarray(req.prompt[start:start + n], np.int32)
+        w = self._pow2_ceil(n)
+        padded = np.zeros((1, w), np.int32)
+        padded[0, :n] = seg
+        logits, self.pools = self._chunk(
+            self.params, jnp.asarray(padded), self.pools, jnp.asarray(row),
+            jnp.int32(start), jnp.int32(n))
+        self.h2d_syncs += 1            # chunk + block row push
+        self.model_passes += 1
+        self.chunk_dispatches += 1
+        self.prefill_tokens += n
+        if start + n == req.prompt_len:
+            tok = int(jnp.argmax(logits, -1)[0, 0])
+            self.d2h_syncs += 1        # blocking first-token pull
+            return tok
+        return None
+
+    def _chunk_round(self, max_window: Optional[int]) -> List[Request]:
+        """One chunk round: ask the scheduler for this window's budgeted
+        page-aligned slices and dispatch them before decode, so a
+        request whose final chunk lands here joins the very next decode
+        window."""
+        k_budget = self.max_window if max_window is None \
+            else max(1, min(self.max_window, max_window))
+        if not self.fused:
+            k_budget = 1
+        finished: List[Request] = []
+        for req, start, n in self.sched.plan_chunks(k_budget):
+            tok = self._do_chunk(req, start, n)
+            if tok is None:
+                continue
+            row = self._block_row(req.rid)
+            if self.cache is not None:
+                # all prompt pages are immutable now — graft them, same
+                # as the monolithic path does right after prefill
+                self.cache.insert(req.prompt_key,
+                                  self.alloc.held[req.rid],
+                                  req.prompt_len)
+            self.sched.finish_prefill(req, tok)
+            self.tokens_emitted += 1
+            if req.state == "running":
+                self._occupy_slot(req, row, tok)
+            else:                      # gen == 1: finished at prefill
+                finished.append(req)
+        return finished
 
     # -- one engine step (a window of >= 1 scheduler steps) ----------------
     @staticmethod
@@ -781,6 +876,9 @@ class PagedEngine:
                     and self._slot_sig[slot] is not None:
                 self._clear_slot(slot)
         for req in plan.admitted:
+            if self.sched.chunked:
+                self._begin_chunked(req)   # COW only; chunks do the rest
+                continue
             row = self._block_row(req.rid)
             tok = self._do_prefill(req, row, jnp)
             if self.cache is not None:
@@ -796,6 +894,11 @@ class PagedEngine:
                 self._occupy_slot(req, row, tok)
             else:                          # gen == 1: finished at prefill
                 finished.append(req)
+        if self.sched.chunked and self.sched.prefilling:
+            # budgeted chunk round BEFORE the decode window: a prompt
+            # finishing its last chunk decodes in this very window, and
+            # decoding tenants see at most the budget's interference
+            finished += self._chunk_round(max_window)
         if self.sched.running and self.spec is not None:
             finished += self._spec_window(max_window)
         elif self.sched.running:
@@ -847,12 +950,13 @@ class PagedEngine:
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
         """Step until every submitted request finished."""
-        while (self.sched.waiting or self.sched.running) \
-                and self.steps_run < max_steps:
+        while (self.sched.waiting or self.sched.running
+               or self.sched.prefilling) and self.steps_run < max_steps:
             self.step()
-        if self.sched.waiting or self.sched.running:
+        if self.sched.waiting or self.sched.running or self.sched.prefilling:
             raise RuntimeError(
                 f"engine wedged: {len(self.sched.waiting)} waiting / "
+                f"{len(self.sched.prefilling)} prefilling / "
                 f"{len(self.sched.running)} running after {max_steps} steps")
         assert self.sched.conserved(self._n_submitted)
         return self.sched.finished
@@ -891,6 +995,7 @@ class PagedEngine:
             "dispatches_per_token": self.model_passes / max(emitted, 1),
             "ttft_steps_mean": float(np.mean(ttft)) if ttft else 0.0,
             "ttft_steps_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
+            "ttft_steps_p99": float(np.percentile(ttft, 99)) if ttft else 0.0,
             "pages_in_use": self.alloc.pages_in_use,
             "peak_pages": self.peak_pages,
             "page_occupancy": self.peak_pages / max(self.alloc.n_pages - 1,
@@ -898,6 +1003,14 @@ class PagedEngine:
             "preemptions": sum(r.preemptions for r in self.sched.all_requests),
             "prefill_tokens": self.prefill_tokens,
         }
+        if self.sched.chunked:
+            out.update({
+                "chunk_dispatches": self.chunk_dispatches,
+                "chunk_rounds": self.sched.chunk_rounds,
+                "chunk_tasks": self.sched.chunk_tasks,
+                "chunk_preemptions": self.sched.chunk_preemptions,
+                "prefilling": len(self.sched.prefilling),
+            })
         if self.spec is not None:
             s = self.spec.stats
             out.update({

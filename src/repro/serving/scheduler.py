@@ -38,15 +38,32 @@ conservation and recompute-exactness properties are unchanged; only the
 clock bookkeeping differs (the engine advances ``step_idx`` once per
 window by the deepest per-slot emission).
 
+Chunked prefill + SLO classes (the §III farmer made fair): with
+``chunked=True`` a long prompt no longer stalls every decoding tenant
+for its full duration.  Admitted requests enter a ``prefilling`` state
+(slot held, pages fully allocated, KV filled page-aligned chunk by
+chunk via :meth:`plan_chunks`), and the single ``prefill_budget`` scalar
+is replaced by a *deadline-driven chunk budget*: each decode window
+tolerates at most ``window_s * min(stall_frac)`` seconds of prefill
+interference (both sides priced by :func:`repro.core.costs.estimate`,
+the same engine nOS admission uses), distributed earliest-deadline-first
+over per-tenant :class:`repro.serving.slo.SLOClass` targets.  Every
+prefilling request is guaranteed at least one chunk per round regardless
+of budget — progress is strict, so sustained overload cannot starve any
+admitted request — and EDF over fixed deadlines keeps the waiting queue
+starvation-free too.
+
 Pure host-side state machine: no jax imports.  The engine applies the
 returned plan to device arrays.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.serving.paged_kv import PageAllocator
+from repro.serving.slo import DEFAULT_SLO, get_slo
 
 
 @dataclass
@@ -59,14 +76,21 @@ class Request:
     seq: int = 0                     # monotonic submission order (FIFO key)
     prompt: object = None            # (S,) int32 array; opaque to the host
     prompt_key: Optional[tuple] = None   # token ids (prefix-cache key)
+    slo: str = DEFAULT_SLO           # repro.serving.slo class name
     # -- lifecycle ---------------------------------------------------------
-    state: str = "waiting"           # waiting | running | finished
+    state: str = "waiting"           # waiting | prefilling | running | finished
     slot: Optional[int] = None
     pos: int = 0                     # next KV write position
+    prefilled: int = 0               # prompt tokens with KV written (chunked)
     tokens: List[int] = field(default_factory=list)
+    deadline_step: int = 0           # arrived_step + slo.ttft_steps
     first_token_step: Optional[int] = None
     finished_step: Optional[int] = None
     preemptions: int = 0
+    # wall stamps (telemetry only — scheduling never reads the wall clock)
+    arrived_wall: float = 0.0
+    first_token_wall: float = 0.0
+    finished_wall: float = 0.0
     # -- prefix-cache state (set at admission, consumed by the engine) -----
     cached_tokens: int = 0           # prompt tokens served from shared pages
     prefix_match: Optional[object] = None   # prefix_cache.PrefixMatch
@@ -91,18 +115,31 @@ class ContinuousBatchScheduler:
                  prefill_cost_s: Optional[Callable[[int], float]] = None,
                  decode_cost_s: float = 0.0,
                  prefill_budget: float = 2.0,
-                 prefix_cache=None):
+                 prefix_cache=None,
+                 chunked: bool = False,
+                 chunk_tokens: int = 0):
         self.alloc = allocator
         self.max_batch = max_batch
         self.prefill_cost_s = prefill_cost_s
         self.decode_cost_s = decode_cost_s
         self.prefill_budget = prefill_budget
         self.cache = prefix_cache        # prefix_cache.PrefixCache or None
+        self.chunked = chunked
+        # page-aligned chunk quantum; a slice never splits a page except
+        # at the prompt's tail
+        self.chunk_tokens = chunk_tokens or 2 * allocator.page_size
+        if self.chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
         self.waiting: List[Request] = []
         self.running: Dict[int, Request] = {}      # slot -> request
+        self.prefilling: Dict[int, Request] = {}   # slot -> request (chunked)
         self.finished: List[Request] = []
         self.step_idx = 0
         self._next_seq = 0
+        # chunk telemetry (pinned by tests, surfaced via engine metrics)
+        self.chunk_rounds = 0
+        self.chunk_tasks = 0
+        self.chunk_preemptions = 0       # preempted while half-prefilled
 
     # -- submission --------------------------------------------------------
     def submit(self, req: Request):
@@ -114,11 +151,26 @@ class ContinuousBatchScheduler:
         req.arrived_step = self.step_idx
         req.seq = self._next_seq
         self._next_seq += 1
+        req.deadline_step = get_slo(req.slo).deadline(req.arrived_step)
+        req.arrived_wall = time.time()
         self.waiting.append(req)
         self._sort_waiting()
 
+    def _edf_key(self, r: Request):
+        s = get_slo(r.slo)
+        return (r.deadline_step, s.priority, r.arrived_step, r.seq)
+
     def _sort_waiting(self):
-        self.waiting.sort(key=lambda r: (r.arrived_step, r.seq))
+        if self.chunked:
+            # earliest-deadline-first: deadlines are fixed at submission
+            # on a monotonic clock, so EDF cannot starve — a waiting
+            # request only ever moves toward the head
+            self.waiting.sort(key=self._edf_key)
+        else:
+            self.waiting.sort(key=lambda r: (r.arrived_step, r.seq))
+
+    def _slots_in_use(self) -> int:
+        return len(self.running) + len(self.prefilling)
 
     # -- the per-step state machine ---------------------------------------
     def plan_step(self) -> StepPlan:
@@ -144,11 +196,17 @@ class ContinuousBatchScheduler:
         alternately evict each other one window before completion,
         forever.  With arrival order respected, the earliest running
         request is never preempted, so it always finishes, frees its
-        pages, and the pool drains in arrival order."""
-        if not self.running:
+        pages, and the pool drains in arrival order.
+
+        Chunked mode adds half-prefilled requests to the victim pool:
+        they hold pages too, and they are usually the latest arrivals —
+        a preempted chunk victim recomputes from scratch (through the
+        prefix cache if its early pages were donated), exactly like a
+        decode victim."""
+        pool = list(self.running.values()) + list(self.prefilling.values())
+        if not pool:
             return None
-        return max(self.running.values(),
-                   key=lambda r: (r.arrived_step, r.seq))
+        return max(pool, key=lambda r: (r.arrived_step, r.seq))
 
     def _preempt(self, req: Request, plan: StepPlan):
         # drops only this request's references: pages the prefix cache or
@@ -159,9 +217,14 @@ class ContinuousBatchScheduler:
             # (not in held) or the page leaks as permanently unevictable
             self.cache.release_cow(req.prefix_match)
         self.alloc.free(req.rid)
-        del self.running[req.slot]
+        if req.state == "prefilling":
+            del self.prefilling[req.slot]
+            self.chunk_preemptions += 1
+        else:
+            del self.running[req.slot]
         req.state, req.slot = "waiting", None
         req.pos = 0
+        req.prefilled = 0
         req.tokens = []               # greedy decode: recompute is exact
         req.first_token_step = None
         req.cached_tokens, req.prefix_match = 0, None
@@ -192,10 +255,38 @@ class ContinuousBatchScheduler:
             return req.prompt_len
         return req.prompt_len - self.cache.peek(req.prompt_key)
 
+    def _take_pages(self, req: Request):
+        """Acquire the prefix-cache match and allocate the request's full
+        page run (prompt + first decode page).  Returns True on success;
+        on page pressure every acquired reference is released."""
+        match = None
+        shared = []
+        if self.cache is not None and req.prompt_key is not None:
+            match = self.cache.acquire(req.prompt_key)
+            shared = match.pages
+        n_fresh = self.alloc.pages_for(req.prompt_len + 1) - len(shared)
+        pages = self.alloc.alloc(req.rid, n_fresh, prefix=shared)
+        if pages is None:
+            if match is not None:
+                self.cache.release_match(match)
+            return False              # page pressure: wait for frees
+        if match is not None:
+            self.cache.commit_match(match)
+        req.cached_tokens = match.length if match is not None else 0
+        req.prefix_match = match
+        return True
+
+    def _free_slot(self) -> int:
+        used = set(self.running) | set(self.prefilling)
+        return min(set(range(self.max_batch)) - used)
+
     def _admit(self, plan: StepPlan):
+        if self.chunked:
+            self._admit_chunked(plan)
+            return
         budget = self.prefill_budget * self.decode_cost_s
         spent = 0.0
-        while self.waiting and len(self.running) < self.max_batch:
+        while self.waiting and self._slots_in_use() < self.max_batch:
             req = self.waiting[0]
             # admission is priced on UNCACHED prefill tokens only: a
             # request whose prompt is mostly shared pages is nearly free
@@ -204,29 +295,107 @@ class ContinuousBatchScheduler:
             starving = not self.running and not plan.admitted
             if budget > 0.0 and spent + cost > budget and not starving:
                 break                 # interference budget exhausted
-            match = None
-            shared = []
-            if self.cache is not None and req.prompt_key is not None:
-                match = self.cache.acquire(req.prompt_key)
-                shared = match.pages
-            n_fresh = self.alloc.pages_for(req.prompt_len + 1) - len(shared)
-            pages = self.alloc.alloc(req.rid, n_fresh, prefix=shared)
-            if pages is None:
-                if match is not None:
-                    self.cache.release_match(match)
+            if not self._take_pages(req):
                 break                 # page pressure: wait for frees
-            if match is not None:
-                self.cache.commit_match(match)
-            req.cached_tokens = match.length if match is not None else 0
-            req.prefix_match = match
             self.waiting.pop(0)
-            free_slots = set(range(self.max_batch)) - set(self.running)
-            req.slot = min(free_slots)
+            req.slot = self._free_slot()
             req.state = "running"
             req.pos = req.prompt_len
             self.running[req.slot] = req
             plan.admitted.append(req)
             spent += cost
+
+    def _admit_chunked(self, plan: StepPlan):
+        """EDF admission into the ``prefilling`` state.  No interference
+        budget here — that is the whole point: a long prompt's cost is
+        paid chunk by chunk under :meth:`plan_chunks`'s per-window
+        budget, so admission only needs a slot and pages.  This removes
+        the monolithic path's head-of-line block, where one unaffordable
+        long prompt at the FIFO head stalled every arrival behind it."""
+        while self.waiting and self._slots_in_use() < self.max_batch:
+            req = self.waiting[0]
+            if not self._take_pages(req):
+                break                 # page pressure: wait for frees
+            self.waiting.pop(0)
+            req.slot = self._free_slot()
+            req.state = "prefilling"
+            # cached prefix pages already hold KV: chunking starts at the
+            # first uncached token (mid-page after a COW divergence)
+            req.prefilled = req.cached_tokens
+            req.pos = req.prefilled
+            self.prefilling[req.slot] = req
+            plan.admitted.append(req)
+
+    # -- chunked prefill ----------------------------------------------------
+    def _chunk_end(self, start: int, prompt_len: int) -> int:
+        """Next chunk boundary: at most ``chunk_tokens`` ahead, aligned
+        down to a page boundary so only the prompt's final slice may
+        leave a partial page.  A misaligned start (COW divergence
+        mid-page) realigns on its first chunk."""
+        end = min(prompt_len, start + self.chunk_tokens)
+        if end < prompt_len:
+            aligned = end - end % self.alloc.page_size
+            if aligned > start:
+                end = aligned
+        return end
+
+    def plan_chunks(self, window: int = 1) -> List[Tuple[Request, int, int]]:
+        """One chunk round: ``(request, start, n_tokens)`` tasks for the
+        engine to dispatch before the next decode window.
+
+        The budget is deadline-driven and priced: the tightest running
+        tenant's ``stall_frac`` bounds how many seconds of prefill this
+        ``window``-step decode window tolerates, and each chunk is priced
+        by ``prefill_cost_s`` (cost engine) against it.  Distribution is
+        earliest-deadline-first, but EVERY prefilling request gets at
+        least one chunk per round regardless of budget — the strict-
+        progress guarantee the no-starvation property test pins.  With
+        nothing decoding (or an unpriced scheduler at idle) the budget is
+        unbounded and a prompt drains at full speed, recovering the
+        monolithic fast path.  Unpriced schedulers under decode load fall
+        back to strict round-robin: one chunk each."""
+        if not self.chunked or not self.prefilling:
+            return []
+        self.chunk_rounds += 1
+        priced = bool(self.running) and self.prefill_cost_s is not None \
+            and self.decode_cost_s > 0.0
+        budget_s = 0.0
+        if priced:
+            frac = min(get_slo(r.slo).stall_frac
+                       for r in self.running.values())
+            budget_s = max(window, 1) * self.decode_cost_s * frac
+        tasks: List[Tuple[Request, int, int]] = []
+        spent = 0.0
+        for req in sorted(self.prefilling.values(), key=self._edf_key):
+            first = True
+            while req.prefilled < req.prompt_len:
+                start = req.prefilled
+                end = self._chunk_end(start, req.prompt_len)
+                cost = (self.prefill_cost_s(end - start)
+                        if self.prefill_cost_s is not None else 0.0)
+                if not first and priced and spent + cost > budget_s:
+                    break             # budget exhausted: back to decode
+                tasks.append((req, start, end - start))
+                req.prefilled = end
+                req.pos = end
+                spent += cost
+                first = False
+                if not priced and self.running:
+                    break             # unpriced under load: round-robin
+        self.chunk_tasks += len(tasks)
+        return tasks
+
+    def finish_prefill(self, req: Request, token: int) -> bool:
+        """Final chunk landed: promote ``prefilling -> running`` and
+        record the first token.  Returns True if the request finished
+        outright (``gen == 1``)."""
+        assert req.prefilled == req.prompt_len
+        del self.prefilling[req.slot]
+        req.state = "running"
+        req.pos = req.prompt_len
+        self.running[req.slot] = req
+        self.note_first_token(req, token)
+        return req.state == "finished"
 
     # -- fused decode windows ---------------------------------------------
     def safe_horizon(self, max_window: int, quantize=None) -> int:
@@ -279,15 +448,20 @@ class ContinuousBatchScheduler:
         for req in self.running.values():
             k = min(k, req.gen - len(req.tokens))
         k = max(quantize(max(k, 1)), 1)
-        if k > 1 and self.waiting and len(self.running) < self.max_batch:
+        if k > 1 and self.waiting and self._slots_in_use() < self.max_batch:
             head = self.waiting[0]
-            budget = self.prefill_budget * self.decode_cost_s
-            cost = (self.prefill_cost_s(self._uncached_len(head))
-                    if self.prefill_cost_s else 0.0)
-            # mirror _admit with spent=0: a head whose prefill alone
-            # busts the budget cannot land while anything runs, so it
-            # must not collapse every window to K=1
-            admissible = not (budget > 0.0 and cost > budget)
+            if self.chunked:
+                # chunked admission is unpriced (slot + pages only), so
+                # any head with capacity could land next step
+                admissible = True
+            else:
+                budget = self.prefill_budget * self.decode_cost_s
+                cost = (self.prefill_cost_s(self._uncached_len(head))
+                        if self.prefill_cost_s else 0.0)
+                # mirror _admit with spent=0: a head whose prefill alone
+                # busts the budget cannot land while anything runs, so it
+                # must not collapse every window to K=1
+                admissible = not (budget > 0.0 and cost > budget)
             need = self.alloc.pages_for(head.prompt_len + 1)
             if self.cache is not None and head.prompt_key is not None:
                 # cached full pages arrive as shared references, not
@@ -317,6 +491,7 @@ class ContinuousBatchScheduler:
             req.prefix_match = None
         req.tokens.append(token)
         req.first_token_step = self.step_idx
+        req.first_token_wall = time.time()
         self._maybe_finish(req)
 
     def complete_step(self, emitted: Dict[int, int]) -> List[Request]:
@@ -368,6 +543,7 @@ class ContinuousBatchScheduler:
             self.running.pop(req.slot, None)
         req.state, req.slot = "finished", None
         req.finished_step = self.step_idx
+        req.finished_wall = time.time()
         self.finished.append(req)
         return True
 
@@ -375,6 +551,7 @@ class ContinuousBatchScheduler:
     @property
     def all_requests(self) -> List[Request]:
         seen = {r.rid: r for r in self.waiting}
+        seen.update({r.rid: r for r in self.prefilling.values()})
         seen.update({r.rid: r for r in self.running.values()})
         seen.update({r.rid: r for r in self.finished})
         return list(seen.values())
@@ -382,6 +559,7 @@ class ContinuousBatchScheduler:
     def conserved(self, submitted: int) -> bool:
         """No request dropped or duplicated across queues."""
         rids = ([r.rid for r in self.waiting]
+                + [r.rid for r in self.prefilling.values()]
                 + [r.rid for r in self.running.values()]
                 + [r.rid for r in self.finished])
         return len(rids) == len(set(rids)) == submitted

@@ -110,6 +110,29 @@ def make_paged_suffix_prefill(cfg: ModelConfig):
     return suffix_prefill
 
 
+def make_chunk_prefill(cfg: ModelConfig):
+    """One page-aligned prefill chunk for a prefilling slot.
+
+    (params, tokens (1,W) padded chunk ids, pools, block_row (nmax,),
+     start, n_valid) -> (last-position logits (1,1,V), updated pools).
+    The chunk is a suffix continuation — positions ``start ..
+    start+n_valid-1`` run through ``lm.chunk_prefill_paged``
+    (== ``prefill_suffix_paged``: same layer path, same paged scatter,
+    same causal attention over the page run), which is why chunked
+    prefill is bit-identical to monolithic: each chunk writes exactly
+    the KV a single prefill would have written at those positions, and
+    only the final chunk's logits are read (the first generated token).
+    Jit with the pools donated; the padded width W is the only retrace
+    axis (the engine buckets it to powers of two), so a heavy-tailed
+    prompt-length distribution compiles O(log max_chunk) kernels instead
+    of one per length.
+    """
+    def chunk_prefill(params, tokens, pools, block_row, start, n_valid):
+        return lm.chunk_prefill_paged(params, cfg, tokens, pools,
+                                      block_row, start, n_valid)
+    return chunk_prefill
+
+
 def make_verify_window(cfg: ModelConfig):
     """Speculative-decoding verification window (one sequence, one
     dispatch).

@@ -11,7 +11,12 @@ every op the invariants the serving stack leans on:
 * null-page invariance — page 0 is never allocated, held, shared or
   refcounted, no matter the op sequence.
 
-Plus scheduler conservation under randomized arrival traces, and
+Plus scheduler conservation under randomized arrival traces (both the
+monolithic FIFO machine and the chunked EDF machine with chunk-step
+transitions: request conservation, strict chunk progress per round — the
+no-starvation property — and page-aligned chunk boundaries), a
+chunked-vs-monolithic engine bit-identity property over drawn
+(chunk_tokens, prompt_len) pairs including non-page-aligned tails, and
 algebraic properties of the n-gram proposer/acceptance rule.
 
 Runs under the optional-hypothesis shim (tests/hypothesis_compat.py):
@@ -131,6 +136,109 @@ def test_scheduler_random_traces_conserve_requests(reqs, n_pages,
         assert len(r.tokens) == r.gen
     assert a.pages_in_use == 0
     _check_invariants(a)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.integers(1, 12), st.integers(1, 6),
+                          st.integers(0, 2)),
+                min_size=1, max_size=10),
+       st.integers(10, 24), st.integers(1, 4), st.integers(2, 9))
+def test_chunked_scheduler_random_traces_conserve_and_progress(
+        reqs, n_pages, max_batch, chunk_tokens):
+    """The chunked op-machine: any admissible random trace — drawn
+    prompt/gen lengths, drawn SLO classes, drawn (possibly misaligned)
+    chunk size, page pressure and preemption included — drains through
+    chunk-step transitions with
+
+    * request conservation (every request finished exactly once, every
+      token accounted for, every page returned);
+    * STRICT chunk progress: each ``plan_chunks`` round advances every
+      prefilling request by >= 1 chunk (the no-starvation guarantee);
+    * non-final chunk boundaries page-aligned whenever the chunk can
+      reach a boundary (small chunks stay inside the start's page);
+    * allocator refcount conservation after every round."""
+    slo_names = ("interactive", "standard", "batch")
+    a = PageAllocator(n_pages=n_pages, page_size=4, n_nodes=2)
+    s = ContinuousBatchScheduler(a, max_batch=max_batch, chunked=True,
+                                 chunk_tokens=chunk_tokens,
+                                 prefill_cost_s=lambda n: float(n),
+                                 decode_cost_s=1.0)
+    submitted = 0
+    for i, (plen, gen, slo_i) in enumerate(reqs):
+        if a.pages_for(plen + gen) > n_pages - 1:
+            continue               # larger-than-pool requests are rejected
+        s.submit(Request(rid=f"q{i}", prompt_len=plen, gen=gen,
+                         slo=slo_names[slo_i]))
+        submitted += 1
+    steps = 0
+    while (s.waiting or s.prefilling or s.running) and steps < 2000:
+        s.plan_step()
+        before = {r.rid: r.prefilled for r in s.prefilling.values()}
+        tasks = s.plan_chunks(window=2)
+        advanced = set()
+        for req, start, n in tasks:
+            assert n >= 1 and start + n <= req.prompt_len
+            end = start + n
+            if end < req.prompt_len:
+                # non-final chunks land on a page boundary unless the
+                # chunk is too small to reach one from its start (then
+                # it stays inside the start's page and realigns later)
+                assert end % a.page_size == 0 \
+                    or end // a.page_size == start // a.page_size
+            advanced.add(req.rid)
+        # strict progress: every request that was prefilling when the
+        # round was planned got at least one chunk
+        assert advanced == set(before), "a prefilling request starved"
+        for req in list(s.prefilling.values()):
+            assert req.prefilled >= before[req.rid] + 1
+            if req.prefilled == req.prompt_len:
+                s.finish_prefill(req, token=1)
+        s.complete_step({slot: 1 for slot in list(s.running)})
+        assert a.check_conservation()
+        assert NULL_PAGE not in a.refcount
+        steps += 1
+    assert steps < 2000, "chunked scheduler wedged"
+    assert s.conserved(submitted)
+    assert len(s.finished) == submitted
+    for r in s.finished:
+        assert len(r.tokens) == r.gen
+    assert a.pages_in_use == 0
+    _check_invariants(a)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 12), st.lists(st.integers(5, 18), min_size=1,
+                                    max_size=3),
+       st.integers(2, 5))
+def test_chunked_engine_bit_identical_to_monolithic(chunk_tokens, plens,
+                                                    gen):
+    """Chunked prefill is bit-identical to the monolithic engine for ANY
+    drawn (chunk_tokens, prompt_len) pair — page-aligned or not, final
+    chunks partial or not.  Few examples (the engine compiles per pow2
+    prefill bucket), but each drives the full dispatch path."""
+    import sys
+    sys.path.insert(0, "tests")
+    import numpy as np
+    from conftest import get_tiny_model, make_engine, seeded_prompts
+
+    cfg, params = get_tiny_model()
+    max_len = max(plens) + gen
+    prompts = [seeded_prompts(cfg, 1, plen, seed=60 + i)[0]
+               for i, plen in enumerate(plens)]
+
+    def run(chunked):
+        eng = make_engine(cfg, params, max_batch=2, page_size=4,
+                          n_pages=48, max_len=max_len, fused=True,
+                          max_window=4, chunked_prefill=chunked,
+                          chunk_tokens=chunk_tokens)
+        for i, (p, g) in enumerate(zip(prompts, [gen] * len(prompts))):
+            eng.submit(np.asarray(p), g, rid=f"r{i}", slo="interactive")
+        toks = {r.rid: list(r.tokens) for r in eng.run()}
+        assert eng.alloc.pages_in_use == 0
+        assert eng.alloc.check_conservation()
+        return toks
+
+    assert run(True) == run(False), (chunk_tokens, plens, gen)
 
 
 @settings(max_examples=60, deadline=None)

@@ -401,6 +401,132 @@ def test_scheduler_prices_admission_with_cost_engine():
     assert throttled(2.0) == 2
 
 
+# --- chunked prefill: bit-identity + SLO scheduling ---------------------------
+def test_chunked_prefill_tokens_match_monolithic_and_dense():
+    """Chunked prefill is a KV-composition transform: any chunk size —
+    page-multiple, page-sized, or deliberately misaligned — must emit
+    tokens identical to the monolithic engine and the dense oracle,
+    including prompts whose final chunk is a partial page."""
+    cfg, params = get_tiny_model()
+    gens = [5, 6, 4, 7]
+    lens = [13, 10, 16, 9]           # non-page-aligned tails included
+    max_len = max(s + g for s, g in zip(lens, gens))
+    prompts = [seeded_prompts(cfg, 1, s, seed=50 + i)[0]
+               for i, s in enumerate(lens)]
+    dense = dense_oracle(cfg, params, prompts, gens, max_len)
+
+    def run(chunked, chunk_tokens=0):
+        eng = PagedEngine(cfg, params, max_batch=3, page_size=4,
+                          n_pages=40, max_len=max_len, fused=True,
+                          max_window=4, chunked_prefill=chunked,
+                          chunk_tokens=chunk_tokens)
+        for i, (p, g) in enumerate(zip(prompts, gens)):
+            eng.submit(np.asarray(p), g, rid=f"r{i}", slo="interactive")
+        toks = {r.rid: list(r.tokens) for r in eng.run()}
+        assert eng.alloc.pages_in_use == 0
+        return eng, toks
+
+    _, mono = run(False)
+    assert mono == dense
+    for ct in (8, 4, 5):             # 2 pages, 1 page, misaligned
+        eng, toks = run(True, ct)
+        assert toks == dense, f"chunk_tokens={ct}"
+        m = eng.metrics()
+        assert m["chunk_dispatches"] >= len(prompts)
+        assert m["chunk_tasks"] >= len(prompts)
+
+
+def test_chunked_admission_is_edf_not_fifo():
+    """Chunked admission orders the waiting queue by SLO deadline, not
+    arrival: an interactive request submitted AFTER a batch request (same
+    step) is admitted first.  The monolithic scheduler keeps FIFO."""
+    a = PageAllocator(n_pages=64, page_size=4, n_nodes=1)
+    s = ContinuousBatchScheduler(a, max_batch=1, chunked=True)
+    s.submit(Request(rid="slow", prompt_len=8, gen=2, slo="batch"))
+    s.submit(Request(rid="fast", prompt_len=8, gen=2, slo="interactive"))
+    plan = s.plan_step()
+    assert [r.rid for r in plan.admitted] == ["fast"]
+    assert s.prefilling and s.waiting[0].rid == "slow"
+
+
+def test_plan_chunks_strict_progress_and_page_alignment():
+    """Every prefilling request advances by at least one chunk per round
+    (starvation-freedom), every non-final chunk boundary is page-aligned,
+    and a throttled budget still drains the queue."""
+    a = PageAllocator(n_pages=64, page_size=4, n_nodes=1)
+    s = ContinuousBatchScheduler(a, max_batch=4, chunked=True,
+                                 chunk_tokens=4,
+                                 prefill_cost_s=lambda n: float(n),
+                                 decode_cost_s=1.0)
+    for i, plen in enumerate((13, 9, 11)):
+        s.submit(Request(rid=f"q{i}", prompt_len=plen, gen=3,
+                         slo="interactive"))
+    # park a decoding request so the budget is active (priced, tight)
+    s.submit(Request(rid="dec", prompt_len=4, gen=30, slo="interactive"))
+    plan = s.plan_step()
+    dec = next(r for r in plan.admitted if r.rid == "dec")
+    # promote dec to running so plan_chunks prices against its stall_frac
+    dec.prefilled = dec.prompt_len
+    s.finish_prefill(dec, token=1)
+    rounds = 0
+    while s.prefilling and rounds < 50:
+        before = {r.rid: r.prefilled for r in s.prefilling.values()}
+        tasks = s.plan_chunks(window=1)
+        seen = set()
+        for req, start, n in tasks:
+            assert n >= 1 and start + n <= req.prompt_len
+            if start + n < req.prompt_len:
+                assert (start + n) % a.page_size == 0, \
+                    "non-final chunk boundary off the page grid"
+            seen.add(req.rid)
+        # strict progress: every prefilling request got >= 1 chunk
+        assert seen == set(before)
+        for req in list(s.prefilling.values()):
+            if req.prefilled == req.prompt_len:
+                s.finish_prefill(req, token=1)
+        rounds += 1
+    assert not s.prefilling, "chunk rounds starved a request"
+    assert rounds >= 2, "budget never throttled (all drained in one round)"
+    assert s.chunk_tasks >= 3
+
+
+def test_plan_chunks_drains_at_full_speed_when_idle():
+    """With nothing decoding, the budget is unbounded: a whole prompt
+    drains in ONE round (the monolithic fast path recovered)."""
+    a = PageAllocator(n_pages=64, page_size=4, n_nodes=1)
+    s = ContinuousBatchScheduler(a, max_batch=2, chunked=True,
+                                 chunk_tokens=4,
+                                 prefill_cost_s=lambda n: float(n),
+                                 decode_cost_s=1.0)
+    s.submit(Request(rid="solo", prompt_len=17, gen=2, slo="batch"))
+    s.plan_step()
+    tasks = s.plan_chunks(window=8)
+    req = s.prefilling[next(iter(s.prefilling))]
+    assert req.prefilled == req.prompt_len
+    assert len(tasks) == 5           # 17 tokens / 4-token chunks
+
+
+def test_chunked_requests_carry_wall_and_deadline_stamps():
+    cfg, params = get_tiny_model()
+    [p] = seeded_prompts(cfg, 1, 10, seed=91)
+    eng = PagedEngine(cfg, params, max_batch=2, page_size=4, n_pages=16,
+                      max_len=16, chunked_prefill=True)
+    req = eng.submit(np.asarray(p), 4, slo="interactive")
+    from repro.serving import get_slo
+    assert req.deadline_step == req.arrived_step \
+        + get_slo("interactive").ttft_steps
+    eng.run()
+    assert req.arrived_wall is not None
+    assert req.first_token_wall >= req.arrived_wall
+    assert req.finished_wall >= req.first_token_wall
+
+
+def test_get_slo_rejects_unknown_class():
+    from repro.serving import get_slo
+    with pytest.raises(KeyError, match="interactive"):
+        get_slo("platinum")
+
+
 # --- trace replay smoke -------------------------------------------------------
 def test_serve_trace_smoke():
     import os
@@ -418,3 +544,42 @@ def test_serve_trace_smoke():
     assert "chat" in table and "burst" in table
     fleet = serve_trace.fleet_view(eng)
     assert "chat" in fleet
+
+
+def test_replay_accepts_trace_names_and_validates_tenants():
+    """replay() called programmatically with a bad trace name or a
+    malformed tenants list must fail fast with exit code 2 listing the
+    valid traces — not deep inside prompt_for (mirrors run.py --only)."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import serve_trace
+    for bad in ("definitely-not-a-trace", [], ["not-a-tenant"],
+                [serve_trace.Tenant("t", 0, 0.0, 8, 4)],
+                [serve_trace.Tenant("t", 2, 0.0, 8, 4, slo="platinum")],
+                object()):
+        with pytest.raises(SystemExit) as exc:
+            serve_trace.resolve_tenants(bad)
+        assert exc.value.code == 2, bad
+    # valid names resolve to the registered factories
+    for name, factory in serve_trace.TRACES.items():
+        got = serve_trace.resolve_tenants(name, quick=True)
+        assert got == factory(True), name
+
+
+def test_replay_bad_trace_exits_2_in_subprocess():
+    """End-to-end contract: the process exits 2 and stderr names the
+    valid traces (same shape as run.py --only's unknown-pattern error)."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+    code = ("import sys; sys.path[:0] = ['src', '.'];\n"
+            "from benchmarks.serve_trace import replay\n"
+            "replay('definitely-not-a-trace')\n")
+    proc = subprocess.run([sys.executable, "-c", code], cwd=root,
+                          capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 2
+    assert "valid traces:" in proc.stderr
+    for name in ("mixed", "overload", "shared-prefix", "repetitive"):
+        assert name in proc.stderr

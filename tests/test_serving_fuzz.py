@@ -1,8 +1,8 @@
 """Differential serving fuzz: one small randomized arrival trace
 replayed across the full flag cube {prefix-cache on/off} x {fused
-on/off} x {spec-decode on/off} x {adaptive-K on/off} — every
-configuration must emit greedy tokens identical to the dense oracle,
-request for request.
+on/off} x {spec-decode on/off + adaptive-K on/off} x {chunked-prefill
+on/off} — 32 configurations, every one of which must emit greedy tokens
+identical to the dense oracle, request for request.
 
 The trace deliberately mixes the features' trigger conditions: shared
 prefixes that diverge mid-page (COW), motif-tiled prompts whose greedy
@@ -10,10 +10,12 @@ continuations loop (speculation accepts), staggered arrivals (admission
 events cap fused windows and speculation horizons), and a pool small
 enough for growth pressure.  Adaptive K (``spec_k="auto"``) rides the
 same trace with per-request EWMA depth control — device-resident
-drafting in both spec modes.  The oracle and each configuration's
-output are memoized per run so the 16-point cube costs one engine
-replay each, all sharing one compiled step set (conftest /
-engine._jitted_steps).
+drafting in both spec modes.  Chunked prefill slices every admission
+into page-aligned chunks under SLO-aware EDF — composition with COW
+suffixes and speculative restarts is exactly where partial-block-row
+bugs would hide.  The oracle and each configuration's output are
+memoized per run so the 32-point cube costs one engine replay each, all
+sharing one compiled step set (conftest / engine._jitted_steps).
 """
 import numpy as np
 import pytest
@@ -24,9 +26,10 @@ from conftest import dense_oracle, get_tiny_model, make_engine, \
 PAGE = 4
 MAX_BATCH = 2
 N_PAGES = 26
-CUBE = [(pc, fz, sp, ak)
+CUBE = [(pc, fz, sp, ak, ck)
         for pc in (False, True) for fz in (False, True)
-        for sp in (False, True) for ak in (False, True)]
+        for sp in (False, True) for ak in (False, True)
+        for ck in (False, True)]
 
 _MEMO = {}
 
@@ -44,7 +47,7 @@ def _trace():
     return prompts, gens, arrivals
 
 
-def _replay(prefix_cache, fused, spec, adaptive=False):
+def _replay(prefix_cache, fused, spec, adaptive=False, chunked=False):
     """Drive the engine like the trace benchmark: submissions land when
     the scheduler clock reaches their arrival step, windows never decode
     past the next arrival."""
@@ -54,13 +57,16 @@ def _replay(prefix_cache, fused, spec, adaptive=False):
     eng = make_engine(cfg, params, max_batch=MAX_BATCH, page_size=PAGE,
                       n_pages=N_PAGES, max_len=max_len, fused=fused,
                       prefix_cache=prefix_cache, spec_decode=spec,
-                      spec_k="auto" if adaptive else 4, max_window=4)
+                      spec_k="auto" if adaptive else 4, max_window=4,
+                      chunked_prefill=chunked)
     pending = sorted(zip(arrivals, range(len(prompts))))
-    while pending or eng.sched.waiting or eng.sched.running:
+    while pending or eng.sched.waiting or eng.sched.prefilling \
+            or eng.sched.running:
         while pending and pending[0][0] <= eng.sched.step_idx:
             _, i = pending.pop(0)
-            eng.submit(np.asarray(prompts[i]), gens[i], rid=f"r{i}")
-        if eng.sched.waiting or eng.sched.running:
+            eng.submit(np.asarray(prompts[i]), gens[i], rid=f"r{i}",
+                       slo="interactive" if i % 2 else "batch")
+        if eng.sched.waiting or eng.sched.prefilling or eng.sched.running:
             cap = pending[0][0] - eng.sched.step_idx if pending else None
             eng.step(max_window=cap)
         else:
@@ -80,12 +86,13 @@ def _oracle():
     return _MEMO["oracle"]
 
 
-@pytest.mark.parametrize("prefix_cache,fused,spec,adaptive", CUBE)
+@pytest.mark.parametrize("prefix_cache,fused,spec,adaptive,chunked", CUBE)
 def test_flag_cube_matches_dense_oracle(prefix_cache, fused, spec,
-                                        adaptive):
-    eng, toks = _replay(prefix_cache, fused, spec, adaptive)
+                                        adaptive, chunked):
+    eng, toks = _replay(prefix_cache, fused, spec, adaptive, chunked)
     assert len(toks) == len(_oracle())
-    assert toks == _oracle(), (prefix_cache, fused, spec, adaptive)
+    assert toks == _oracle(), (prefix_cache, fused, spec, adaptive,
+                               chunked)
     m = eng.metrics()
     # the features actually engaged on their trigger configs
     if prefix_cache:
@@ -98,6 +105,12 @@ def test_flag_cube_matches_dense_oracle(prefix_cache, fused, spec,
         # adaptive-K is a spec-decode mode: without spec it must be
         # inert (no controller, no spec metrics)
         assert eng.spec is None and "accept_rate" not in m
+    if chunked:
+        assert m["chunk_dispatches"] >= len(toks)
+        assert m["chunk_tasks"] >= len(toks)
+    else:
+        # chunked counters must not exist on the monolithic scheduler
+        assert not eng.sched.chunked and "chunk_tasks" not in m
 
 
 def test_adaptive_spec_preemption_and_rollback_stay_exact():
@@ -126,3 +139,53 @@ def test_adaptive_spec_preemption_and_rollback_stay_exact():
     assert m["spec_rollbacks"] >= 1, "trace never exercised rollback"
     assert m["spec_verifies"] >= 1
     assert eng.alloc.check_conservation() and eng.alloc.pages_in_use == 0
+
+
+def test_chunked_midprefill_preemption_recomputes_through_cache():
+    """The forced composition trace: a half-prefilled CHUNKED request is
+    preempted by a decoding tenant's page growth, then recomputes
+    through the prefix cache and finishes while adaptive-K speculation
+    drives the survivor — tokens stay dense-exact throughout.
+
+    Construction: request C seeds the radix tree with a 17-token prefix
+    (its whole prompt is referenced by B later, so the pool CANNOT
+    relieve pressure by evicting tree pages).  A — a motif prompt under
+    adaptive speculation, the earliest arrival, thus never a victim —
+    grows page by page while B's 29-token prompt trickles through
+    4-token chunks under the interactive budget.  The pool is sized so
+    A's growth runs dry mid-B-prefill: the victim rule (latest arrival
+    over running + prefilling) preempts B with ``prefilled <
+    prompt_len``, releasing its COW reference; B's recompute re-acquires
+    the shared prefix from the tree and completes."""
+    cfg, params = get_tiny_model()
+    shared = seeded_prompts(cfg, 2, 29, shared=17, seed=77)
+    seed_prompt = np.asarray(shared[0][:17])       # C: exactly the prefix
+    loop = seeded_prompts(cfg, 1, 8, motif=4, seed=88)[0]
+    prompts = [seed_prompt, loop, shared[1]]
+    gens = [2, 14, 4]
+    max_len = max(p.shape[0] + g for p, g in zip(prompts, gens))
+    dense = dense_oracle(cfg, params, prompts, gens, max_len)
+    eng = make_engine(cfg, params, max_batch=2, page_size=PAGE,
+                      n_pages=13, max_len=max_len, fused=True,
+                      max_window=4, chunked_prefill=True, chunk_tokens=4,
+                      prefix_cache=True, spec_decode=True, spec_k="auto")
+    # phase 1: C completes alone and donates its pages to the tree
+    eng.submit(np.asarray(prompts[0]), gens[0], rid="r0", slo="standard")
+    eng.run()
+    assert eng.cache is not None and eng.alloc.pages_in_use > 0
+    # phase 2: A decodes (interactive: tight chunk budget for B), B's
+    # long prompt chunks along until A's growth drains the pool
+    eng.submit(np.asarray(prompts[1]), gens[1], rid="r1",
+               slo="interactive")
+    eng.step()
+    eng.submit(np.asarray(prompts[2]), gens[2], rid="r2", slo="batch")
+    fin = eng.run()
+    toks = {r.rid: list(r.tokens) for r in eng.sched.finished}
+    assert toks == dense
+    m = eng.metrics()
+    assert eng.sched.chunk_preemptions >= 1, \
+        "B was never preempted mid-prefill"
+    assert m["prefix_hits"] >= 2, "B's recompute missed the tree"
+    assert m["spec_verifies"] >= 1 and m["accept_rate"] > 0.0
+    assert eng.alloc.check_conservation()
+    assert len(fin) >= 2 and len(toks) == 3
