@@ -9,8 +9,10 @@ hit rate, prefill-token reduction, token identity) and
 ``BENCH_spec.json`` (speculative decoding on-vs-off on the repetitive
 trace: dispatches per token, accept rate, token identity) and
 ``BENCH_slo.json`` (chunked prefill vs monolithic on the overload
-trace: per-SLO-class TTFT percentiles, goodput, token identity) into
-``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
+trace: per-SLO-class TTFT percentiles, goodput, token identity) and
+``BENCH_chaos.json`` (fault-free vs seeded-chaos on the
+fault-injection trace: survivor token identity, goodput retained,
+recovery percentiles) into ``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
 unknown pattern is an error listing the valid titles) — the CI
 perf-smoke job runs ``--only micro --json`` and validates the files
 with ``scripts/check_bench.py``.
@@ -115,6 +117,12 @@ def main() -> None:
              lambda d: f"tokens_match={d['tokens_match']}, "
                        f"p99_ttft_ratio={d['p99_ttft_ratio']:.2f}, "
                        f"goodput_ratio={d['goodput_ratio']:.2f}"),
+            ("BENCH_chaos.json", st.bench_chaos_comparison,
+             lambda d: f"tokens_match={d['tokens_match']}, "
+                       f"node_failures={d['chaos']['node_failures']}, "
+                       f"requests_recovered="
+                       f"{d['chaos']['requests_recovered']}, "
+                       f"goodput_retained={d['goodput_retained']:.2f}"),
         ]
         for fname, bench_fn, summarize in comparisons:
             try:

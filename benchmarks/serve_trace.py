@@ -39,6 +39,16 @@ goodput (tokens from deadline-met requests), token identity, and the
 gated ``p99_ttft_ratio`` / ``goodput_ratio`` verdicts
 (scripts/check_bench.py::check_slo).
 
+``--trace chaos`` is the fault-injection harness
+(docs/FAULT_TOLERANCE.md): interactive + batch tenants whose requests
+stripe across every node of the paged pool, driven under a seeded
+:class:`repro.serving.FaultPlan` (``--fault-plan chaos``) of node
+failures, transient admission errors and straggler slowdowns;
+``bench_chaos_comparison`` replays it twice — fault-free vs chaos —
+into BENCH_chaos.json (survivor token bit-identity, goodput retained,
+recovery-step percentiles, zero stale reads), gated by
+``scripts/check_bench.py::check_chaos``.
+
 Run:  PYTHONPATH=src python benchmarks/serve_trace.py [--quick]
       PYTHONPATH=src python benchmarks/serve_trace.py --quick \
           --trace shared-prefix --prefix-cache on
@@ -46,6 +56,8 @@ Run:  PYTHONPATH=src python benchmarks/serve_trace.py [--quick]
           --trace repetitive --batch 1 --spec-decode on
       PYTHONPATH=src python benchmarks/serve_trace.py --quick \
           --trace overload --chunk-prefill on
+      PYTHONPATH=src python benchmarks/serve_trace.py --quick \
+          --trace chaos --nodes 4 --fault-plan chaos
 """
 from __future__ import annotations
 
@@ -157,11 +169,31 @@ def overload_tenants(quick: bool = False) -> List[Tenant]:
     ]
 
 
+def chaos_tenants(quick: bool = False) -> List[Tenant]:
+    """The fault-injection trace (BENCH_chaos.json,
+    docs/FAULT_TOLERANCE.md): an interactive tenant under steady Poisson
+    arrivals plus a long-prompt batch tenant, both sized so every
+    request's pages span all stripes of a 4-node pool (prompt + gen
+    >= 4 pages at 8-token pages) — a node failure therefore always
+    lands on live requests, exercising quarantine + exact-recompute
+    recovery rather than only free-list shrinkage."""
+    if quick:
+        return [
+            Tenant("interactive", 8, 0.4, 16, 12, slo="interactive"),
+            Tenant("batch", 4, 0.12, 32, 8, slo="batch"),
+        ]
+    return [
+        Tenant("interactive", 48, 0.5, 24, 16, slo="interactive"),
+        Tenant("batch", 16, 0.1, 48, 12, slo="batch"),
+    ]
+
+
 TRACES = {
     "mixed": default_tenants,
     "shared-prefix": shared_prefix_tenants,
     "repetitive": repetitive_tenants,
     "overload": overload_tenants,
+    "chaos": chaos_tenants,
 }
 
 
@@ -272,7 +304,7 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
            max_window: int = 8, warmup: bool = False, params=None,
            prefix_cache: bool = False, spec_decode: bool = False,
            spec_k="auto", chunk_prefill: bool = False,
-           chunk_tokens: int = 0):
+           chunk_tokens: int = 0, n_nodes: int = 1, fault_plan=None):
     """Drive the engine window by window, injecting arrivals between
     dispatches.  With ``fused`` the engine decodes multi-token windows,
     capped to the next pending arrival so the trace's admission clock
@@ -282,6 +314,12 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
     ``Tenant`` list, or None (the default trace); anything malformed
     exits 2 up front (see :func:`resolve_tenants`) instead of failing
     deep inside ``prompt_for``.
+
+    ``fault_plan`` arms the deterministic fault plane
+    (:class:`repro.serving.FaultPlan`) AFTER warmup and the metrics
+    reset, so plan step 0 is the first measured step and warmup never
+    consumes fault events; ``n_nodes`` stripes the page pool so a node
+    failure quarantines a real fraction of it.
 
     Returns (engine, per-tenant rows, totals).
     """
@@ -322,7 +360,7 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
                       max_window=max_window, prefix_cache=prefix_cache,
                       spec_decode=spec_decode, spec_k=spec_k,
                       chunked_prefill=chunk_prefill,
-                      chunk_tokens=chunk_tokens)
+                      chunk_tokens=chunk_tokens, n_nodes=n_nodes)
     if warmup:
         # compile every window bucket + a prefill per DISTINCT
         # materialized prompt length (prefill retraces per length;
@@ -345,6 +383,11 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
         if eng.cache is not None:
             eng.cache.clear()      # measured run starts with a cold tree
         eng.sched.step_idx = 0
+    if fault_plan is not None:
+        # arm AFTER warmup/reset: the plane's epoch pins plan step 0 to
+        # the current scheduler step, so the fault schedule replays
+        # identically whether or not compiles were warmed
+        eng.install_faults(fault_plan)
 
     occupancy = []
     while pending or eng.sched.waiting or eng.sched.prefilling \
@@ -414,6 +457,18 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
             chunk_rounds=m["chunk_rounds"],
             chunk_tasks=m["chunk_tasks"],
             chunk_preemptions=m["chunk_preemptions"])
+    if eng.faults is not None:
+        totals.update(
+            node_failures=m["node_failures"],
+            node_joins=m["node_joins"],
+            pages_quarantined=m["pages_quarantined"],
+            requests_recovered=m["requests_recovered"],
+            requests_shed=m["requests_shed"],
+            tokens_recomputed=m["tokens_recomputed"],
+            transient_rejections=m["transient_rejections"],
+            quarantined_served=m["quarantined_served"],
+            recovery_steps_p50=m["recovery_steps_p50"],
+            recovery_steps_p99=m["recovery_steps_p99"])
     return eng, rows, totals
 
 
@@ -525,6 +580,97 @@ def bench_slo_comparison(*, quick: bool = True, seed: int = 0,
         / max(inter_m["ttft_steps_p99"], 1e-9),
         "goodput_ratio": out["chunked"]["goodput_tokens"]
         / max(out["monolithic"]["goodput_tokens"], 1),
+    }
+
+
+def bench_chaos_comparison(*, quick: bool = True, seed: int = 0,
+                           max_batch: int = 4, page_size: int = 8,
+                           max_window: int = 8, n_nodes: int = 4,
+                           arch: str = "tiny-100m"):
+    """Replay the chaos trace twice — fault-free vs a seeded
+    :class:`repro.serving.FaultPlan` with >= 2 node failures — with
+    shared params and warmed-up compiles, asserting that every request
+    the chaos run finishes (the survivors) emits tokens bit-identical
+    to the fault-free run.  Greedy recompute through the preemption
+    machinery is exact, so fault recovery is a *placement* event, not a
+    sampler change — the same invariant every other serving transform
+    in this file is held to.
+
+    The fault schedule is sized from the fault-free run's own step
+    count, so failures always land while requests are in flight, and
+    the plan's heartbeat/straggler detection runs on the deterministic
+    step clock — the whole chaos run replays bit-identically from
+    (seed, trace).
+
+    Returns the BENCH_chaos.json payload (see
+    scripts/check_bench.py::check_chaos).  Gated verdicts:
+    ``tokens_match`` (survivor bit-identity), ``goodput_retained``
+    (deadline-met tokens, chaos/fault-free — recovery must degrade
+    gracefully, not collapse), ``quarantined_served == 0`` (no dispatch
+    ever read a dead stripe) and ``node_failures >= 2`` both planned
+    and detected."""
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+    from repro.serving import FaultPlan
+
+    tenants = chaos_tenants(quick)
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    common = dict(seed=seed, max_batch=max_batch, page_size=page_size,
+                  max_window=max_window, n_nodes=n_nodes, warmup=True,
+                  params=params, arch=arch)
+
+    base_eng, _, base_totals = replay(tenants, **common)
+    base_toks = {r.rid: list(r.tokens) for r in base_eng.sched.finished}
+    base_good = sum(c["goodput_tokens"]
+                    for c in slo_stats(base_eng).values())
+
+    # size the schedule from the fault-free run: failures land in the
+    # first ~half of the trace, while the pool is under live load
+    horizon = max(int(base_totals["steps"]) * 3 // 4, 16)
+    plan = FaultPlan.seeded(seed, n_nodes=n_nodes, horizon=horizon,
+                            n_fails=2, n_transients=2, n_slow=1)
+    chaos_eng, _, chaos_totals = replay(tenants, fault_plan=plan,
+                                        **common)
+    chaos_toks = {r.rid: list(r.tokens)
+                  for r in chaos_eng.sched.finished}
+    chaos_good = sum(c["goodput_tokens"]
+                     for c in slo_stats(chaos_eng).values())
+    survivors_match = all(toks == base_toks[rid]
+                          for rid, toks in chaos_toks.items())
+
+    def block(totals, good, n_finished):
+        out = dict(tokens=totals["tokens"], steps=totals["steps"],
+                   tok_per_s=totals["tok_per_s"],
+                   preemptions=totals["preemptions"],
+                   requests_finished=n_finished, goodput_tokens=good)
+        return out
+
+    chaos_blk = block(chaos_totals, chaos_good, len(chaos_toks))
+    chaos_blk.update(
+        node_failures=chaos_totals["node_failures"],
+        node_joins=chaos_totals["node_joins"],
+        pages_quarantined=chaos_totals["pages_quarantined"],
+        requests_recovered=chaos_totals["requests_recovered"],
+        requests_shed=chaos_totals["requests_shed"],
+        tokens_recomputed=chaos_totals["tokens_recomputed"],
+        transient_rejections=chaos_totals["transient_rejections"],
+        quarantined_served=chaos_totals["quarantined_served"],
+        recovery_steps_p50=chaos_totals["recovery_steps_p50"],
+        recovery_steps_p99=chaos_totals["recovery_steps_p99"])
+    return {
+        "schema": "swallow.bench.chaos/v1",
+        "arch": arch, "batch": max_batch, "page_size": page_size,
+        "max_window": max_window, "n_nodes": n_nodes,
+        "trace": "chaos", "quick": quick, "seed": seed,
+        "planned_failures": plan.n_node_failures,
+        "planned_events": len(plan.events),
+        "fault_free": block(base_totals, base_good, len(base_toks)),
+        "chaos": chaos_blk,
+        "tokens_match": bool(survivors_match),
+        "survivors": len(chaos_toks),
+        "goodput_retained": chaos_good / max(base_good, 1),
     }
 
 
@@ -781,6 +927,17 @@ def format_table(rows, totals) -> str:
                    f"{t['chunk_rounds']} rounds "
                    f"({t['chunk_dispatches']} dispatches), "
                    f"{t['chunk_preemptions']} mid-prefill preemptions")
+    if "node_failures" in t:
+        out.append(f"fault plane: {t['node_failures']} node failures / "
+                   f"{t['node_joins']} re-joins, "
+                   f"{t['pages_quarantined']} pages quarantined, "
+                   f"{t['requests_recovered']} requests recovered "
+                   f"({t['tokens_recomputed']} tokens recomputed), "
+                   f"{t['requests_shed']} shed, "
+                   f"{t['transient_rejections']} transient rejections, "
+                   f"recovery p50/p99 {t['recovery_steps_p50']:.0f}/"
+                   f"{t['recovery_steps_p99']:.0f} steps, "
+                   f"{t['quarantined_served']} stale reads")
     return "\n".join(out)
 
 
@@ -820,7 +977,13 @@ def fleet_view(eng) -> str:
             * est.step_time_s,
             ttft_target_s=(slo.ttft_steps * est.step_time_s
                            if slo else None),
-            goodput_frac=met_tokens / max(tokens, 1))
+            goodput_frac=met_tokens / max(tokens, 1),
+            # fault gauges are engine-wide, like accept_rate: every
+            # tenant row shows the same recovery story
+            pages_quarantined=m.get("pages_quarantined"),
+            requests_recovered=m.get("requests_recovered"),
+            tokens_recomputed=m.get("tokens_recomputed"),
+            recovery_steps_p99=m.get("recovery_steps_p99"))
     return pod.serving_table()
 
 
@@ -863,8 +1026,28 @@ def main():
                          "admission (off = monolithic priced FIFO)")
     ap.add_argument("--chunk-tokens", type=int, default=0,
                     help="tokens per prefill chunk (0 = 2 pages)")
+    ap.add_argument("--nodes", type=int, default=1,
+                    help="memory nodes striping the page pool (a node "
+                         "failure quarantines its stripe)")
+    ap.add_argument("--fault-plan", default="off", choices=["off", "chaos"],
+                    help="chaos: arm a seeded FaultPlan (node failures + "
+                         "transient rejections + a straggler) against "
+                         "the run")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the chaos FaultPlan")
+    ap.add_argument("--fault-horizon", type=int, default=48,
+                    help="steps the chaos schedule spans")
     args = ap.parse_args()
     spec_k = args.spec_k if args.spec_k == "auto" else int(args.spec_k)
+    fault_plan = None
+    if args.fault_plan == "chaos":
+        from repro.serving import FaultPlan
+        if args.nodes < 2:
+            print("serve_trace: --fault-plan chaos needs --nodes >= 2 "
+                  "(node 0 never fails)", file=sys.stderr)
+            raise SystemExit(2)
+        fault_plan = FaultPlan.seeded(args.fault_seed, n_nodes=args.nodes,
+                                      horizon=args.fault_horizon)
     eng, rows, totals = replay(args.trace, quick=args.quick,
                                seed=args.seed, max_batch=args.batch,
                                page_size=args.page_size, n_pages=args.pages,
@@ -874,7 +1057,8 @@ def main():
                                spec_decode=args.spec_decode == "on",
                                spec_k=spec_k,
                                chunk_prefill=args.chunk_prefill == "on",
-                               chunk_tokens=args.chunk_tokens)
+                               chunk_tokens=args.chunk_tokens,
+                               n_nodes=args.nodes, fault_plan=fault_plan)
     print(format_table(rows, totals))
     if args.trace == "overload":
         for cls, d in slo_stats(eng).items():

@@ -44,10 +44,24 @@ that ``benchmarks/run.py --json`` emits.
   (default 1.0: the latency win must not be bought with thrown-away
   throughput).  All three are deterministic on any host.
 
+* ``BENCH_chaos.json`` (swallow.bench.chaos/v1): fault-free vs chaos
+  stat blocks on the fault-injection trace (a seeded FaultPlan of node
+  failures + transient rejections + a straggler against the striped
+  page pool).  ``tokens_match`` must be true (every request the chaos
+  run finishes is bit-identical to the fault-free run — recovery is
+  exact greedy recompute, not resampling), ``chaos.node_failures``
+  must be >= 2 both planned and detected, ``quarantined_served`` must
+  be 0 (no dispatch ever read a dead stripe), recovery percentiles
+  must be finite, and ``goodput_retained`` (deadline-met tokens,
+  chaos/fault-free) must clear ``PERF_SMOKE_MIN_GOODPUT_RETAINED``
+  (default 0.25 — degradation must be graceful; the whole chain is on
+  the deterministic step clock, so the value is host-independent).
+
 Run from the repo root:
     python benchmarks/run.py --only micro --json
     python scripts/check_bench.py BENCH_micro.json BENCH_serve.json \
-        BENCH_prefix.json BENCH_spec.json BENCH_slo.json
+        BENCH_prefix.json BENCH_spec.json BENCH_slo.json \
+        BENCH_chaos.json
 """
 from __future__ import annotations
 
@@ -273,10 +287,63 @@ def check_slo(doc: dict) -> list:
     return errs
 
 
+REQUIRED_CHAOS_KEYS = ("tokens", "steps", "tok_per_s",
+                       "requests_finished", "goodput_tokens")
+REQUIRED_CHAOS_FAULT_KEYS = ("node_failures", "node_joins",
+                             "pages_quarantined", "requests_recovered",
+                             "requests_shed", "tokens_recomputed",
+                             "transient_rejections", "quarantined_served",
+                             "recovery_steps_p50", "recovery_steps_p99")
+
+
+def check_chaos(doc: dict) -> list:
+    errs = []
+    if doc.get("schema") != "swallow.bench.chaos/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    for mode in ("fault_free", "chaos"):
+        blk = doc.get(mode)
+        if not isinstance(blk, dict):
+            errs.append(f"missing {mode} block")
+            continue
+        for key in REQUIRED_CHAOS_KEYS:
+            if not _finite_pos(blk.get(key)):
+                errs.append(f"{mode}.{key}: non-finite {blk.get(key)!r}")
+    chaos = doc.get("chaos")
+    if isinstance(chaos, dict):
+        for key in REQUIRED_CHAOS_FAULT_KEYS:
+            if not _finite_pos(chaos.get(key)):
+                errs.append(f"chaos.{key}: non-finite {chaos.get(key)!r}")
+    if doc.get("tokens_match") is not True:
+        errs.append("tokens_match is not true: fault recovery changed "
+                    "a survivor's emitted tokens")
+    if not errs:
+        if doc.get("planned_failures", 0) < 2:
+            errs.append(f"planned_failures "
+                        f"{doc.get('planned_failures')!r} < 2: the "
+                        "chaos schedule must inject >= 2 node failures")
+        if chaos["node_failures"] < 2:
+            errs.append(f"chaos.node_failures {chaos['node_failures']} "
+                        "< 2: the watchdog missed injected failures")
+        if chaos["quarantined_served"] != 0:
+            errs.append(f"chaos.quarantined_served "
+                        f"{chaos['quarantined_served']} != 0: a dispatch "
+                        "read a quarantined page")
+        min_good = float(os.environ.get("PERF_SMOKE_MIN_GOODPUT_RETAINED",
+                                        "0.25"))
+        good = doc.get("goodput_retained")
+        if not _finite_pos(good):
+            errs.append(f"goodput_retained: non-finite {good!r}")
+        elif good < min_good:
+            errs.append(f"goodput_retained {good:.3f} < required "
+                        f"{min_good}: recovery did not degrade "
+                        "gracefully")
+    return errs
+
+
 def main() -> None:
     paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json",
                              "BENCH_prefix.json", "BENCH_spec.json",
-                             "BENCH_slo.json"]
+                             "BENCH_slo.json", "BENCH_chaos.json"]
     failures = []
     for path in paths:
         try:
@@ -294,6 +361,8 @@ def main() -> None:
             errs = check_spec(doc)
         elif "slo" in schema or "slo" in os.path.basename(path):
             errs = check_slo(doc)
+        elif "chaos" in schema or "chaos" in os.path.basename(path):
+            errs = check_chaos(doc)
         else:
             errs = check_serve(doc)
         for e in errs:

@@ -72,6 +72,11 @@ class Job:
     ttft_p99_s: float = 0.0            # tail first-token latency observed
     ttft_target_s: float = 0.0         # the class deadline, priced to seconds
     goodput_frac: float = 0.0          # fraction of tokens from SLO-met reqs
+    # -- fault plane (repro.serving.faults) ----------------------------------
+    pages_quarantined: int = 0         # pages lost to dead stripes (cumul.)
+    requests_recovered: int = 0        # fault resets recomputed exactly
+    tokens_recomputed: int = 0         # emitted tokens discarded by resets
+    recovery_steps_p99: float = 0.0    # reset -> first-token tail latency
 
 
 @dataclass
@@ -81,9 +86,11 @@ class NOS:
     model_cols: int = 16
     jobs: Dict[str, Job] = field(default_factory=dict)
     _free: List[int] = field(default_factory=list)
+    _quarantined: set = field(default_factory=set)
 
     def __post_init__(self):
         self._free = list(range(self.data_rows))
+        self._quarantined = set()
 
     # -- admission -----------------------------------------------------------
     def submit(self, job, *, name: Optional[str] = None, shape=None,
@@ -171,10 +178,27 @@ class NOS:
                 job.rows = ()
                 evicted.append(job.name)
         self._free = [r for r in self._free if r not in rows]
+        self._quarantined |= {r for r in rows if 0 <= r < self.data_rows}
         for j in sorted(self.jobs.values(), key=lambda j: j.submitted_at):
             if j.state == "pending":
                 self._try_place(j)
         return evicted
+
+    def restore_rows(self, rows: List[int]) -> List[str]:
+        """Elastic re-join — the inverse of :meth:`fail_rows`: rows a
+        failure quarantined return to the free pool, and pending jobs
+        re-place in FIFO order against the recovered capacity.  Rows
+        that were never quarantined are ignored (restoring is idempotent
+        and never double-frees a row a running job holds).  Returns the
+        names of jobs placed by the recovery."""
+        back = {r for r in rows if r in self._quarantined}
+        self._quarantined -= back
+        self._free = sorted(set(self._free) | back)
+        placed = []
+        for j in sorted(self.jobs.values(), key=lambda j: j.submitted_at):
+            if j.state == "pending" and self._try_place(j):
+                placed.append(j.name)
+        return placed
 
     # -- accounting -----------------------------------------------------------
     def utilisation(self) -> float:
@@ -216,7 +240,11 @@ class NOS:
                        spec_k: Optional[float] = None,
                        ttft_p99_s: Optional[float] = None,
                        ttft_target_s: Optional[float] = None,
-                       goodput_frac: Optional[float] = None):
+                       goodput_frac: Optional[float] = None,
+                       pages_quarantined: Optional[int] = None,
+                       requests_recovered: Optional[int] = None,
+                       tokens_recomputed: Optional[int] = None,
+                       recovery_steps_p99: Optional[float] = None):
         """Serving-engine telemetry (§VIII: nOS owns per-application
         accounting).  The paged engine calls this per replay/step batch;
         ``energy_j`` accrues (engine-priced decode energy), ``peak_pages``
@@ -233,7 +261,12 @@ class NOS:
         scheduler's deadline contract: tail first-token latency against
         the tenant's class deadline (priced to seconds by the cost
         engine's ``decode_cost_s``) and the fraction of emitted tokens
-        that came from requests whose deadline was met."""
+        that came from requests whose deadline was met.  The fault-plane
+        gauges (``pages_quarantined`` / ``requests_recovered`` /
+        ``tokens_recomputed`` / ``recovery_steps_p99``) surface the
+        §VIII failure story: how much of the striped store a dead node
+        took with it, how many tenants were reset and recomputed
+        exactly, and the tail latency of that recovery."""
         job = self.jobs[name]
         if pages_held is not None:
             job.pages_held = pages_held
@@ -266,16 +299,27 @@ class NOS:
             job.ttft_target_s = ttft_target_s
         if goodput_frac is not None:
             job.goodput_frac = goodput_frac
+        if pages_quarantined is not None:
+            job.pages_quarantined = pages_quarantined
+        if requests_recovered is not None:
+            job.requests_recovered = requests_recovered
+        if tokens_recomputed is not None:
+            job.tokens_recomputed = tokens_recomputed
+        if recovery_steps_p99 is not None:
+            job.recovery_steps_p99 = recovery_steps_p99
 
     def serving_table(self) -> str:
         """Fleet view of the serving gauges (pages, tokens, TTFT, the
-        prefix-sharing overlay columns, and the SLO contract: observed
-        p99 TTFT vs the class target, plus goodput)."""
+        prefix-sharing overlay columns, the SLO contract: observed p99
+        TTFT vs the class target plus goodput, and the fault plane:
+        quarantined pages, recovered requests, recomputed tokens, and
+        the recovery tail)."""
         rows = [f"{'job':<18} {'pages':>6} {'peak':>5} {'tokens':>8} "
                 f"{'ttft_s':>9} {'preempt':>7} {'energy_J':>10} "
                 f"{'shared':>6} {'hit%':>5} {'dedupKB':>8} "
                 f"{'acc%':>5} {'disp/tok':>8} {'K':>5} "
-                f"{'p99/tgt_s':>18} {'good%':>5}"]
+                f"{'p99/tgt_s':>18} {'good%':>5} "
+                f"{'quar':>5} {'recov':>5} {'recomp':>6} {'rcvp99':>6}"]
         for j in self.jobs.values():
             if j.tokens_out == 0 and j.peak_pages == 0:
                 continue
@@ -291,7 +335,11 @@ class NOS:
                         f"{j.dispatches_per_token:>8.2f} "
                         f"{j.spec_k:>5.1f} "
                         f"{slo} "
-                        f"{j.goodput_frac * 100:>5.0f}")
+                        f"{j.goodput_frac * 100:>5.0f} "
+                        f"{j.pages_quarantined:>5} "
+                        f"{j.requests_recovered:>5} "
+                        f"{j.tokens_recomputed:>6} "
+                        f"{j.recovery_steps_p99:>6.1f}")
         return "\n".join(rows)
 
     def placement_table(self) -> str:

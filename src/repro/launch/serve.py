@@ -14,6 +14,10 @@ tokens on the same prompts (pinned by tests/test_serving.py).
 ``--chunk-prefill on`` slices paged prefills into page-aligned chunks
 co-scheduled with decode windows, with ``--slo`` stamping every request's
 class (TTFT deadline + tolerable stall — docs/SERVING.md).
+``--fault-plan chaos`` arms a seeded deterministic fault schedule (node
+failures, transient admission errors, a straggler) against the paged
+run and prints the recovery report — docs/FAULT_TOLERANCE.md; needs a
+striped pool, i.e. ``--model N`` or ``--layout auto`` with model > 1.
 
 ``--layout auto`` asks the cost engine for the fastest (data, model)
 mesh for the decode shape and reports predicted vs measured per-token
@@ -149,6 +153,16 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
     eng.reset_metrics()
     if eng.cache is not None:
         eng.cache.clear()      # the measured run starts with a cold tree
+    if getattr(args, "fault_plan", "off") == "chaos":
+        from repro.serving import FaultPlan
+        if n_nodes < 2:
+            raise SystemExit("--fault-plan chaos needs a striped pool "
+                             "(--model N >= 2 or --layout auto): node 0 "
+                             "never fails, so a 1-node pool has nothing "
+                             "to quarantine")
+        # armed AFTER warmup/reset: plan step 0 is the first measured step
+        eng.install_faults(FaultPlan.seeded(
+            args.fault_seed, n_nodes=n_nodes, horizon=args.fault_horizon))
 
     for i, p in enumerate(prompts):
         eng.submit(np.asarray(p), args.gen, rid=f"req{i}", slo=args.slo)
@@ -194,7 +208,11 @@ def report_fleet(args, cfg, eng, tokens_out: int):
         spec_k=m.get("spec_k_mean"),
         ttft_p99_s=m["ttft_steps_p99"] * est.step_time_s,
         ttft_target_s=slo.ttft_steps * est.step_time_s,
-        goodput_frac=met_tokens / max(tokens_out, 1))
+        goodput_frac=met_tokens / max(tokens_out, 1),
+        pages_quarantined=m.get("pages_quarantined"),
+        requests_recovered=m.get("requests_recovered"),
+        tokens_recomputed=m.get("tokens_recomputed"),
+        recovery_steps_p99=m.get("recovery_steps_p99"))
     print("[nOS] fleet serving view:")
     print(pod.serving_table())
 
@@ -259,6 +277,17 @@ def main():
                     help="SLO class stamped on every submitted request "
                          "(TTFT deadline + tolerable prefill stall; "
                          "drives the chunked scheduler)")
+    ap.add_argument("--fault-plan", default="off", choices=["off", "chaos"],
+                    help="paged engine: arm a seeded deterministic fault "
+                         "schedule — node failures quarantining their "
+                         "page stripe, transient admission rejections "
+                         "under capped backoff, a straggler slowdown — "
+                         "and print the recovery report "
+                         "(docs/FAULT_TOLERANCE.md)")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the chaos fault schedule")
+    ap.add_argument("--fault-horizon", type=int, default=48,
+                    help="steps the chaos fault schedule spans")
     args = ap.parse_args()
     if args.spec_k != "auto":
         args.spec_k = int(args.spec_k)
@@ -342,6 +371,16 @@ def main():
                   f"{m['cow_copies']} COW copies, {m['shared_pages']} tree "
                   f"pages, {m['prefix_evictions']} evictions, "
                   f"{m['bytes_deduped'] / 1024:.0f} KiB deduped")
+        if eng.faults is not None:
+            print(f"[paged] fault plane: {m['node_failures']} node "
+                  f"failures / {m['node_joins']} re-joins, "
+                  f"{m['pages_quarantined']} pages quarantined, "
+                  f"{m['requests_recovered']} requests recovered "
+                  f"({m['tokens_recomputed']} tokens recomputed), "
+                  f"{m['requests_shed']} shed, "
+                  f"{m['transient_rejections']} transient rejections; "
+                  f"recovery p99 {m['recovery_steps_p99']:.1f} steps, "
+                  f"{m['quarantined_served']} stale reads")
         report_fleet(args, cfg, eng, tokens)
         measured = m["step_s"]
     else:

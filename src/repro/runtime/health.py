@@ -66,7 +66,11 @@ class StragglerDetector:
     _strikes: Dict[str, int] = field(default_factory=dict)
 
     def observe(self, durations: Dict[str, float]) -> Set[str]:
-        """Feed one step's per-node durations; returns nodes to evict."""
+        """Feed one step's per-node durations; returns nodes to evict.
+        An empty observation (every node failed or held out) evicts
+        nobody — there is no fleet median to straggle against."""
+        if not durations:
+            return set()
         med = statistics.median(durations.values())
         evict = set()
         for n, d in durations.items():

@@ -19,13 +19,21 @@
   slo        — per-tenant SLO classes (TTFT deadlines on the step
                clock, tolerable-stall fractions) driving the chunked
                scheduler's EDF admission and per-window chunk budget
+  faults     — §VIII's failure model made deterministic: a seeded
+               FaultPlan (node failures, transient dispatch errors,
+               straggler slowdowns on the step clock) and the
+               FaultPlane watchdog wiring runtime/health detectors
+               into PageAllocator.fail_node quarantine + exact-
+               recompute recovery through the preemption machinery
 
 Entry points: ``repro.launch.serve --engine paged [--prefix-cache on]
-[--spec-decode on] [--chunk-prefill on --slo <class>]`` and
-``benchmarks/serve_trace.py``; docs in docs/SERVING.md,
-docs/PREFIX_CACHE.md, docs/LOAD_TESTING.md and docs/TESTING.md.
+[--spec-decode on] [--chunk-prefill on --slo <class>] [--fault-plan
+chaos]`` and ``benchmarks/serve_trace.py``; docs in docs/SERVING.md,
+docs/PREFIX_CACHE.md, docs/LOAD_TESTING.md, docs/FAULT_TOLERANCE.md
+and docs/TESTING.md.
 """
 from repro.serving.engine import PagedEngine
+from repro.serving.faults import FaultEvent, FaultPlan, FaultPlane
 from repro.serving.paged_kv import NULL_PAGE, PageAllocator
 from repro.serving.prefix_cache import (PrefixCache, PrefixMatch,
                                         RadixNode)
@@ -40,4 +48,5 @@ __all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
            "ContinuousBatchScheduler", "Request", "StepPlan",
            "NGramSpec", "SpecStats", "AdaptiveK", "propose_ngram",
            "device_propose",
-           "SLOClass", "SLO_CLASSES", "DEFAULT_SLO", "get_slo"]
+           "SLOClass", "SLO_CLASSES", "DEFAULT_SLO", "get_slo",
+           "FaultEvent", "FaultPlan", "FaultPlane"]

@@ -138,7 +138,8 @@ class PagedEngine:
                  prefix_cache: bool = False, spec_decode: bool = False,
                  spec_k=8, spec_ngram: int = 3,
                  spec_proposer: str = "device",
-                 chunked_prefill: bool = False, chunk_tokens: int = 0):
+                 chunked_prefill: bool = False, chunk_tokens: int = 0,
+                 fault_plan=None):
         import jax.numpy as jnp
         from repro.models import lm, modules as nn
 
@@ -250,7 +251,27 @@ class PagedEngine:
         # denominator-side of dispatches_per_token, the observable
         # speculative decoding attacks
         self.model_passes = 0
+        # fault-plane counters (repro.serving.faults)
+        self.node_failures = 0
+        self.node_joins = 0
+        self.pages_quarantined_total = 0
+        self.requests_recovered = 0
+        self.tokens_recomputed = 0     # emitted tokens discarded by resets
+        self.quarantined_served = 0    # MUST stay 0: stale-read guard hits
+        self.faults = None
+        if fault_plan is not None:
+            self.install_faults(fault_plan)
         self.t0 = time.time()
+
+    def install_faults(self, plan) -> None:
+        """Attach a :class:`repro.serving.faults.FaultPlan`; its step-0
+        is the *current* scheduler step, so install after warmup and
+        ``reset_metrics`` to keep warmup traffic out of the chaos
+        window."""
+        from repro.serving.faults import FaultPlane
+        self.faults = FaultPlane(plan, self.n_nodes,
+                                 epoch=self.sched.step_idx)
+        self.sched.transient_gate = self.faults.transient_gate
 
     def reset_metrics(self):
         """Zero every counter/clock (e.g. after a warmup pass) while
@@ -270,6 +291,13 @@ class PagedEngine:
         self.sched.chunk_rounds = self.sched.chunk_tasks = 0
         self.sched.chunk_preemptions = 0
         self.model_passes = 0
+        self.node_failures = self.node_joins = 0
+        self.pages_quarantined_total = 0
+        self.requests_recovered = self.tokens_recomputed = 0
+        self.quarantined_served = 0
+        self.sched.shed.clear()
+        self.sched.transient_rejections = 0
+        self.sched.recovery_steps.clear()
         if self.spec is not None:
             self.spec.stats = SpecStats()
         if self.cache is not None:
@@ -306,10 +334,70 @@ class PagedEngine:
         self.sched.submit(req)
         return req
 
+    # -- node failure / re-join (the fault plane's engine half) ------------
+    def fail_node(self, node: int) -> set:
+        """A stripe of the §X-B DSM went dark: quarantine its pages,
+        invalidate the prefix-cache subtrees that lived on them, reset
+        every RUNNING/PREFILLING request whose block table touches them
+        (exact greedy recompute through whatever cache survived), and
+        shed requests the shrunken pool can never fit again.  Idempotent
+        per down node.  Called by the :mod:`repro.serving.faults`
+        watchdog; callable directly by tests and operators."""
+        quar = self.alloc.fail_node(node)
+        if not quar:
+            return quar
+        self.node_failures += 1
+        self.pages_quarantined_total += len(quar)
+        if self.cache is not None:
+            # tree-wide: a lost interior page strands its whole subtree
+            self.cache.invalidate_pages(quar)
+        victims = [r for r in (list(self.sched.running.values())
+                               + list(self.sched.prefilling.values()))
+                   if not quar.isdisjoint(self.alloc.held.get(r.rid, ()))]
+        for req in victims:
+            self.tokens_recomputed += len(req.tokens)
+            self.sched.fault_reset(req)
+        self.requests_recovered += len(victims)
+        self.sched.shed_infeasible(self.alloc.allocatable_pages)
+        self._assert_no_quarantined()
+        return quar
+
+    def join_node(self, node: int) -> int:
+        """Elastic re-join: the node's quarantined pages return to the
+        striped free lists.  Returns how many pages rejoined."""
+        was_down = node in self.alloc.failed_nodes
+        restored = self.alloc.restore_node(node)
+        if was_down:
+            self.node_joins += 1
+        return restored
+
+    def _assert_no_quarantined(self) -> None:
+        """The never-re-served invariant: after recovery, no live block
+        table references a quarantined page."""
+        quar = self.alloc.quarantined
+        if not quar:
+            return
+        for req in (list(self.sched.running.values())
+                    + list(self.sched.prefilling.values())):
+            bad = quar.intersection(self.alloc.held.get(req.rid, ()))
+            if bad:
+                self.quarantined_served += 1
+                raise RuntimeError(
+                    f"request {req.rid} still references quarantined "
+                    f"pages {sorted(bad)} after recovery")
+
     # -- host mirror maintenance -------------------------------------------
     def _block_row(self, rid: str) -> np.ndarray:
         row = np.full((self.nmax,), NULL_PAGE, np.int32)
         pages = self.alloc.held[rid]
+        if self.alloc.quarantined \
+                and not self.alloc.quarantined.isdisjoint(pages):
+            # a quarantined page about to be served is a recovery bug,
+            # never a runtime condition: fail fast, count the hit
+            self.quarantined_served += 1
+            bad = sorted(self.alloc.quarantined.intersection(pages))
+            raise RuntimeError(
+                f"block row for {rid} references quarantined pages {bad}")
         row[:len(pages)] = pages
         return row
 
@@ -869,6 +957,11 @@ class PagedEngine:
         this window (e.g. to the next trace arrival).  Returns requests
         finished this window."""
         jnp = self._jnp
+        if self.faults is not None:
+            # watchdog tick BEFORE planning: detections quarantine pages
+            # and reset victims, so this step's plan sees the degraded
+            # pool and never dispatches against a dead stripe
+            self.faults.on_step(self)
         plan = self.sched.plan_step()
         finished: List[Request] = []
         for slot in range(self.max_batch):   # preempted/idle slots -> null
@@ -1003,6 +1096,24 @@ class PagedEngine:
             "preemptions": sum(r.preemptions for r in self.sched.all_requests),
             "prefill_tokens": self.prefill_tokens,
         }
+        rec = self.sched.recovery_steps
+        out.update({
+            # fault plane (repro.serving.faults): quarantine footprint,
+            # recovery work, and the reset -> first-token latency tail
+            "node_failures": self.node_failures,
+            "node_joins": self.node_joins,
+            "pages_quarantined": self.pages_quarantined_total,
+            "pages_quarantined_now": self.alloc.pages_quarantined,
+            "requests_recovered": self.requests_recovered,
+            "requests_shed": len(self.sched.shed),
+            "tokens_recomputed": self.tokens_recomputed,
+            "transient_rejections": self.sched.transient_rejections,
+            "quarantined_served": self.quarantined_served,
+            "recovery_steps_p50": float(np.percentile(rec, 50))
+            if rec else 0.0,
+            "recovery_steps_p99": float(np.percentile(rec, 99))
+            if rec else 0.0,
+        })
         if self.sched.chunked:
             out.update({
                 "chunk_dispatches": self.chunk_dispatches,

@@ -27,6 +27,19 @@ never refcounted.  ``reclaim`` is an optional callback (wired to
 free list runs short, so cold cache pages are evicted before any tenant
 is preempted.
 
+Node failure (§VIII's fault model applied to the store): when a node of
+the striped DSM dies, every physical page whose stripe lands on it is
+*quarantined* by :meth:`PageAllocator.fail_node` — pulled from the free
+lists immediately, and marked so that pages still referenced (by a
+request's block table or the prefix-cache tree) route to the quarantine
+pool instead of the free list when their last reference drops.  A
+quarantined page is never handed out again until
+:meth:`PageAllocator.restore_node` re-joins the node, and the
+conservation invariant is extended to a three-way partition: free +
+allocated + quarantined-free == n_pages - 1.  The null page is a device
+convention (its contribution is masked to zero), not striped state, so
+it survives any node's failure.
+
 Pure host-side logic: no jax imports, unit-testable anywhere.  The
 device-side half (pools + block tables) lives in
 :mod:`repro.serving.engine`.
@@ -34,7 +47,7 @@ device-side half (pools + block tables) lives in
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Set
 
 from repro.core.memory_server import striped_owner
 
@@ -55,6 +68,10 @@ class PageAllocator:
     refcount: Dict[int, int] = field(default_factory=dict)
     reclaim: Optional[Callable[[int], int]] = None
     _free_by_node: List[List[int]] = field(default_factory=list)
+    # fault plane: pages striped to a dead node (never re-allocated until
+    # the node restores) and the set of currently-failed nodes
+    quarantined: Set[int] = field(default_factory=set)
+    failed_nodes: Set[int] = field(default_factory=set)
 
     def __post_init__(self):
         assert self.n_pages > 1, "need at least one page beyond the null page"
@@ -86,6 +103,18 @@ class PageAllocator:
     def refcount_of(self, page: int) -> int:
         return self.refcount.get(page, 0)
 
+    @property
+    def pages_quarantined(self) -> int:
+        """Pages currently striped to a dead node (allocated or idle)."""
+        return len(self.quarantined)
+
+    @property
+    def allocatable_pages(self) -> int:
+        """Pool capacity excluding the null page and the quarantine —
+        what admission/feasibility checks must size against while a node
+        is down."""
+        return self.n_pages - 1 - len(self.quarantined)
+
     def occupancy_by_node(self) -> List[int]:
         """Allocated pages per owner node (load-balance observable).
         Shared pages count once — this is physical occupancy."""
@@ -95,18 +124,26 @@ class PageAllocator:
         return counts
 
     def check_conservation(self) -> bool:
-        """Every non-null page is on exactly one side: free list (refcount
-        0) or allocated (refcount >= 1)."""
+        """Every non-null page is on exactly one side of a three-way
+        partition: free list (refcount 0, healthy node), allocated
+        (refcount >= 1 — possibly on a dead node, awaiting recovery), or
+        quarantined-free (refcount 0 on a dead node, parked until
+        :meth:`restore_node`)."""
         free = [p for f in self._free_by_node for p in f]
         if len(free) != len(set(free)):
             return False
         if set(free) & set(self.refcount):
             return False
-        if NULL_PAGE in self.refcount or NULL_PAGE in free:
+        if set(free) & self.quarantined:
+            return False              # quarantined pages never circulate
+        if NULL_PAGE in self.refcount or NULL_PAGE in free \
+                or NULL_PAGE in self.quarantined:
             return False
         if any(c < 1 for c in self.refcount.values()):
             return False
-        return len(free) + len(self.refcount) == self.n_pages - 1
+        quar_free = len(self.quarantined - set(self.refcount))
+        return len(free) + len(self.refcount) + quar_free \
+            == self.n_pages - 1
 
     # -- sharing (refcounts) ----------------------------------------------
     def share(self, page: int) -> None:
@@ -114,6 +151,10 @@ class PageAllocator:
         second request reusing it).  The null page is never shared."""
         if page == NULL_PAGE:
             raise ValueError("the null page cannot be shared")
+        if page in self.quarantined:
+            # a dead node's page may be awaiting recovery but never gains
+            # new readers — the "never re-served" half of the fault plane
+            raise ValueError(f"page {page} is quarantined; cannot share")
         if self.refcount.get(page, 0) < 1:
             raise ValueError(f"page {page} is not allocated; cannot share")
         self.refcount[page] += 1
@@ -127,10 +168,55 @@ class PageAllocator:
             raise ValueError(f"double free of page {page}")
         if c == 1:
             del self.refcount[page]
+            if page in self.quarantined:
+                return False          # parked until restore_node
             self._free_by_node[self.owner(page)].append(page)
             return True
         self.refcount[page] = c - 1
         return False
+
+    # -- node failure / re-join (the fault plane's allocator half) ---------
+    def fail_node(self, node: int) -> Set[int]:
+        """Quarantine every physical page whose ``striped_owner`` stripe
+        lands on ``node``.  Idle pages leave the free list immediately;
+        pages still referenced (request block tables, prefix-cache tree)
+        stay in ``refcount`` until their holders release them — the
+        caller (engine recovery) is responsible for resetting those
+        holders — and :meth:`release_page` then parks them in quarantine
+        instead of recirculating them.  Returns the newly quarantined
+        set.  Idempotent per node.  The null page is a device convention
+        (masked, replicated), never quarantined."""
+        if not 0 <= node < self.n_nodes:
+            raise ValueError(f"node {node} outside stripe width "
+                             f"{self.n_nodes}")
+        if node in self.failed_nodes:
+            return set()
+        self.failed_nodes.add(node)
+        newly = {p for p in range(1, self.n_pages) if self.owner(p) == node}
+        # this node's refcount-0 pages are exactly its free list: pull
+        # them from circulation in one move
+        self._free_by_node[node] = []
+        self.quarantined |= newly
+        return newly
+
+    def restore_node(self, node: int) -> int:
+        """Re-join: the node's quarantined pages leave quarantine; those
+        with no outstanding references return to its free list (LIFO,
+        high to low, matching ``__post_init__``).  A page somehow still
+        referenced simply resumes normal refcount life — it frees
+        wherever its last release lands.  Returns how many pages
+        re-entered the free list."""
+        if node not in self.failed_nodes:
+            return 0
+        self.failed_nodes.discard(node)
+        mine = {p for p in self.quarantined if self.owner(p) == node}
+        self.quarantined -= mine
+        restored = 0
+        for p in sorted(mine, reverse=True):
+            if p not in self.refcount:
+                self._free_by_node[node].append(p)
+                restored += 1
+        return restored
 
     # -- alloc / grow / free ----------------------------------------------
     def _take(self, want_node: int) -> Optional[int]:

@@ -103,6 +103,7 @@ class PrefixCacheStats:
     cow_copies: int = 0
     inserts: int = 0             # nodes grafted into the tree
     evictions: int = 0           # nodes evicted (LRU, refcount-0)
+    invalidations: int = 0       # nodes dropped by node-failure quarantine
 
     @property
     def hit_rate(self) -> float:
@@ -310,6 +311,37 @@ class PrefixCache:
         self.stats.evictions += 1
         return 1 if self.alloc.release_page(node.page) else 0
 
+    # -- fault-plane invalidation ------------------------------------------
+    def invalidate_pages(self, pages) -> int:
+        """Node-failure quarantine, tree-wide: drop every node whose page
+        is in ``pages`` AND its whole subtree — descendants are only
+        reachable for matching through the lost ancestor, so keeping them
+        would strand pages the tree can never hand out again.  Unlike
+        LRU eviction this ignores ``users_of``: the allocator's
+        quarantine (not the free list) catches the released references,
+        and live holders are reset by the scheduler's recovery pass.
+        Returns the number of nodes dropped."""
+        lost = {p for p in pages if p in self._nodes}
+        if not lost:
+            return 0
+        dropped = 0
+        for page in sorted(lost):
+            node = self._nodes.get(page)
+            if node is None:
+                continue              # already gone via an ancestor
+            dropped += self._drop_subtree(node)
+        return dropped
+
+    def _drop_subtree(self, node: RadixNode) -> int:
+        n = 0
+        for child in list(node.children.values()):
+            n += self._drop_subtree(child)
+        del self._nodes[node.page]
+        node.parent.children.pop(node.key[0], None)
+        self.stats.invalidations += 1
+        self.alloc.release_page(node.page)
+        return n + 1
+
     def clear(self) -> int:
         """Release every tree reference (e.g. after an engine warmup so
         benchmark runs start cold).  Pages still used by live requests
@@ -334,4 +366,5 @@ class PrefixCache:
             "prefix_nodes": self.n_nodes,
             "shared_pages": self.shared_pages,
             "prefix_evictions": s.evictions,
+            "prefix_invalidations": s.invalidations,
         }

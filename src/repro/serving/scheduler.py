@@ -53,6 +53,18 @@ of budget — progress is strict, so sustained overload cannot starve any
 admitted request — and EDF over fixed deadlines keeps the waiting queue
 starvation-free too.
 
+Fault recovery (the robustness counterpart, :mod:`repro.serving.faults`):
+node loss reuses the preemption machinery — a request whose block table
+touches a quarantined page is reset to ``waiting`` through
+:meth:`fault_reset` (greedy recompute is exact, so survivors' tokens are
+bit-identical to a fault-free run), transient dispatch rejections
+re-admit under capped exponential backoff (a backing-off head never
+blocks later arrivals), and a pool shrunken by quarantine degrades
+gracefully: requests that can never fit again are shed batch-class
+first (:meth:`shed_infeasible`), and while any page is quarantined the
+preemption victim rule prefers lower-priority SLO classes so batch
+tenants absorb the pressure before interactive ones.
+
 Pure host-side state machine: no jax imports.  The engine applies the
 returned plan to device arrays.
 """
@@ -78,7 +90,7 @@ class Request:
     prompt_key: Optional[tuple] = None   # token ids (prefix-cache key)
     slo: str = DEFAULT_SLO           # repro.serving.slo class name
     # -- lifecycle ---------------------------------------------------------
-    state: str = "waiting"           # waiting | prefilling | running | finished
+    state: str = "waiting"  # waiting | prefilling | running | finished | shed
     slot: Optional[int] = None
     pos: int = 0                     # next KV write position
     prefilled: int = 0               # prompt tokens with KV written (chunked)
@@ -87,6 +99,12 @@ class Request:
     first_token_step: Optional[int] = None
     finished_step: Optional[int] = None
     preemptions: int = 0
+    # -- fault-plane state (repro.serving.faults) --------------------------
+    recoveries: int = 0              # fault resets (subset of preemptions)
+    recovered_step: Optional[int] = None   # last fault-reset step, cleared
+                                           # when the first token re-lands
+    transient_rejections: int = 0    # dispatch faults absorbed by backoff
+    backoff_until: int = 0           # not admissible before this step
     # wall stamps (telemetry only — scheduling never reads the wall clock)
     arrived_wall: float = 0.0
     first_token_wall: float = 0.0
@@ -134,12 +152,20 @@ class ContinuousBatchScheduler:
         self.running: Dict[int, Request] = {}      # slot -> request
         self.prefilling: Dict[int, Request] = {}   # slot -> request (chunked)
         self.finished: List[Request] = []
+        self.shed: List[Request] = []    # dropped by pool-shrink degradation
         self.step_idx = 0
         self._next_seq = 0
         # chunk telemetry (pinned by tests, surfaced via engine metrics)
         self.chunk_rounds = 0
         self.chunk_tasks = 0
         self.chunk_preemptions = 0       # preempted while half-prefilled
+        # fault plane: an injected transient-dispatch gate (request, step)
+        # -> bool, and capped exponential backoff for its rejections
+        self.transient_gate: Optional[Callable[[Request, int], bool]] = None
+        self.backoff_base = 1
+        self.backoff_cap = 8
+        self.transient_rejections = 0
+        self.recovery_steps: List[int] = []   # fault-reset -> first-token
 
     # -- submission --------------------------------------------------------
     def submit(self, req: Request):
@@ -181,6 +207,10 @@ class ContinuousBatchScheduler:
         tenant.
         """
         plan = StepPlan()
+        if self.alloc.quarantined:
+            # degraded pool: arrivals that can never fit the shrunken
+            # capacity are shed up front instead of wedging admission
+            self.shed_infeasible(self.alloc.allocatable_pages)
         self._grow_or_preempt(plan)
         self._admit(plan)
         return plan
@@ -202,10 +232,20 @@ class ContinuousBatchScheduler:
         they hold pages too, and they are usually the latest arrivals —
         a preempted chunk victim recomputes from scratch (through the
         prefix cache if its early pages were donated), exactly like a
-        decode victim."""
+        decode victim.
+
+        Degraded mode (any page quarantined by a node failure): victims
+        are picked by SLO class first — batch tenants absorb the
+        shrunken pool's pressure before interactive ones.  Arrival order
+        breaks ties within a class, so the livelock argument survives:
+        the lowest-priority-number earliest request is never preempted,
+        always finishes, and the pool still drains."""
         pool = list(self.running.values()) + list(self.prefilling.values())
         if not pool:
             return None
+        if self.alloc.quarantined:
+            return max(pool, key=lambda r: (get_slo(r.slo).priority,
+                                            r.arrived_step, r.seq))
         return max(pool, key=lambda r: (r.arrived_step, r.seq))
 
     def _preempt(self, req: Request, plan: StepPlan):
@@ -232,6 +272,52 @@ class ContinuousBatchScheduler:
         self.waiting.append(req)
         self._sort_waiting()
         plan.preempted.append(req)
+
+    # -- fault recovery (node loss rides the preemption machinery) ---------
+    def fault_reset(self, req: Request, plan: Optional[StepPlan] = None
+                    ) -> StepPlan:
+        """Reset a RUNNING/PREFILLING request whose pages were quarantined
+        by a node failure: exactly a preemption (pages released — the
+        allocator parks the quarantined ones — state back to ``waiting``,
+        greedy recompute through whatever prefix-cache pages survived),
+        plus a recovery stamp so :meth:`note_first_token` can report the
+        reset -> first-token latency distribution."""
+        plan = plan if plan is not None else StepPlan()
+        self._preempt(req, plan)
+        req.recoveries += 1
+        req.recovered_step = self.step_idx
+        return plan
+
+    def shed_infeasible(self, capacity: int) -> List[Request]:
+        """Graceful degradation under a quarantine-shrunken pool: any
+        request whose *peak* page need exceeds ``capacity`` can never be
+        (re)admitted, so it is shed now — terminally, state ``shed`` —
+        instead of wedging the engine in an un-admittable waiting queue.
+        Shedding order follows SLO priority (batch before interactive),
+        which only matters for observability: every infeasible request
+        goes.  Live requests release their pages like a preemption."""
+        pool = (list(self.waiting) + list(self.prefilling.values())
+                + list(self.running.values()))
+        doomed = [r for r in pool
+                  if self.alloc.pages_for(r.prompt_len + r.gen) > capacity]
+        doomed.sort(key=lambda r: (-get_slo(r.slo).priority,
+                                   r.arrived_step, r.seq))
+        for req in doomed:
+            if req.state == "waiting":
+                self.waiting.remove(req)
+            else:
+                if self.cache is not None and req.prefix_match is not None:
+                    self.cache.release_cow(req.prefix_match)
+                    req.prefix_match = None
+                self.alloc.free(req.rid)
+                if req.state == "prefilling":
+                    del self.prefilling[req.slot]
+                else:
+                    del self.running[req.slot]
+            req.state, req.slot = "shed", None
+            req.finished_step = self.step_idx
+            self.shed.append(req)
+        return doomed
 
     def _grow_or_preempt(self, plan: StepPlan):
         for req in sorted(self.running.values(),
@@ -280,14 +366,34 @@ class ContinuousBatchScheduler:
         used = set(self.running) | set(self.prefilling)
         return min(set(range(self.max_batch)) - used)
 
+    def _transient_rejected(self, req: Request) -> bool:
+        """Ask the fault plane's gate whether this dispatch transiently
+        fails; on rejection, arm capped exponential backoff (1, 2, 4, ...
+        ``backoff_cap`` steps) so the retry storm self-spaces.  Tokens are
+        unaffected — admission merely lands later and greedy recompute is
+        exact."""
+        gate = self.transient_gate
+        if gate is None or not gate(req, self.step_idx):
+            return False
+        req.transient_rejections += 1
+        self.transient_rejections += 1
+        back = min(self.backoff_cap,
+                   self.backoff_base << (req.transient_rejections - 1))
+        req.backoff_until = self.step_idx + max(back, 1)
+        return True
+
     def _admit(self, plan: StepPlan):
         if self.chunked:
             self._admit_chunked(plan)
             return
         budget = self.prefill_budget * self.decode_cost_s
         spent = 0.0
-        while self.waiting and self._slots_in_use() < self.max_batch:
-            req = self.waiting[0]
+        i = 0
+        while i < len(self.waiting) and self._slots_in_use() < self.max_batch:
+            req = self.waiting[i]
+            if req.backoff_until > self.step_idx:
+                i += 1                # backing off: never blocks the queue
+                continue
             # admission is priced on UNCACHED prefill tokens only: a
             # request whose prompt is mostly shared pages is nearly free
             cost = (self.prefill_cost_s(self._uncached_len(req))
@@ -295,9 +401,12 @@ class ContinuousBatchScheduler:
             starving = not self.running and not plan.admitted
             if budget > 0.0 and spent + cost > budget and not starving:
                 break                 # interference budget exhausted
+            if self._transient_rejected(req):
+                i += 1                # dispatch fault: retry after backoff
+                continue
             if not self._take_pages(req):
                 break                 # page pressure: wait for frees
-            self.waiting.pop(0)
+            self.waiting.pop(i)
             req.slot = self._free_slot()
             req.state = "running"
             req.pos = req.prompt_len
@@ -312,11 +421,18 @@ class ContinuousBatchScheduler:
         budget, so admission only needs a slot and pages.  This removes
         the monolithic path's head-of-line block, where one unaffordable
         long prompt at the FIFO head stalled every arrival behind it."""
-        while self.waiting and self._slots_in_use() < self.max_batch:
-            req = self.waiting[0]
+        i = 0
+        while i < len(self.waiting) and self._slots_in_use() < self.max_batch:
+            req = self.waiting[i]
+            if req.backoff_until > self.step_idx:
+                i += 1                # backing off: never blocks the queue
+                continue
+            if self._transient_rejected(req):
+                i += 1                # dispatch fault: retry after backoff
+                continue
             if not self._take_pages(req):
                 break                 # page pressure: wait for frees
-            self.waiting.pop(0)
+            self.waiting.pop(i)
             req.slot = self._free_slot()
             req.state = "prefilling"
             # cached prefix pages already hold KV: chunking starts at the
@@ -449,7 +565,18 @@ class ContinuousBatchScheduler:
             k = min(k, req.gen - len(req.tokens))
         k = max(quantize(max(k, 1)), 1)
         if k > 1 and self.waiting and self._slots_in_use() < self.max_batch:
-            head = self.waiting[0]
+            head = next((r for r in self.waiting
+                         if r.backoff_until <= self.step_idx), None)
+            if head is None:
+                # every waiting request is backing off: cap the window at
+                # the earliest backoff expiry so re-admission lands on a
+                # window boundary, then fall through to reservation
+                expiry = min(r.backoff_until
+                             for r in self.waiting) - self.step_idx
+                k = max(min(k, expiry), 1)
+        else:
+            head = None
+        if head is not None:
             if self.chunked:
                 # chunked admission is unpriced (slot + pages only), so
                 # any head with capacity could land next step
@@ -492,6 +619,10 @@ class ContinuousBatchScheduler:
         req.tokens.append(token)
         req.first_token_step = self.step_idx
         req.first_token_wall = time.time()
+        if req.recovered_step is not None:
+            # recovery latency: fault reset -> the recompute's first token
+            self.recovery_steps.append(self.step_idx - req.recovered_step)
+            req.recovered_step = None
         self._maybe_finish(req)
 
     def complete_step(self, emitted: Dict[int, int]) -> List[Request]:
@@ -554,12 +685,15 @@ class ContinuousBatchScheduler:
         seen.update({r.rid: r for r in self.prefilling.values()})
         seen.update({r.rid: r for r in self.running.values()})
         seen.update({r.rid: r for r in self.finished})
+        seen.update({r.rid: r for r in self.shed})
         return list(seen.values())
 
     def conserved(self, submitted: int) -> bool:
-        """No request dropped or duplicated across queues."""
+        """No request dropped or duplicated across queues (``shed`` is a
+        terminal queue too — degradation is accounted, never silent)."""
         rids = ([r.rid for r in self.waiting]
                 + [r.rid for r in self.prefilling.values()]
                 + [r.rid for r in self.running.values()]
-                + [r.rid for r in self.finished])
+                + [r.rid for r in self.finished]
+                + [r.rid for r in self.shed])
         return len(rids) == len(set(rids)) == submitted

@@ -176,6 +176,37 @@ def test_nos_failure_eviction():
     assert not (set(s.jobs["a"].rows) & {0, 1})
 
 
+def test_nos_restore_rows_inverts_failure():
+    s = nos.NOS(data_rows=8)
+    s.submit(nos.Job("a", rows_needed=4))
+    s.submit(nos.Job("b", rows_needed=4))
+    s.fail_rows([0, 1, 2, 3])
+    # half the pod is dark: only one job fits the surviving rows
+    states = sorted(j.state for j in s.jobs.values())
+    assert states == ["pending", "running"]
+    placed = s.restore_rows([0, 1, 2, 3])
+    # recovery re-admits the stranded job onto the recovered capacity
+    assert len(placed) == 1
+    assert all(j.state == "running" for j in s.jobs.values())
+    assert s._quarantined == set()
+    used = [r for j in s.jobs.values() for r in j.rows]
+    assert len(used) == len(set(used)) == 8
+
+
+def test_nos_restore_rows_ignores_healthy_rows():
+    s = nos.NOS(data_rows=8)
+    s.submit(nos.Job("a", rows_needed=4))       # holds rows 0-3
+    # restoring rows a running job holds must not double-free them
+    assert s.restore_rows([0, 1]) == []
+    assert sorted(s._free) == [4, 5, 6, 7]
+    assert s.jobs["a"].state == "running"
+    s.fail_rows([5])                            # idle row: nothing evicted
+    assert s.restore_rows([5, 6, 7]) == []      # 6,7 never quarantined
+    assert 5 in s._free and s._quarantined == set()
+    assert sorted(s._free) == [4, 5, 6, 7]
+    assert s.jobs["a"].rows == (0, 1, 2, 3)
+
+
 @settings(max_examples=20, deadline=None)
 @given(rows=st.integers(2, 32),
        sizes=st.lists(st.integers(1, 8), min_size=1, max_size=10))

@@ -1,0 +1,374 @@
+"""Unit tests for the deterministic fault plane (PR 8).
+
+Bottom-up over the recovery stack: the allocator's quarantine
+lifecycle (``fail_node``/``restore_node`` against the three-way
+conservation invariant), the prefix cache's tree-wide
+``invalidate_pages``, the scheduler's transient-rejection backoff /
+degraded victim rule / graceful-degradation shedding, the
+:class:`~repro.serving.faults.FaultPlan` schedule semantics, the
+:class:`~repro.serving.faults.FaultPlane` watchdog against a fake
+engine (detection is honest — missed heartbeats and straggler
+patience, not oracular), and finally a real :class:`PagedEngine` run
+with a manual mid-stream fail/join whose tokens must stay
+bit-identical to the dense oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.faults import FaultEvent, FaultPlan, FaultPlane
+from repro.serving.paged_kv import NULL_PAGE, PageAllocator
+from repro.serving.prefix_cache import PrefixCache
+from repro.serving.scheduler import ContinuousBatchScheduler, Request
+
+
+def _stripe(a: PageAllocator, node: int) -> set:
+    return {p for p in range(1, a.n_pages) if a.owner(p) == node}
+
+
+# -- allocator: quarantine lifecycle ------------------------------------
+
+
+def test_fail_node_quarantines_stripe_and_empties_free_list():
+    a = PageAllocator(n_pages=13, page_size=4, n_nodes=3)
+    newly = a.fail_node(1)
+    assert newly == _stripe(a, 1) == a.quarantined
+    assert NULL_PAGE not in newly
+    assert not a._free_by_node[1]
+    assert a.failed_nodes == {1}
+    assert a.allocatable_pages == (a.n_pages - 1) - len(newly)
+    assert a.check_conservation()
+    # idempotent per node; out-of-range is a caller bug
+    assert a.fail_node(1) == set()
+    with pytest.raises(ValueError):
+        a.fail_node(3)
+    with pytest.raises(ValueError):
+        a.fail_node(-1)
+
+
+def test_release_parks_quarantined_pages_until_restore():
+    a = PageAllocator(n_pages=13, page_size=4, n_nodes=3)
+    pages = a.alloc("r0", 6)
+    a.fail_node(1)
+    held_dead = [p for p in pages if a.owner(p) == 1]
+    assert held_dead, "stripe width 3 over 6 logical pages must hit node 1"
+    # a referenced quarantined page stays in refcount until its holder
+    # releases it; the release parks it instead of recirculating
+    for p in held_dead:
+        assert p in a.refcount
+    freed = a.free("r0")
+    assert freed == 6 - len(held_dead)
+    for p in held_dead:
+        assert p in a.quarantined and p not in a.refcount
+        assert p not in a._free_by_node[1]
+    assert a.check_conservation()
+    # restore returns exactly the refcount-0 stripe to the node's list
+    restored = a.restore_node(1)
+    assert restored == len(_stripe(a, 1))
+    assert not a.quarantined and not a.failed_nodes
+    assert a.free_pages == a.n_pages - 1
+    assert a.check_conservation()
+    # restoring a healthy node is a no-op
+    assert a.restore_node(1) == 0
+
+
+def test_quarantined_pages_never_reenter_circulation():
+    a = PageAllocator(n_pages=13, page_size=4, n_nodes=3)
+    pages = a.alloc("r0", 3)
+    dead_page = next(p for p in pages if a.owner(p) == 1)
+    a.fail_node(1)
+    # no new readers on a dead stripe
+    with pytest.raises(ValueError):
+        a.share(dead_page)
+    # fresh allocations route around the quarantine entirely
+    probe = a.alloc("probe", a.free_pages)
+    assert probe is not None
+    assert not (set(probe) & a.quarantined)
+    # the pool is now empty: alloc/grow fail soft, never raise
+    assert a.alloc("more", 1) is None
+    assert a.grow("probe") is False
+    assert a.check_conservation()
+
+
+def test_restore_with_live_reference_resumes_refcount_life():
+    a = PageAllocator(n_pages=13, page_size=4, n_nodes=3)
+    pages = a.alloc("r0", 3)
+    dead_page = next(p for p in pages if a.owner(p) == 1)
+    a.fail_node(1)
+    restored = a.restore_node(1)
+    # the held page was not restored (still referenced) ...
+    assert restored == len(_stripe(a, 1)) - 1
+    assert dead_page in a.refcount and dead_page not in a.quarantined
+    # ... and frees normally wherever its last release lands
+    assert a.release_page(dead_page) is True
+    a.held["r0"].remove(dead_page)
+    assert dead_page in a._free_by_node[1]
+    assert a.check_conservation()
+
+
+# -- prefix cache: tree-wide invalidation -------------------------------
+
+
+def test_invalidate_pages_drops_whole_subtree():
+    a = PageAllocator(n_pages=13, page_size=2, n_nodes=3)
+    cache = PrefixCache(a)
+    tokens = [5, 6, 7, 8, 9, 10]
+    pages = a.alloc("seed", 3)          # logical j -> node j%3
+    cache.insert(tokens, pages, len(tokens))
+    a.free("seed")                      # tree refs keep all three alive
+    assert cache.n_nodes == 3 and a.pages_in_use == 3
+    # kill the middle page's node: the node AND its descendant go — the
+    # descendant is only reachable through the lost ancestor
+    quar = a.fail_node(a.owner(pages[1]))
+    dropped = cache.invalidate_pages(quar)
+    assert dropped == 2
+    assert cache.n_nodes == 1
+    assert cache.peek(tokens) == 2      # only the surviving root chunk
+    # the dead page parked in quarantine; the healthy descendant freed
+    assert pages[1] in a.quarantined and pages[1] not in a.refcount
+    assert pages[2] in a._free_by_node[a.owner(pages[2])]
+    assert cache.metrics()["prefix_invalidations"] == 2
+    assert a.check_conservation()
+    # pages not in the tree are ignored
+    assert cache.invalidate_pages({99, 100}) == 0
+
+
+# -- scheduler: backoff, shedding, degraded victims ---------------------
+
+
+def _sched(n_pages=13, n_nodes=1, max_batch=2, **kw):
+    a = PageAllocator(n_pages=n_pages, page_size=4, n_nodes=n_nodes)
+    return a, ContinuousBatchScheduler(a, max_batch=max_batch, **kw)
+
+
+def test_transient_backoff_grows_exponentially_and_caps():
+    a, s = _sched()
+    s.transient_gate = lambda req, step: req.transient_rejections < 5
+    q = Request("q0", prompt_len=4, gen=2)
+    s.submit(q)
+    backoffs = []
+    while q.state == "waiting" and len(backoffs) < 8:
+        s.step_idx = max(s.step_idx, q.backoff_until)
+        plan = s.plan_step()
+        if not plan.admitted:
+            backoffs.append(q.backoff_until - s.step_idx)
+    assert backoffs == [1, 2, 4, 8, 8]      # capped exponential
+    assert q.state == "running"             # sixth attempt admits
+    assert q.transient_rejections == 5
+    assert s.transient_rejections == 5
+
+
+def test_backing_off_request_never_blocks_the_queue():
+    a, s = _sched()
+    s.transient_gate = lambda req, step: req.rid == "q0" \
+        and req.transient_rejections < 2
+    q0 = Request("q0", prompt_len=4, gen=2)
+    q1 = Request("q1", prompt_len=4, gen=2)
+    s.submit(q0)
+    s.submit(q1)
+    plan = s.plan_step()
+    # the FIFO head bounced; the request behind it admits the same step
+    assert [r.rid for r in plan.admitted] == ["q1"]
+    assert q0.state == "waiting" and q0.backoff_until == s.step_idx + 1
+    assert s.conserved(2)
+
+
+def test_shed_infeasible_is_terminal_and_batch_first():
+    a, s = _sched(n_nodes=3, max_batch=3)
+    big_int = Request("int", prompt_len=28, gen=8, slo="interactive")
+    big_bat = Request("bat", prompt_len=28, gen=8, slo="batch")
+    small = Request("ok", prompt_len=4, gen=4, slo="interactive")
+    for r in (big_int, big_bat, small):
+        s.submit(r)                     # 9, 9, 2 pages at peak; pool = 12
+    a.fail_node(1)                      # capacity 12 -> 8: the 9s can
+    plan = s.plan_step()                # never be admitted again
+    assert [r.rid for r in s.shed] == ["bat", "int"]   # batch absorbs first
+    assert all(r.state == "shed" for r in s.shed)
+    assert small.state == "running" and small in plan.admitted
+    assert s.conserved(3)
+    # shedding stamps finished_step so goodput accounting stays total
+    assert all(r.finished_step == s.step_idx for r in s.shed)
+
+
+def test_degraded_victim_rule_sheds_batch_before_interactive():
+    a, s = _sched(n_nodes=3)
+    early_bat = Request("bat", prompt_len=4, gen=4, slo="batch",
+                        arrived_step=0, seq=0, state="running", slot=0)
+    late_int = Request("int", prompt_len=4, gen=4, slo="interactive",
+                       arrived_step=1, seq=1, state="running", slot=1)
+    s.running = {0: early_bat, 1: late_int}
+    # healthy rule: latest arrival, SLO-blind
+    assert s._victim(early_bat) is late_int
+    # degraded rule: batch tenants absorb the shrunken pool's pressure
+    # first, even when they arrived earlier
+    a.fail_node(1)
+    assert s._victim(early_bat) is early_bat
+
+
+def test_fault_reset_rides_preemption_and_stamps_recovery():
+    a, s = _sched()
+    q = Request("q0", prompt_len=4, gen=4)
+    s.submit(q)
+    s.plan_step()
+    assert q.state == "running"
+    q.tokens = [1, 2]
+    s.step_idx = 7
+    s.fault_reset(q)
+    assert q.state == "waiting" and q.tokens == []
+    assert q.recoveries == 1 and q.preemptions == 1
+    assert q.recovered_step == 7
+    assert not a.held.get("q0")
+    # the first re-landed token reports the reset -> first-token latency
+    s.step_idx = 12
+    s.note_first_token(q, 0)
+    assert s.recovery_steps == [5]
+    assert q.recovered_step is None     # cleared: one latency per reset
+
+
+# -- FaultPlan: schedule semantics --------------------------------------
+
+
+def test_fault_plan_queries():
+    plan = FaultPlan([
+        FaultEvent(2, "fail", 1),
+        FaultEvent(6, "join", 1),
+        FaultEvent(3, "slow", 2, duration=4, factor=3.0),
+        FaultEvent(1, "transient", count=2),
+        FaultEvent(5, "transient", count=1),
+    ])
+    assert [plan.alive(1, s) for s in (0, 2, 5, 6)] == \
+        [True, False, False, True]
+    assert plan.slow_factor(2, 2) == 1.0
+    assert plan.slow_factor(2, 3) == 3.0
+    assert plan.slow_factor(2, 6) == 3.0    # last slow step: 3 + 4 - 1
+    assert plan.slow_factor(2, 7) == 1.0
+    assert [plan.transients_through(s) for s in (0, 1, 5)] == [0, 2, 3]
+    assert plan.n_node_failures == 1
+    assert plan.horizon == 7                # slow window outlives the join
+
+
+def test_fault_plan_rejects_bad_events():
+    with pytest.raises(ValueError):
+        FaultEvent(0, "explode")
+    with pytest.raises(ValueError):
+        FaultEvent(-1, "fail", 0)
+
+
+def test_seeded_plan_is_deterministic_and_spares_node_zero():
+    p1 = FaultPlan.seeded(7, n_nodes=4, horizon=40)
+    p2 = FaultPlan.seeded(7, n_nodes=4, horizon=40)
+    assert p1.events == p2.events
+    assert p1.events != FaultPlan.seeded(8, n_nodes=4, horizon=40).events
+    assert p1.n_node_failures == 2
+    fails = [e for e in p1.events if e.kind == "fail"]
+    slows = [e for e in p1.events if e.kind == "slow"]
+    assert all(e.node >= 1 for e in fails + slows), "node 0 never fails"
+    for f in fails:                     # every failure re-joins later
+        assert any(j.kind == "join" and j.node == f.node and j.step > f.step
+                   for j in p1.events)
+    with pytest.raises(ValueError):
+        FaultPlan.seeded(0, n_nodes=1, horizon=40)
+
+
+# -- FaultPlane: the watchdog against a fake engine ---------------------
+
+
+class _FakeEngine:
+    """Just enough engine for the watchdog: a step clock and recorded
+    fail/join transitions."""
+
+    def __init__(self):
+        class _S:
+            step_idx = 0
+        self.sched = _S()
+        self.failed = []
+        self.joined = []
+
+    def fail_node(self, node):
+        self.failed.append((self.sched.step_idx, node))
+
+    def join_node(self, node):
+        self.joined.append((self.sched.step_idx, node))
+
+
+def _drive(plane, eng, steps):
+    for s in range(steps):
+        eng.sched.step_idx = s
+        plane.on_step(eng)
+
+
+def test_watchdog_detects_failure_after_missed_heartbeats():
+    plan = FaultPlan([FaultEvent(2, "fail", 1), FaultEvent(8, "join", 1)])
+    eng = _FakeEngine()
+    _drive(FaultPlane(plan, n_nodes=3), eng, 16)
+    assert [n for _, n in eng.failed] == [1]
+    assert [n for _, n in eng.joined] == [1]
+    det_step = eng.failed[0][0]
+    # honest detection: the kill lands at step 2 but the monitor needs
+    # heartbeat_steps (2.0) of silence past the last beat at step 1, so
+    # the earliest possible verdict is step 4 — never the kill step
+    assert det_step >= 2 + 2
+    assert eng.joined[0][0] >= 8
+
+
+def test_watchdog_evicts_straggler_then_rejoins():
+    plan = FaultPlan([FaultEvent(1, "slow", 2, duration=6, factor=4.0)])
+    eng = _FakeEngine()
+    plane = FaultPlane(plan, n_nodes=3)
+    _drive(plane, eng, 14)
+    assert [n for _, n in eng.failed] == [2]
+    det_step = eng.failed[0][0]
+    assert det_step >= 2, "patience 2 needs two over-ratio observations"
+    # once the slow window ends the (still-heartbeating) node re-joins
+    assert [n for _, n in eng.joined] == [2]
+    assert eng.joined[0][0] >= 1 + 6
+    assert not plane.down
+    assert plane.summary()["planned_failures"] == 0
+
+
+def test_watchdog_transient_gate_honours_budget_and_epoch():
+    plan = FaultPlan([FaultEvent(3, "transient", count=2)])
+    plane = FaultPlane(plan, n_nodes=2, epoch=100)
+    req = Request("q0", prompt_len=4, gen=2)
+    assert not plane.transient_gate(req, 102)   # before the event
+    assert plane.transient_gate(req, 103)       # epoch-relative step 3
+    assert plane.transient_gate(req, 103)
+    assert not plane.transient_gate(req, 120)   # budget exhausted
+    assert plane.summary()["transients_used"] == 2
+
+
+# -- engine: manual mid-stream fail/join stays bit-exact ----------------
+
+
+def test_engine_manual_fail_join_matches_dense_oracle():
+    from conftest import dense_oracle, get_tiny_model, make_engine, \
+        seeded_prompts
+    cfg, params = get_tiny_model()
+    prompts = seeded_prompts(cfg, 4, 12, seed=11)
+    gens = [8, 6, 7, 5]
+    max_len = max(p.shape[0] + g for p, g in zip(prompts, gens))
+    dense = dense_oracle(cfg, params, prompts, gens, max_len)
+    eng = make_engine(cfg, params, max_batch=4, page_size=4, n_pages=31,
+                      max_len=max_len, n_nodes=3)
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        eng.submit(np.asarray(p), g, rid=f"r{i}")
+    for _ in range(4):
+        eng.step()
+    quar = eng.fail_node(1)
+    assert quar and eng.alloc.check_conservation()
+    assert eng.metrics()["requests_recovered"] >= 1
+    eng.step()                          # degraded step: conservation holds
+    assert eng.alloc.check_conservation()
+    rejoined = eng.join_node(1)
+    assert rejoined > 0
+    eng.run()
+    toks = {r.rid: list(r.tokens) for r in eng.sched.finished}
+    assert toks == dense                # recovery is exact greedy recompute
+    m = eng.metrics()
+    assert m["node_failures"] == 1 and m["node_joins"] == 1
+    assert m["pages_quarantined"] == len(quar)
+    assert m["pages_quarantined_now"] == 0
+    assert m["tokens_recomputed"] >= 1
+    assert m["quarantined_served"] == 0
+    assert m["recovery_steps_p99"] >= 0.0
+    assert eng.sched.conserved(eng._n_submitted)
+    assert eng.alloc.pages_in_use == 0

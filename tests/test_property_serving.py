@@ -9,7 +9,12 @@ every op the invariants the serving stack leans on:
   free list holds no duplicates (``check_conservation``);
 * no double free — releasing an unallocated page always raises;
 * null-page invariance — page 0 is never allocated, held, shared or
-  refcounted, no matter the op sequence.
+  refcounted, no matter the op sequence;
+* fault-plane extension — op sequences that interleave ``fail_node`` /
+  ``restore_node`` keep the three-way conservation partition (free /
+  allocated / quarantined-parked), never re-allocate or share a
+  quarantined page while its node is down, and drain back to a whole
+  pool once every node restores.
 
 Plus scheduler conservation under randomized arrival traces (both the
 monolithic FIFO machine and the chunked EDF machine with chunk-step
@@ -103,6 +108,83 @@ def test_allocator_random_ops_never_double_free(ops):
     with pytest.raises(ValueError):
         a.share(NULL_PAGE)
     _check_invariants(a)
+
+
+# the fault-aware op space adds fail_node (7) and restore_node (8)
+FAULT_OPS = st.lists(st.tuples(st.integers(0, 8), st.integers(0, 3),
+                               st.integers(0, 9)), max_size=60)
+
+
+def _check_fault_invariants(a: PageAllocator):
+    """The quarantine-extended partition: free + allocated +
+    quarantined-parked == n_pages - 1, with no page on two sides."""
+    assert a.check_conservation()
+    assert NULL_PAGE not in a.refcount
+    assert NULL_PAGE not in a.quarantined
+    free = [p for f in a._free_by_node for p in f]
+    assert not (set(free) & a.quarantined)
+    for node in a.failed_nodes:
+        assert not a._free_by_node[node], \
+            "a failed node's free list must be empty"
+    parked = len(a.quarantined - set(a.refcount))
+    assert a.free_pages + a.pages_in_use + parked == a.n_pages - 1
+
+
+def _apply_faulty(a: PageAllocator, shared_refs, op):
+    """The fault-aware interpreter: base ops plus node fail/restore.
+    ``share`` only targets non-quarantined pages (sharing a quarantined
+    page is *asserted* to raise separately)."""
+    code, r, n = op
+    if code == 7:
+        a.fail_node(n % a.n_nodes)
+    elif code == 8:
+        a.restore_node(n % a.n_nodes)
+    elif code == 3:
+        held = a.held.get(f"r{r}")
+        if held:
+            page = held[n % len(held)]
+            if page not in a.quarantined:
+                a.share(page)
+                shared_refs.append(page)
+    else:
+        _apply(a, shared_refs, op)
+
+
+@settings(max_examples=60, deadline=None)
+@given(FAULT_OPS)
+def test_allocator_fault_ops_conserve_and_quarantine(ops):
+    """Random interleavings of alloc/share/release/grow/truncate with
+    node failures and re-joins: the extended conservation partition
+    holds after EVERY op, a quarantined page is never re-allocated or
+    shared while its node is down, and once every node restores and
+    every reference drains the pool comes back whole."""
+    a = PageAllocator(n_pages=17, page_size=4, n_nodes=3)
+    shared_refs = []
+    for op in ops:
+        _apply_faulty(a, shared_refs, op)
+        _check_fault_invariants(a)
+        if a.quarantined:
+            # never re-served: a quarantined page cannot gain readers
+            with pytest.raises(ValueError):
+                a.share(next(iter(a.quarantined)))
+        # and never re-allocated: a fresh allocation only sees healthy
+        # stripes
+        probe = a.alloc("probe", 2)
+        if probe is not None:
+            assert not (set(probe) & a.quarantined)
+            a.free("probe")
+        _check_fault_invariants(a)
+    # drain: restore every node, release every reference — the pool
+    # must come back whole (no page leaked into quarantine limbo)
+    for node in range(a.n_nodes):
+        a.restore_node(node)
+    assert not a.quarantined and not a.failed_nodes
+    for page in shared_refs:
+        a.release_page(page)
+    for rid in list(a.held):
+        a.free(rid)
+    _check_invariants(a)
+    assert a.pages_in_use == 0 and a.free_pages == a.n_pages - 1
 
 
 @settings(max_examples=40, deadline=None)

@@ -95,6 +95,46 @@ def test_straggler_detector():
     assert sd.observe({"a": 1.0, "b": 1.0, "c": 1.0, "d": 2.0}) == set()
 
 
+def test_straggler_detector_needs_a_cohort():
+    """Degenerate observations (all nodes failed or held out) evict
+    nobody — there is no fleet median to straggle against — and a
+    single-node cohort can never exceed its own median."""
+    sd = health.StragglerDetector(["a", "b"], ratio=1.5, patience=1)
+    assert sd.observe({}) == set()
+    assert sd.observe({"a": 99.0}) == set()      # median == own duration
+    assert sd.observe({}) == set()               # still safe mid-history
+    assert sd.summary() == {"a": 99.0}
+
+
+def test_heartbeat_rejoin_races_timeout():
+    """A beat that lands exactly as the timeout would fire wins: beating
+    discards the node from the failed set (elastic re-join) and resets
+    its clock, so the next check reports nothing."""
+    hb = health.HeartbeatMonitor(["a", "b"], timeout_s=2.0)
+    t0 = time.time()
+    hb.beat("a", t0)
+    hb.beat("b", t0)
+    assert hb.check(t0 + 3) == {"a", "b"}        # both dark
+    hb.beat("a", t0 + 3)                         # a returns at the verdict
+    assert hb.failed == {"b"}
+    assert hb.check(t0 + 4) == set()             # no re-report of b
+    assert hb.healthy() == ["a"]
+    hb.beat("b", t0 + 5)
+    assert hb.failed == set()
+
+
+def test_heartbeat_all_nodes_failed():
+    hb = health.HeartbeatMonitor(["a", "b", "c"], timeout_s=1.0)
+    t0 = time.time()
+    for n in ("a", "b", "c"):
+        hb.beat(n, t0)
+    assert hb.check(t0 + 5) == {"a", "b", "c"}
+    assert hb.healthy() == []
+    # the watchdog's straggler pass sees an empty cohort: no eviction
+    sd = health.StragglerDetector(["a", "b", "c"], patience=1)
+    assert sd.observe({}) == set()
+
+
 def test_recovery_policy():
     rp = health.RecoveryPolicy(data_axis=16, model_axis=16, spares=2)
     assert rp.plan(0)["action"] == "none"

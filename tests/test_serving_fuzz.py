@@ -16,6 +16,14 @@ suffixes and speculative restarts is exactly where partial-block-row
 bugs would hide.  The oracle and each configuration's output are
 memoized per run so the 32-point cube costs one engine replay each, all
 sharing one compiled step set (conftest / engine._jitted_steps).
+
+The chaos axis (``test_chaos_cube_survivors_match_dense_oracle``)
+replays the same trace under a pinned fault schedule — two node
+failures with re-joins, a straggler window, transient admission
+rejections — across the 16-point {prefix-cache} x {fused} x {spec} x
+{chunked} cube on a 3-node striped pool: every request must still
+emit oracle-identical tokens (fault recovery is exact greedy
+recompute) with zero quarantined-page reads.
 """
 import numpy as np
 import pytest
@@ -47,10 +55,12 @@ def _trace():
     return prompts, gens, arrivals
 
 
-def _replay(prefix_cache, fused, spec, adaptive=False, chunked=False):
+def _replay(prefix_cache, fused, spec, adaptive=False, chunked=False,
+            n_nodes=1, fault_plan=None):
     """Drive the engine like the trace benchmark: submissions land when
     the scheduler clock reaches their arrival step, windows never decode
-    past the next arrival."""
+    past the next arrival.  ``fault_plan`` arms the deterministic fault
+    plane over an ``n_nodes``-striped pool (the chaos axis)."""
     cfg, params = get_tiny_model()
     prompts, gens, arrivals = _trace()
     max_len = max(p.shape[0] + g for p, g in zip(prompts, gens))
@@ -58,7 +68,9 @@ def _replay(prefix_cache, fused, spec, adaptive=False, chunked=False):
                       n_pages=N_PAGES, max_len=max_len, fused=fused,
                       prefix_cache=prefix_cache, spec_decode=spec,
                       spec_k="auto" if adaptive else 4, max_window=4,
-                      chunked_prefill=chunked)
+                      chunked_prefill=chunked, n_nodes=n_nodes)
+    if fault_plan is not None:
+        eng.install_faults(fault_plan)
     pending = sorted(zip(arrivals, range(len(prompts))))
     while pending or eng.sched.waiting or eng.sched.prefilling \
             or eng.sched.running:
@@ -111,6 +123,51 @@ def test_flag_cube_matches_dense_oracle(prefix_cache, fused, spec,
     else:
         # chunked counters must not exist on the monolithic scheduler
         assert not eng.sched.chunked and "chunk_tasks" not in m
+
+
+CHAOS_CUBE = [(pc, fz, sp, ck)
+              for pc in (False, True) for fz in (False, True)
+              for sp in (False, True) for ck in (False, True)]
+
+
+def _chaos_plan():
+    """Pinned fault schedule for the chaos axis: a transient-rejection
+    burst, a straggler window, and two node failures with re-joins —
+    all on the step clock, so each cube point replays identically."""
+    from repro.serving import FaultEvent, FaultPlan
+    return FaultPlan([
+        FaultEvent(2, "transient", count=2),
+        FaultEvent(3, "slow", 2, duration=4, factor=4.0),
+        FaultEvent(4, "fail", 1),
+        FaultEvent(10, "join", 1),
+        FaultEvent(14, "fail", 2),
+        FaultEvent(20, "join", 2),
+    ])
+
+
+@pytest.mark.parametrize("prefix_cache,fused,spec,chunked", CHAOS_CUBE)
+def test_chaos_cube_survivors_match_dense_oracle(prefix_cache, fused,
+                                                 spec, chunked):
+    """The fault-injection axis over the feature cube: the same seeded
+    chaos schedule (two node failures + a straggler + transient
+    admission rejections) against every {prefix-cache} x {fused} x
+    {spec} x {chunked} composition, on a 3-node striped pool sized so
+    nothing sheds.  Every request must finish with tokens bit-identical
+    to the dense oracle — recovery is exact greedy recompute through
+    whatever machinery the config composes (COW re-acquire, chunk
+    restart, draft rollback) — and no dispatch may ever touch a
+    quarantined page."""
+    eng, toks = _replay(prefix_cache, fused, spec, False, chunked,
+                        n_nodes=3, fault_plan=_chaos_plan())
+    oracle = _oracle()
+    assert toks.keys() == oracle.keys(), "a request was shed or lost"
+    assert toks == oracle, (prefix_cache, fused, spec, chunked)
+    m = eng.metrics()
+    assert m["node_failures"] >= 2, "the watchdog missed a failure"
+    assert m["requests_recovered"] >= 1, "no live request was hit"
+    assert m["quarantined_served"] == 0
+    assert m["transient_rejections"] >= 1
+    assert eng.sched.conserved(eng._n_submitted)
 
 
 def test_adaptive_spec_preemption_and_rollback_stay_exact():
