@@ -12,7 +12,10 @@ trace: dispatches per token, accept rate, token identity) and
 trace: per-SLO-class TTFT percentiles, goodput, token identity) and
 ``BENCH_chaos.json`` (fault-free vs seeded-chaos on the
 fault-injection trace: survivor token identity, goodput retained,
-recovery percentiles) into ``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
+recovery percentiles) and ``BENCH_obs.json`` (flight recorder off vs
+on on the overload trace: token identity, tracing overhead ratio, the
+predicted-vs-measured model-error rollup, a schema-validated trace
+excerpt) into ``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
 unknown pattern is an error listing the valid titles) — the CI
 perf-smoke job runs ``--only micro --json`` and validates the files
 with ``scripts/check_bench.py``.
@@ -123,6 +126,10 @@ def main() -> None:
                        f"requests_recovered="
                        f"{d['chaos']['requests_recovered']}, "
                        f"goodput_retained={d['goodput_retained']:.2f}"),
+            ("BENCH_obs.json", st.bench_obs_comparison,
+             lambda d: f"tokens_match={d['tokens_match']}, "
+                       f"overhead_ratio={d['overhead_ratio']:.3f}, "
+                       f"spans={d['on']['spans_recorded']}"),
         ]
         for fname, bench_fn, summarize in comparisons:
             try:

@@ -39,6 +39,14 @@ goodput (tokens from deadline-met requests), token identity, and the
 gated ``p99_ttft_ratio`` / ``goodput_ratio`` verdicts
 (scripts/check_bench.py::check_slo).
 
+``--trace-out`` arms the step-clock flight recorder
+(docs/OBSERVABILITY.md) on any replay and exports Chrome trace-event
+JSON; ``bench_obs_comparison`` replays the overload trace with tracing
+off vs on into BENCH_obs.json (token bit-identity, the gated
+``overhead_ratio`` <= 1.05x, the per-phase predicted-vs-measured
+model-error rollup, and an embedded schema-validated trace excerpt),
+gated by ``scripts/check_bench.py::check_obs``.
+
 ``--trace chaos`` is the fault-injection harness
 (docs/FAULT_TOLERANCE.md): interactive + batch tenants whose requests
 stripe across every node of the paged pool, driven under a seeded
@@ -70,6 +78,9 @@ from typing import List, Optional, Union
 import numpy as np
 
 sys.path.insert(0, "src")
+
+from repro.serving.telemetry import (HistogramDigest,  # noqa: E402
+                                     rollup_dispatch_events)
 
 # Pareto-drawn prompt lengths are quantized to this grid so the
 # monolithic prefill path (which retraces per prompt length) compiles a
@@ -304,7 +315,8 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
            max_window: int = 8, warmup: bool = False, params=None,
            prefix_cache: bool = False, spec_decode: bool = False,
            spec_k="auto", chunk_prefill: bool = False,
-           chunk_tokens: int = 0, n_nodes: int = 1, fault_plan=None):
+           chunk_tokens: int = 0, n_nodes: int = 1, fault_plan=None,
+           trace: bool = False, trace_capacity: int = 4096):
     """Drive the engine window by window, injecting arrivals between
     dispatches.  With ``fused`` the engine decodes multi-token windows,
     capped to the next pending arrival so the trace's admission clock
@@ -320,6 +332,13 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
     reset, so plan step 0 is the first measured step and warmup never
     consumes fault events; ``n_nodes`` stripes the page pool so a node
     failure quarantines a real fraction of it.
+
+    ``trace`` arms the step-clock flight recorder (docs/OBSERVABILITY
+    .md): request-lifecycle + dispatch spans with predicted-vs-measured
+    attribution, exportable via ``eng.tracer.write_chrome``.  Tracing
+    never changes scheduling (the engine's clock is the step index, not
+    the wall), so traced and untraced replays emit identical tokens —
+    ``bench_obs_comparison`` gates exactly that.
 
     Returns (engine, per-tenant rows, totals).
     """
@@ -360,7 +379,8 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
                       max_window=max_window, prefix_cache=prefix_cache,
                       spec_decode=spec_decode, spec_k=spec_k,
                       chunked_prefill=chunk_prefill,
-                      chunk_tokens=chunk_tokens, n_nodes=n_nodes)
+                      chunk_tokens=chunk_tokens, n_nodes=n_nodes,
+                      trace=trace, trace_capacity=trace_capacity)
     if warmup:
         # compile every window bucket + a prefill per DISTINCT
         # materialized prompt length (prefill retraces per length;
@@ -412,14 +432,15 @@ def replay(tenants: Union[str, List[Tenant], None] = None, *,
     rows = []
     for t in tenants:
         fin = [r for r in eng.sched.finished if r.tenant == t.name]
-        ttft = [r.first_token_step - r.arrived_step for r in fin]
+        ttft = HistogramDigest.of(r.first_token_step - r.arrived_step
+                                  for r in fin)
         met = [r for r in fin if r.first_token_step <= r.deadline_step]
         rows.append(dict(
             tenant=t.name, slo=t.slo, requests=len(fin),
             tokens=sum(len(r.tokens) for r in fin),
-            ttft_mean=float(np.mean(ttft)) if ttft else 0.0,
-            ttft_p95=float(np.percentile(ttft, 95)) if ttft else 0.0,
-            ttft_p99=float(np.percentile(ttft, 99)) if ttft else 0.0,
+            ttft_mean=ttft.mean,
+            ttft_p95=ttft.percentile(95),
+            ttft_p99=ttft.percentile(99),
             slo_met_frac=len(met) / max(len(fin), 1),
             preemptions=sum(r.preemptions for r in fin)))
     m = eng.metrics()
@@ -482,6 +503,11 @@ def slo_stats(eng) -> dict:
     whose first token landed by their class deadline — the "useful work"
     number an overloaded fleet optimizes, as opposed to raw throughput
     that happily burns pages on requests nobody is waiting for any more.
+
+    Percentiles come from the shared streaming
+    :class:`repro.serving.telemetry.HistogramDigest` — in its exact
+    regime (every trace this repo ships) bit-equal to the
+    ``np.percentile`` calls it replaced, and bounded-memory beyond.
     """
     from repro.serving.slo import get_slo
 
@@ -491,25 +517,25 @@ def slo_stats(eng) -> dict:
     digest = {}
     for name, reqs in sorted(out.items()):
         slo = get_slo(name)
-        ttft = np.array([r.first_token_step - r.arrived_step
-                         for r in reqs], float)
-        wall = np.array([(r.first_token_wall or 0.0)
-                         - (r.arrived_wall or 0.0) for r in reqs], float)
-        tpot = np.array([((r.finished_wall or 0.0)
-                          - (r.first_token_wall or 0.0))
-                         / max(len(r.tokens) - 1, 1) for r in reqs],
-                        float)
+        ttft = HistogramDigest.of(r.first_token_step - r.arrived_step
+                                  for r in reqs)
+        wall = HistogramDigest.of((r.first_token_wall or 0.0)
+                                  - (r.arrived_wall or 0.0) for r in reqs)
+        tpot = HistogramDigest.of(((r.finished_wall or 0.0)
+                                   - (r.first_token_wall or 0.0))
+                                  / max(len(r.tokens) - 1, 1)
+                                  for r in reqs)
         met = [r for r in reqs
                if r.first_token_step <= r.deadline_step]
         digest[name] = dict(
             requests=len(reqs),
             ttft_target_steps=slo.ttft_steps,
-            ttft_steps_p50=float(np.percentile(ttft, 50)),
-            ttft_steps_p95=float(np.percentile(ttft, 95)),
-            ttft_steps_p99=float(np.percentile(ttft, 99)),
-            ttft_wall_p50_s=float(np.percentile(wall, 50)),
-            ttft_wall_p99_s=float(np.percentile(wall, 99)),
-            tpot_wall_mean_s=float(np.mean(tpot)),
+            ttft_steps_p50=ttft.percentile(50),
+            ttft_steps_p95=ttft.percentile(95),
+            ttft_steps_p99=ttft.percentile(99),
+            ttft_wall_p50_s=wall.percentile(50),
+            ttft_wall_p99_s=wall.percentile(99),
+            tpot_wall_mean_s=tpot.mean,
             slo_met_frac=len(met) / max(len(reqs), 1),
             goodput_tokens=sum(len(r.tokens) for r in met),
             tokens=sum(len(r.tokens) for r in reqs))
@@ -671,6 +697,80 @@ def bench_chaos_comparison(*, quick: bool = True, seed: int = 0,
         "tokens_match": bool(survivors_match),
         "survivors": len(chaos_toks),
         "goodput_retained": chaos_good / max(base_good, 1),
+    }
+
+
+def bench_obs_comparison(*, quick: bool = True, seed: int = 0,
+                         max_batch: int = 4, page_size: int = 8,
+                         max_window: int = 8, repeats: int = 3,
+                         arch: str = "tiny-100m"):
+    """Replay the overload trace with the flight recorder off vs on —
+    shared params, warmed-up compiles — and price what observability
+    costs.
+
+    Scheduling runs on the deterministic step clock and the tracer only
+    *reads* it, so the traced replay must emit per-request tokens
+    bit-identical to the untraced one (``tokens_match``); the wall-clock
+    ``overhead_ratio`` (min-of-``repeats`` traced wall / min untraced
+    wall, alternated to decorrelate host drift) is gated at
+    ``PERF_SMOKE_MAX_OBS_OVERHEAD`` (default 1.05 — a flight recorder
+    that taxes serving >5% would never stay armed in production).
+
+    The payload embeds the traced run's model-error rollup (per-phase
+    cost-engine predicted vs measured wall) and a truncated copy of the
+    Chrome trace events, which ``scripts/check_bench.py::check_obs``
+    validates against the trace-event schema — the same document
+    ``--trace-out`` ships to Perfetto.
+
+    Returns the BENCH_obs.json payload.
+    """
+    import jax
+    from repro.configs import get_tiny_config
+    from repro.models import lm
+
+    tenants = overload_tenants(quick)
+    cfg = get_tiny_config(arch)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    common = dict(seed=seed, max_batch=max_batch, page_size=page_size,
+                  max_window=max_window, warmup=True, params=params,
+                  arch=arch)
+
+    walls = {"off": [], "on": []}
+    stats, toks, traced_eng = {}, {}, None
+    for rep in range(repeats):
+        for mode in ("off", "on"):
+            eng, rows, totals = replay(tenants, trace=mode == "on",
+                                       **common)
+            walls[mode].append(totals["wall_s"])
+            t = {r.rid: list(r.tokens) for r in eng.sched.finished}
+            assert toks.setdefault(mode, t) == t, \
+                f"{mode} replay is not deterministic across repeats"
+            stats[mode] = dict(tokens=totals["tokens"],
+                               steps=totals["steps"],
+                               tok_per_s=totals["tok_per_s"],
+                               wall_s=min(walls[mode]))
+            if mode == "on":
+                traced_eng = eng
+
+    tracer = traced_eng.tracer
+    tracer.finalize(traced_eng.sched.step_idx)
+    report = tracer.model_error_report()
+    stats["on"].update(spans_recorded=tracer.recorded,
+                       spans_dropped=tracer.dropped)
+    doc = tracer.chrome_trace()
+    events = doc["traceEvents"]
+    keep = 600                     # enough for schema validation without
+    return {                       # bloating the committed artifact
+        "schema": "swallow.bench.obs/v1",
+        "arch": arch, "batch": max_batch, "page_size": page_size,
+        "max_window": max_window, "trace": "overload",
+        "quick": quick, "seed": seed, "repeats": repeats,
+        "off": stats["off"], "on": stats["on"],
+        "tokens_match": toks["off"] == toks["on"],
+        "overhead_ratio": min(walls["on"]) / max(min(walls["off"]), 1e-9),
+        "model_error": report,
+        "trace_events_total": len(events),
+        "trace_events": events[:keep],
     }
 
 
@@ -944,13 +1044,26 @@ def format_table(rows, totals) -> str:
 def fleet_view(eng) -> str:
     """Per-tenant gauges through the nOS serving surface.  The
     speculative-decoding gauges are engine-wide (acceptance is not
-    tracked per tenant), so every tenant row shows the same pair."""
+    tracked per tenant), so every tenant row shows the same pair.  When
+    the flight recorder is armed, each tenant's share of the
+    predicted-vs-measured attribution rides along (split by token
+    share — dispatches are batched across tenants, so per-tenant wall
+    is an apportionment, not a measurement) and the nOS attribution
+    table is appended."""
     from repro.core import nos as nos_mod
     from repro.serving.slo import get_slo
     pod = nos_mod.NOS(data_rows=4, model_cols=1)
     est = eng.decode_estimate      # engine-priced step time & energy
     j_per_token = est.energy.total_j / max(eng.max_batch, 1)
     m = eng.metrics()
+    report = None
+    pred_s = meas_s = pred_j = 0.0
+    if eng.tracer is not None:
+        report = eng.tracer.model_error_report()
+        pred_s = sum(r["predicted_s"] for r in report.values())
+        meas_s = sum(r["measured_s"] for r in report.values())
+        pred_j = sum(r["predicted_j"] for r in report.values())
+    all_tokens = sum(len(r.tokens) for r in eng.sched.finished)
     tenants = sorted({r.tenant for r in eng.sched.finished})
     for name in tenants:
         fin = [r for r in eng.sched.finished if r.tenant == name]
@@ -983,8 +1096,16 @@ def fleet_view(eng) -> str:
             pages_quarantined=m.get("pages_quarantined"),
             requests_recovered=m.get("requests_recovered"),
             tokens_recomputed=m.get("tokens_recomputed"),
-            recovery_steps_p99=m.get("recovery_steps_p99"))
-    return pod.serving_table()
+            recovery_steps_p99=m.get("recovery_steps_p99"),
+            **({"predicted_s": pred_s * tokens / max(all_tokens, 1),
+                "measured_s": meas_s * tokens / max(all_tokens, 1),
+                "predicted_j": pred_j * tokens / max(all_tokens, 1)}
+               if report else {}))
+    table = pod.serving_table()
+    if report:
+        table += ("\n[nOS] predicted-vs-measured attribution:\n"
+                  + pod.attribution_table())
+    return table
 
 
 def main():
@@ -1037,6 +1158,13 @@ def main():
                     help="seed for the chaos FaultPlan")
     ap.add_argument("--fault-horizon", type=int, default=48,
                     help="steps the chaos schedule spans")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="arm the flight recorder and export the replay "
+                         "as Chrome trace-event JSON "
+                         "(docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", default=None,
+                    metavar="METRICS.json",
+                    help="dump the unified metrics registry snapshot")
     args = ap.parse_args()
     spec_k = args.spec_k if args.spec_k == "auto" else int(args.spec_k)
     fault_plan = None
@@ -1058,8 +1186,28 @@ def main():
                                spec_k=spec_k,
                                chunk_prefill=args.chunk_prefill == "on",
                                chunk_tokens=args.chunk_tokens,
-                               n_nodes=args.nodes, fault_plan=fault_plan)
+                               n_nodes=args.nodes, fault_plan=fault_plan,
+                               trace=bool(args.trace_out))
     print(format_table(rows, totals))
+    if eng.tracer is not None:
+        from repro.serving.telemetry import format_model_error
+        eng.tracer.finalize(eng.sched.step_idx)
+        report = eng.tracer.model_error_report()
+        if report:
+            print("per-phase model error (cost-engine predicted vs "
+                  "measured wall):")
+            print(format_model_error(report))
+        if args.trace_out:
+            eng.tracer.write_chrome(args.trace_out)
+            print(f"[trace] wrote {args.trace_out} "
+                  f"({eng.tracer.recorded} spans recorded, "
+                  f"{eng.tracer.dropped} evicted)")
+    if args.metrics_out:
+        import json
+        with open(args.metrics_out, "w") as f:
+            json.dump(eng.registry.snapshot(), f, indent=2,
+                      sort_keys=True)
+        print(f"[metrics] wrote {args.metrics_out}")
     if args.trace == "overload":
         for cls, d in slo_stats(eng).items():
             print(f"slo[{cls}]: p50/p95/p99 ttft "

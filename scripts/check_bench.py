@@ -57,11 +57,25 @@ that ``benchmarks/run.py --json`` emits.
   (default 0.25 — degradation must be graceful; the whole chain is on
   the deterministic step clock, so the value is host-independent).
 
+* ``BENCH_obs.json`` (swallow.bench.obs/v1): flight-recorder off vs on
+  stat blocks on the overload trace.  ``tokens_match`` must be true
+  (the tracer only *reads* the deterministic step clock — observing a
+  run must never change it), ``overhead_ratio`` (min traced wall / min
+  untraced wall) must stay under ``PERF_SMOKE_MAX_OBS_OVERHEAD``
+  (default 1.05 — a flight recorder that taxes serving >5% would never
+  stay armed in production), the embedded ``trace_events`` excerpt
+  must validate against the Chrome trace-event schema
+  (``repro.serving.telemetry.validate_chrome_trace`` — the same
+  document ``--trace-out`` ships to Perfetto), at least one dispatch
+  span must carry the full attribution triple
+  (predicted_s/predicted_j/measured_s), and the ``model_error`` rollup
+  must be finite.
+
 Run from the repo root:
     python benchmarks/run.py --only micro --json
     python scripts/check_bench.py BENCH_micro.json BENCH_serve.json \
         BENCH_prefix.json BENCH_spec.json BENCH_slo.json \
-        BENCH_chaos.json
+        BENCH_chaos.json BENCH_obs.json
 """
 from __future__ import annotations
 
@@ -69,6 +83,10 @@ import json
 import math
 import os
 import sys
+
+# telemetry is pure host-side (stdlib + numpy) — importable without jax
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
 
 REQUIRED_SERVE_KEYS = ("tokens", "steps", "windows", "decode_tok_per_s",
                        "tok_per_s", "h2d_syncs", "d2h_syncs",
@@ -340,10 +358,72 @@ def check_chaos(doc: dict) -> list:
     return errs
 
 
+REQUIRED_OBS_KEYS = ("tokens", "steps", "tok_per_s", "wall_s")
+
+
+def check_obs(doc: dict) -> list:
+    from repro.serving.telemetry import validate_chrome_trace
+
+    errs = []
+    if doc.get("schema") != "swallow.bench.obs/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    for mode in ("off", "on"):
+        blk = doc.get(mode)
+        if not isinstance(blk, dict):
+            errs.append(f"missing {mode} block")
+            continue
+        for key in REQUIRED_OBS_KEYS:
+            if not _finite_pos(blk.get(key)):
+                errs.append(f"{mode}.{key}: non-finite {blk.get(key)!r}")
+    if doc.get("tokens_match") is not True:
+        errs.append("tokens_match is not true: arming the flight "
+                    "recorder changed the emitted tokens")
+    events = doc.get("trace_events")
+    if not isinstance(events, list) or not events:
+        errs.append("trace_events: missing or empty")
+    else:
+        for e in validate_chrome_trace({"traceEvents": events}):
+            errs.append(f"trace_events: {e}")
+        dispatch = [e for e in events
+                    if e.get("ph") == "X" and e.get("cat") == "dispatch"]
+        if not dispatch:
+            errs.append("trace_events: no dispatch spans in the excerpt")
+        elif not any({"predicted_s", "predicted_j", "measured_s"}
+                     <= set(e.get("args", {})) for e in dispatch):
+            errs.append("trace_events: no dispatch span carries the "
+                        "predicted_s/predicted_j/measured_s attribution "
+                        "triple")
+    report = doc.get("model_error")
+    if not isinstance(report, dict) or not report:
+        errs.append("model_error: missing or empty rollup")
+    else:
+        for phase, r in report.items():
+            for key in ("count", "predicted_s", "measured_s",
+                        "predicted_j"):
+                if not _finite_pos(r.get(key)):
+                    errs.append(f"model_error.{phase}.{key}: non-finite "
+                                f"{r.get(key)!r}")
+    if not errs:
+        if doc["on"].get("spans_recorded", 0) <= 0:
+            errs.append("on.spans_recorded is 0: the traced run "
+                        "recorded nothing")
+        max_over = float(os.environ.get("PERF_SMOKE_MAX_OBS_OVERHEAD",
+                                        "1.05"))
+        over = doc.get("overhead_ratio")
+        if not _finite_pos(over):
+            errs.append(f"overhead_ratio: non-finite {over!r}")
+        elif over > max_over:
+            errs.append(f"overhead_ratio {over:.3f} > allowed "
+                        f"{max_over}: the flight recorder taxes "
+                        "serving too much to stay armed")
+    return errs
+
+
 def main() -> None:
     paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json",
                              "BENCH_prefix.json", "BENCH_spec.json",
-                             "BENCH_slo.json", "BENCH_chaos.json"]
+                             "BENCH_slo.json", "BENCH_chaos.json",
+                             "BENCH_obs.json"]
     failures = []
     for path in paths:
         try:
@@ -363,6 +443,8 @@ def main() -> None:
             errs = check_slo(doc)
         elif "chaos" in schema or "chaos" in os.path.basename(path):
             errs = check_chaos(doc)
+        elif "obs" in schema or "obs" in os.path.basename(path):
+            errs = check_obs(doc)
         else:
             errs = check_serve(doc)
         for e in errs:

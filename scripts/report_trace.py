@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Offline trace analysis: summarize a Chrome trace-event JSON file
+exported by ``repro.launch.serve --engine paged --trace-out`` (or a
+flight-recorder dump's re-export).
+
+Prints the per-phase predicted-vs-measured model-error table, the
+request-lifecycle state census (how many spans each state contributed,
+per tenant), and the dispatch-span totals; validates the document
+against the trace-event schema first and exits non-zero if it would
+not load in Perfetto.
+
+    PYTHONPATH=src python -m repro.launch.serve --tiny --engine paged \
+        --requests 4 --gen 8 --trace-out /tmp/trace.json \
+        --metrics-out /tmp/metrics.json
+    python scripts/report_trace.py /tmp/trace.json \
+        --metrics /tmp/metrics.json
+
+Pure host-side: imports only repro.serving.telemetry (numpy + stdlib),
+so it runs without jax installed.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from collections import Counter
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.serving.telemetry import (format_model_error,  # noqa: E402
+                                     rollup_dispatch_events,
+                                     validate_chrome_trace)
+
+
+def lifecycle_census(events) -> dict:
+    """Per-tenant state counts over the request-lifecycle spans
+    (cat "request" = dwell states, cat "marker" = terminal events).
+    The tenant is the span's process lane — recovered from the
+    ``process_name`` metadata events."""
+    groups = {ev["pid"]: ev["args"]["name"] for ev in events
+              if ev.get("ph") == "M" and ev.get("name") == "process_name"}
+    census: dict = {}
+    for ev in events:
+        if ev.get("ph") != "X" or ev.get("cat") not in ("request",
+                                                        "marker"):
+            continue
+        group = groups.get(ev.get("pid"), "?")
+        tenant = group.split(":", 1)[1] if group.startswith("tenant:") \
+            else group
+        census.setdefault(tenant, Counter())[ev["name"]] += 1
+    return census
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON "
+                                  "(--trace-out output)")
+    ap.add_argument("--metrics", default=None,
+                    help="optional metrics registry snapshot "
+                         "(--metrics-out output) to summarize alongside")
+    args = ap.parse_args()
+
+    with open(args.trace) as f:
+        doc = json.load(f)
+    errs = validate_chrome_trace(doc)
+    if errs:
+        print(f"{args.trace}: INVALID trace-event JSON "
+              f"({len(errs)} error(s)):", file=sys.stderr)
+        for e in errs:
+            print(" -", e, file=sys.stderr)
+        sys.exit(1)
+    events = doc["traceEvents"]
+    n_x = sum(1 for e in events if e.get("ph") == "X")
+    n_c = sum(1 for e in events if e.get("ph") == "C")
+    print(f"{args.trace}: valid ({len(events)} events: {n_x} spans, "
+          f"{n_c} counter samples)")
+
+    report = rollup_dispatch_events(events)
+    if report:
+        total_pred = sum(r["predicted_s"] for r in report.values())
+        total_meas = sum(r["measured_s"] for r in report.values())
+        print("\nper-phase model error (cost-engine predicted vs "
+              "measured wall):")
+        print(format_model_error(report))
+        print(f"total: predicted {total_pred:.6f}s, measured "
+              f"{total_meas:.6f}s")
+    else:
+        print("\nno dispatch spans in the ring (decode-only trace or "
+              "all evicted)")
+
+    census = lifecycle_census(events)
+    if census:
+        print("\nrequest lifecycle (spans per state, per tenant):")
+        for tenant in sorted(census):
+            states = ", ".join(f"{k}={v}" for k, v
+                               in sorted(census[tenant].items()))
+            print(f"  {tenant}: {states}")
+
+    if args.metrics:
+        with open(args.metrics) as f:
+            snap = json.load(f)
+        counters = snap.get("counters", {})
+        hists = snap.get("histograms", {})
+        nonzero = {k: v for k, v in sorted(counters.items()) if v}
+        print(f"\nmetrics snapshot ({args.metrics}): "
+              f"{len(counters)} counters ({len(nonzero)} nonzero), "
+              f"{len(snap.get('gauges', {}))} gauges, "
+              f"{len(hists)} histograms")
+        for k, v in nonzero.items():
+            print(f"  {k} = {v}")
+        for name, h in sorted(hists.items()):
+            print(f"  {name}: n={h['count']} p50={h['p50']:.3g} "
+                  f"p95={h['p95']:.3g} p99={h['p99']:.3g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,15 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from repro.serving.telemetry import MetricsRegistry, gauge_attr
+
+
+def _gauge(name=None):
+    # Job's serving gauges live in its per-job MetricsRegistry (attr
+    # ``metrics``) — unannotated class attributes, so the dataclass
+    # constructor/repr surface is unchanged (scheduling fields only)
+    return gauge_attr(name, registry="metrics", default=0)
+
 
 @dataclass
 class Job:
@@ -54,29 +63,40 @@ class Job:
     max_rows: int = 0                  # tenant quota; 0 = unlimited
     estimate: Optional[object] = None  # costs.CostEstimate of chosen slice
     energy_j: float = 0.0              # accrued at finish()
+
     # -- serving extension (paged engine reports through update_serving) ----
-    pages_held: int = 0                # KV pages currently allocated
-    peak_pages: int = 0
-    tokens_out: int = 0                # tokens emitted so far
-    queue_latency_s: float = 0.0       # mean admission->first-token latency
-    preemptions: int = 0
+    # registry-backed gauges: one MetricsRegistry per job (``metrics``),
+    # same external attribute names as the old dataclass fields
+    pages_held = _gauge()              # KV pages currently allocated
+    peak_pages = _gauge()
+    tokens_out = _gauge()              # tokens emitted so far
+    queue_latency_s = _gauge()         # mean admission->first-token latency
+    preemptions = _gauge()
     # -- prefix-sharing overlay (repro.serving.prefix_cache) ----------------
-    shared_pages: int = 0              # pages owned by the radix tree
-    prefix_hit_rate: float = 0.0       # admissions served from shared pages
-    bytes_deduped: int = 0             # KV bytes NOT re-prefilled
+    shared_pages = _gauge()            # pages owned by the radix tree
+    prefix_hit_rate = _gauge()         # admissions served from shared pages
+    bytes_deduped = _gauge()           # KV bytes NOT re-prefilled
     # -- speculative decoding (repro.serving.spec_decode) --------------------
-    accept_rate: float = 0.0           # draft tokens the verifier kept
-    dispatches_per_token: float = 0.0  # sequential model passes per token
-    spec_k: float = 0.0                # mean adaptive draft depth requested
+    accept_rate = _gauge()             # draft tokens the verifier kept
+    dispatches_per_token = _gauge()    # sequential model passes per token
+    spec_k = _gauge()                  # mean adaptive draft depth requested
     # -- SLO telemetry (repro.serving.slo + the chunked scheduler) -----------
-    ttft_p99_s: float = 0.0            # tail first-token latency observed
-    ttft_target_s: float = 0.0         # the class deadline, priced to seconds
-    goodput_frac: float = 0.0          # fraction of tokens from SLO-met reqs
+    ttft_p99_s = _gauge()              # tail first-token latency observed
+    ttft_target_s = _gauge()           # the class deadline, priced to seconds
+    goodput_frac = _gauge()            # fraction of tokens from SLO-met reqs
     # -- fault plane (repro.serving.faults) ----------------------------------
-    pages_quarantined: int = 0         # pages lost to dead stripes (cumul.)
-    requests_recovered: int = 0        # fault resets recomputed exactly
-    tokens_recomputed: int = 0         # emitted tokens discarded by resets
-    recovery_steps_p99: float = 0.0    # reset -> first-token tail latency
+    pages_quarantined = _gauge()       # pages lost to dead stripes (cumul.)
+    requests_recovered = _gauge()      # fault resets recomputed exactly
+    tokens_recomputed = _gauge()       # emitted tokens discarded by resets
+    recovery_steps_p99 = _gauge()      # reset -> first-token tail latency
+    # -- predicted-vs-measured attribution (repro.serving.telemetry) ---------
+    predicted_s = _gauge()             # cost-engine seconds, dispatch spans
+    measured_s = _gauge()              # wall seconds over the same spans
+    predicted_j = _gauge()             # §VI joules over the same spans
+    model_error = None                 # per-phase rollup dict (or None)
+
+    def __post_init__(self):
+        self.metrics = MetricsRegistry()
 
 
 @dataclass
@@ -244,7 +264,11 @@ class NOS:
                        pages_quarantined: Optional[int] = None,
                        requests_recovered: Optional[int] = None,
                        tokens_recomputed: Optional[int] = None,
-                       recovery_steps_p99: Optional[float] = None):
+                       recovery_steps_p99: Optional[float] = None,
+                       predicted_s: Optional[float] = None,
+                       measured_s: Optional[float] = None,
+                       predicted_j: Optional[float] = None,
+                       model_error: Optional[dict] = None):
         """Serving-engine telemetry (§VIII: nOS owns per-application
         accounting).  The paged engine calls this per replay/step batch;
         ``energy_j`` accrues (engine-priced decode energy), ``peak_pages``
@@ -266,7 +290,13 @@ class NOS:
         ``tokens_recomputed`` / ``recovery_steps_p99``) surface the
         §VIII failure story: how much of the striped store a dead node
         took with it, how many tenants were reset and recomputed
-        exactly, and the tail latency of that recovery."""
+        exactly, and the tail latency of that recovery.  The
+        attribution gauges (``predicted_s`` / ``measured_s`` /
+        ``predicted_j``, plus the per-phase ``model_error`` rollup from
+        :func:`repro.serving.telemetry.rollup_dispatch_events`) surface
+        the §IV contract — the cost model's priced seconds and §VI
+        joules against the wall clock the dispatch spans actually
+        measured — rendered fleet-wide by :meth:`attribution_table`."""
         job = self.jobs[name]
         if pages_held is not None:
             job.pages_held = pages_held
@@ -307,6 +337,42 @@ class NOS:
             job.tokens_recomputed = tokens_recomputed
         if recovery_steps_p99 is not None:
             job.recovery_steps_p99 = recovery_steps_p99
+        if predicted_s is not None:
+            job.predicted_s = predicted_s
+        if measured_s is not None:
+            job.measured_s = measured_s
+        if predicted_j is not None:
+            job.predicted_j = predicted_j
+        if model_error is not None:
+            job.model_error = dict(model_error)
+
+    def attribution_table(self) -> str:
+        """Fleet-level predicted-vs-measured view (§IV 'measure your own
+        power', applied to the cost model itself): per job — and per
+        dispatch phase when a ``model_error`` rollup was reported — the
+        cost engine's priced seconds and §VI joules next to measured
+        wall seconds, with the measured/predicted ratio that says how
+        honest the model is."""
+        hdr = (f"{'job/phase':<24} {'count':>6} {'pred_s':>10} "
+               f"{'meas_s':>10} {'meas/pred':>9} {'pred_J':>10}")
+        rows = [hdr, "-" * len(hdr)]
+        for j in self.jobs.values():
+            if not (j.measured_s or j.model_error):
+                continue
+            ratio = (j.measured_s / j.predicted_s
+                     if j.predicted_s else float("nan"))
+            rows.append(f"{j.name:<24} {'':>6} {j.predicted_s:>10.4f} "
+                        f"{j.measured_s:>10.4f} {ratio:>9.2f} "
+                        f"{j.predicted_j:>10.3f}")
+            for phase in sorted(j.model_error or ()):
+                r = j.model_error[phase]
+                pr = (r["measured_s"] / r["predicted_s"]
+                      if r.get("predicted_s") else float("nan"))
+                rows.append(f"  {phase:<22} {int(r.get('count', 0)):>6} "
+                            f"{r.get('predicted_s', 0.0):>10.4f} "
+                            f"{r.get('measured_s', 0.0):>10.4f} "
+                            f"{pr:>9.2f} {r.get('predicted_j', 0.0):>10.3f}")
+        return "\n".join(rows)
 
     def serving_table(self) -> str:
         """Fleet view of the serving gauges (pages, tokens, TTFT, the

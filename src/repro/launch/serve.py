@@ -24,6 +24,14 @@ mesh for the decode shape and reports predicted vs measured per-token
 time.  Timing excludes the first (compile) step — a warmup prefill +
 decode runs before the clock starts, so the predicted-vs-measured ratio
 reflects steady state, not XLA compilation.
+
+``--trace-out trace.json`` arms the step-clock flight recorder on the
+paged engine and exports the run as Chrome trace-event JSON (load in
+Perfetto or chrome://tracing — docs/OBSERVABILITY.md); every dispatch
+span carries cost-engine predicted seconds and §VI energy alongside
+measured wall time, rolled up into the per-phase model-error table.
+``--metrics-out metrics.json`` dumps the unified metrics registry
+snapshot (counters, gauges, percentile digests).
 """
 import argparse
 import os
@@ -140,7 +148,9 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
                       spec_decode=args.spec_decode == "on",
                       spec_k=args.spec_k,
                       chunked_prefill=args.chunk_prefill == "on",
-                      chunk_tokens=args.chunk_tokens)
+                      chunk_tokens=args.chunk_tokens,
+                      trace=bool(getattr(args, "trace_out", None)),
+                      trace_capacity=getattr(args, "trace_capacity", 4096))
     prompts = _stream_prompts(args, cfg)
     # warmup both jitted paths (prefill + every fused-window bucket),
     # then reset clocks
@@ -193,6 +203,15 @@ def report_fleet(args, cfg, eng, tokens_out: int):
     fin = eng.sched.finished
     met_tokens = sum(len(r.tokens) for r in fin
                      if r.first_token_step <= r.deadline_step)
+    # predicted-vs-measured attribution from the flight recorder (when
+    # the run was traced): per-phase rollup feeds the fleet-level table
+    model_error = None
+    pred_s = meas_s = pred_j = 0.0
+    if eng.tracer is not None:
+        model_error = eng.tracer.model_error_report()
+        pred_s = sum(r["predicted_s"] for r in model_error.values())
+        meas_s = sum(r["measured_s"] for r in model_error.values())
+        pred_j = sum(r["predicted_j"] for r in model_error.values())
     pod.update_serving(
         "serve", pages_held=eng.alloc.pages_in_use,
         peak_pages=m["peak_pages"],
@@ -212,9 +231,14 @@ def report_fleet(args, cfg, eng, tokens_out: int):
         pages_quarantined=m.get("pages_quarantined"),
         requests_recovered=m.get("requests_recovered"),
         tokens_recomputed=m.get("tokens_recomputed"),
-        recovery_steps_p99=m.get("recovery_steps_p99"))
+        recovery_steps_p99=m.get("recovery_steps_p99"),
+        predicted_s=pred_s, measured_s=meas_s, predicted_j=pred_j,
+        model_error=model_error)
     print("[nOS] fleet serving view:")
     print(pod.serving_table())
+    if model_error:
+        print("[nOS] predicted-vs-measured attribution:")
+        print(pod.attribution_table())
 
 
 def main():
@@ -288,6 +312,18 @@ def main():
                     help="seed for the chaos fault schedule")
     ap.add_argument("--fault-horizon", type=int, default=48,
                     help="steps the chaos fault schedule spans")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="paged engine: arm the step-clock flight "
+                         "recorder and export the run as Chrome "
+                         "trace-event JSON (Perfetto-loadable; "
+                         "docs/OBSERVABILITY.md)")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.json",
+                    help="paged engine: dump the unified metrics "
+                         "registry snapshot (counters, gauges, "
+                         "percentile digests) as JSON")
+    ap.add_argument("--trace-capacity", type=int, default=4096,
+                    help="flight-recorder ring size (spans kept; "
+                         "oldest evicted first)")
     args = ap.parse_args()
     if args.spec_k != "auto":
         args.spec_k = int(args.spec_k)
@@ -381,6 +417,28 @@ def main():
                   f"{m['transient_rejections']} transient rejections; "
                   f"recovery p99 {m['recovery_steps_p99']:.1f} steps, "
                   f"{m['quarantined_served']} stale reads")
+        if eng.tracer is not None:
+            from repro.serving.telemetry import format_model_error
+            eng.tracer.finalize(eng.sched.step_idx)
+            report = eng.tracer.model_error_report()
+            if report:
+                print("[trace] per-phase model error "
+                      "(cost-engine predicted vs measured wall):")
+                print(format_model_error(report))
+            if args.trace_out:
+                eng.tracer.write_chrome(args.trace_out)
+                n = len(eng.tracer.chrome_trace()["traceEvents"])
+                print(f"[trace] wrote {n} trace events to "
+                      f"{args.trace_out} (load in Perfetto / "
+                      f"chrome://tracing; {eng.tracer.recorded} spans "
+                      f"recorded, {eng.tracer.dropped} evicted)")
+        if args.metrics_out:
+            import json
+            with open(args.metrics_out, "w") as f:
+                json.dump(eng.registry.snapshot(), f, indent=2,
+                          sort_keys=True)
+            print(f"[metrics] wrote registry snapshot to "
+                  f"{args.metrics_out}")
         report_fleet(args, cfg, eng, tokens)
         measured = m["step_s"]
     else:

@@ -19,6 +19,12 @@
   slo        — per-tenant SLO classes (TTFT deadlines on the step
                clock, tolerable-stall fractions) driving the chunked
                scheduler's EDF admission and per-window chunk budget
+  telemetry  — §IV's measurement plane: the unified MetricsRegistry
+               (counters/gauges/streaming percentile digests behind
+               every module above), the StepTracer flight recorder
+               (request-lifecycle + dispatch spans, Chrome-trace
+               export for Perfetto, post-mortem flight dumps), and
+               the predicted-vs-measured model-error rollup
   faults     — §VIII's failure model made deterministic: a seeded
                FaultPlan (node failures, transient dispatch errors,
                straggler slowdowns on the step clock) and the
@@ -42,6 +48,9 @@ from repro.serving.scheduler import (ContinuousBatchScheduler, Request,
 from repro.serving.slo import DEFAULT_SLO, SLO_CLASSES, SLOClass, get_slo
 from repro.serving.spec_decode import (AdaptiveK, NGramSpec, SpecStats,
                                        device_propose, propose_ngram)
+from repro.serving.telemetry import (HistogramDigest, MetricsRegistry,
+                                     Span, StepTracer,
+                                     validate_chrome_trace)
 
 __all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
            "PrefixCache", "PrefixMatch", "RadixNode",
@@ -49,4 +58,6 @@ __all__ = ["PagedEngine", "PageAllocator", "NULL_PAGE",
            "NGramSpec", "SpecStats", "AdaptiveK", "propose_ngram",
            "device_propose",
            "SLOClass", "SLO_CLASSES", "DEFAULT_SLO", "get_slo",
-           "FaultEvent", "FaultPlan", "FaultPlane"]
+           "FaultEvent", "FaultPlan", "FaultPlane",
+           "HistogramDigest", "MetricsRegistry", "Span", "StepTracer",
+           "validate_chrome_trace"]

@@ -77,6 +77,7 @@ recompute-preemption exact.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 import time
 from typing import Dict, List, Optional
@@ -86,6 +87,7 @@ import numpy as np
 from repro.serving.paged_kv import NULL_PAGE, PageAllocator
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 from repro.serving.spec_decode import NGramSpec, SpecStats
+from repro.serving.telemetry import MetricsRegistry, StepTracer, counter_attr
 
 
 @functools.lru_cache(maxsize=8)
@@ -128,7 +130,39 @@ class PagedEngine:
     the reserved null page.  ``fused=True`` decodes in multi-token
     windows of up to ``max_window`` steps per dispatch; ``fused=False``
     is the per-step fallback with identical tokens.
+
+    ``trace=True`` arms the :class:`~repro.serving.telemetry.StepTracer`
+    flight recorder (request-lifecycle + dispatch spans, Chrome-trace
+    export); tracing never feeds back into scheduling, so tokens are
+    bit-identical on or off.
     """
+
+    # every engine counter is one registry slot exposed as an attribute
+    # (same external names, one implementation — see serving/telemetry.py)
+    steps_run = counter_attr()
+    windows_run = counter_attr()
+    decode_steps = counter_attr()
+    decode_tokens = counter_attr()
+    tokens_emitted = counter_attr()
+    decode_time_s = counter_attr()
+    spec_time_s = counter_attr()       # draft+verify subset of decode_time_s
+    h2d_syncs = counter_attr()
+    d2h_syncs = counter_attr()
+    block_row_writes = counter_attr()
+    peak_pages = counter_attr()
+    prefill_tokens = counter_attr()    # prompt tokens actually computed
+    chunk_dispatches = counter_attr()  # chunked-prefill model dispatches
+    # sequential model executions (a fused K-scan counts K): the
+    # denominator-side of dispatches_per_token, the observable
+    # speculative decoding attacks
+    model_passes = counter_attr()
+    # fault-plane counters (repro.serving.faults)
+    node_failures = counter_attr()
+    node_joins = counter_attr()
+    pages_quarantined_total = counter_attr()
+    requests_recovered = counter_attr()
+    tokens_recomputed = counter_attr()  # emitted tokens discarded by resets
+    quarantined_served = counter_attr()  # MUST stay 0: stale-read guard hits
 
     def __init__(self, cfg, params, *, max_batch: int = 4,
                  page_size: int = 16, n_pages: int = 64,
@@ -139,13 +173,17 @@ class PagedEngine:
                  spec_k=8, spec_ngram: int = 3,
                  spec_proposer: str = "device",
                  chunked_prefill: bool = False, chunk_tokens: int = 0,
-                 fault_plan=None):
+                 fault_plan=None, trace: bool = False,
+                 trace_capacity: int = 4096):
         import jax.numpy as jnp
         from repro.models import lm, modules as nn
 
         assert lm.paged_decodable(cfg), \
             f"{cfg.name} is not paged-decodable (attention-only, causal)"
         assert spec_proposer in ("device", "host")
+        # the registry must exist before any counter_attr assignment below
+        self.registry = MetricsRegistry()
+        self.tracer = StepTracer(capacity=trace_capacity) if trace else None
         self.cfg = cfg
         self.params = params
         self.page_size = page_size
@@ -169,11 +207,11 @@ class PagedEngine:
         self._jnp = jnp
 
         self.alloc = PageAllocator(n_pages=n_pages, page_size=page_size,
-                                   n_nodes=n_nodes)
+                                   n_nodes=n_nodes, registry=self.registry)
         self.cache = None
         if prefix_cache:
             from repro.serving.prefix_cache import PrefixCache
-            self.cache = PrefixCache(self.alloc)
+            self.cache = PrefixCache(self.alloc, registry=self.registry)
             # under pool pressure, LRU-evict cold cache pages before the
             # scheduler resorts to preempting tenants
             self.alloc.reclaim = self.cache.evict
@@ -189,7 +227,8 @@ class PagedEngine:
             decode_cost_s=self.decode_estimate.step_time_s,
             prefill_budget=prefill_budget,
             prefix_cache=self.cache,
-            chunked=chunked_prefill, chunk_tokens=chunk_tokens)
+            chunked=chunked_prefill, chunk_tokens=chunk_tokens,
+            registry=self.registry, tracer=self.tracer)
 
         self.pools = lm.init_paged_caches(cfg, n_pages=n_pages,
                                           page_size=page_size)
@@ -234,30 +273,32 @@ class PagedEngine:
             if self.spec is not None else None
         self._hist_state: List[Optional[tuple]] = [None] * max_batch
         self._n_submitted = 0
+        # seed every registry counter key (descriptors write through);
+        # zeroing here keeps the snapshot schema complete from step 0
         self.steps_run = 0
         self.windows_run = 0
         self.decode_steps = 0
         self.decode_tokens = 0
         self.tokens_emitted = 0
         self.decode_time_s = 0.0
-        self.spec_time_s = 0.0     # draft+verify subset of decode_time_s
+        self.spec_time_s = 0.0
         self.h2d_syncs = 0
         self.d2h_syncs = 0
         self.block_row_writes = 0
         self.peak_pages = 0
-        self.prefill_tokens = 0        # prompt tokens actually computed
-        self.chunk_dispatches = 0      # chunked-prefill model dispatches
-        # sequential model executions (a fused K-scan counts K): the
-        # denominator-side of dispatches_per_token, the observable
-        # speculative decoding attacks
+        self.prefill_tokens = 0
+        self.chunk_dispatches = 0
         self.model_passes = 0
-        # fault-plane counters (repro.serving.faults)
         self.node_failures = 0
         self.node_joins = 0
         self.pages_quarantined_total = 0
         self.requests_recovered = 0
-        self.tokens_recomputed = 0     # emitted tokens discarded by resets
-        self.quarantined_served = 0    # MUST stay 0: stale-read guard hits
+        self.tokens_recomputed = 0
+        self.quarantined_served = 0
+        # dispatch-span attribution: (predicted seconds, predicted §VI
+        # joules across the fleet) per prefill-shaped width, memoized —
+        # the cost engine prices each width once
+        self._pred_cache: Dict[int, tuple] = {}
         self.faults = None
         if fault_plan is not None:
             self.install_faults(fault_plan)
@@ -270,39 +311,29 @@ class PagedEngine:
         window."""
         from repro.serving.faults import FaultPlane
         self.faults = FaultPlane(plan, self.n_nodes,
-                                 epoch=self.sched.step_idx)
+                                 epoch=self.sched.step_idx,
+                                 registry=self.registry)
         self.sched.transient_gate = self.faults.transient_gate
 
     def reset_metrics(self):
-        """Zero every counter/clock (e.g. after a warmup pass) while
-        keeping the compiled steps, pools and allocator state.  The
-        prefix-cache *tree* is kept (call ``cache.clear()`` to start
-        cold); its counters restart."""
+        """Zero every counter/clock/digest (e.g. after a warmup pass)
+        while keeping the compiled steps, pools and allocator state.
+        One registry reset covers the engine, scheduler, allocator
+        gauges, prefix-cache and fault-plane counters AND the streaming
+        histogram digests — warmup traffic must not survive into
+        chaos/SLO percentiles.  The prefix-cache *tree* is kept (call
+        ``cache.clear()`` to start cold); its counters restart.  The
+        tracer ring restarts too, so an exported trace begins at the
+        post-warmup epoch."""
+        self.registry.reset()
         self.sched.finished.clear()
         self._n_submitted = 0
-        self.steps_run = self.windows_run = 0
-        self.decode_steps = self.decode_tokens = self.tokens_emitted = 0
-        self.decode_time_s = 0.0
-        self.spec_time_s = 0.0
-        self.h2d_syncs = self.d2h_syncs = self.block_row_writes = 0
-        self.peak_pages = 0
-        self.prefill_tokens = 0
-        self.chunk_dispatches = 0
-        self.sched.chunk_rounds = self.sched.chunk_tasks = 0
-        self.sched.chunk_preemptions = 0
-        self.model_passes = 0
-        self.node_failures = self.node_joins = 0
-        self.pages_quarantined_total = 0
-        self.requests_recovered = self.tokens_recomputed = 0
-        self.quarantined_served = 0
         self.sched.shed.clear()
-        self.sched.transient_rejections = 0
         self.sched.recovery_steps.clear()
         if self.spec is not None:
             self.spec.stats = SpecStats()
-        if self.cache is not None:
-            from repro.serving.prefix_cache import PrefixCacheStats
-            self.cache.stats = PrefixCacheStats()
+        if self.tracer is not None:
+            self.tracer.reset()
         self.t0 = time.time()
 
     # -- cost-engine pricing (the scheduler's admission inputs) ------------
@@ -319,6 +350,67 @@ class PagedEngine:
                                 "prefill")
             return self._estimate(shape, link_mode, n_nodes).step_time_s
         return cost
+
+    # -- predicted-vs-measured attribution (telemetry spans) ---------------
+    def _predict_prefill(self, n_tokens: int) -> tuple:
+        """(predicted seconds, predicted joules) for one prefill-shaped
+        dispatch of ``n_tokens`` — prices prefill, suffix prefill,
+        chunk slices and spec verify widths.  Memoized per width."""
+        n = max(int(n_tokens), 1)
+        hit = self._pred_cache.get(n)
+        if hit is None:
+            from repro.configs.base import ShapeConfig
+            est = self._estimate(
+                ShapeConfig("serve_prefill", n, 1, "prefill"),
+                self.link_mode, self.n_nodes)
+            hit = self._pred_cache[n] = (
+                est.step_time_s, est.energy.total_j * self.n_nodes)
+        return hit
+
+    def _predict_scan(self, k: int) -> tuple:
+        """(seconds, joules) for a fused K-step decode window — K times
+        the admission-priced decode step."""
+        return (k * self.sched.decode_cost_s,
+                k * self.decode_estimate.energy.total_j * self.n_nodes)
+
+    def _predict_cow(self) -> tuple:
+        """(seconds, joules) for one device page copy: read + write one
+        page of KV through HBM (the §VI traffic term; no FLOPs)."""
+        from repro.core.energy import step_energy
+        from repro.launch.mesh import HBM_BW
+        nbytes = 2 * self.page_size * self.kv_bytes_per_token
+        secs = nbytes / HBM_BW
+        return secs, step_energy(flops_per_chip=0.0,
+                                 hbm_bytes_per_chip=nbytes,
+                                 ici_bytes_per_chip=0.0,
+                                 step_seconds=secs).total_j
+
+    _NULLCTX = contextlib.nullcontext()
+
+    def _span(self, phase: str, predfn=None, **extra):
+        """Dispatch-span context: a no-op when tracing is off (predfn is
+        never called — zero cost-model work), else a
+        :meth:`StepTracer.dispatch` span stamped with the current step
+        and the cost engine's (seconds, joules) prediction."""
+        if self.tracer is None:
+            return self._NULLCTX
+        ps, pj = predfn() if predfn is not None else (0.0, 0.0)
+        return self.tracer.dispatch(phase, self.sched.step_idx,
+                                    predicted_s=ps, predicted_j=pj, **extra)
+
+    def _flight_dump(self, reason: str) -> Optional[str]:
+        """Invariant-violation post-mortem: dump the flight recorder's
+        last N spans + a registry snapshot before the caller raises.
+        No tracer armed -> no dump (never mask the original error)."""
+        if self.tracer is None:
+            return None
+        try:
+            path = self.tracer.flight_dump(reason, registry=self.registry)
+        except OSError:
+            return None
+        print(f"[flight-recorder] dumped last {len(self.tracer.spans)} "
+              f"spans to {path}")
+        return path
 
     # -- request intake ----------------------------------------------------
     def submit(self, prompt, gen: int, *, tenant: str = "default",
@@ -382,6 +474,7 @@ class PagedEngine:
             bad = quar.intersection(self.alloc.held.get(req.rid, ()))
             if bad:
                 self.quarantined_served += 1
+                self._flight_dump("quarantined-served")
                 raise RuntimeError(
                     f"request {req.rid} still references quarantined "
                     f"pages {sorted(bad)} after recovery")
@@ -396,6 +489,7 @@ class PagedEngine:
             # never a runtime condition: fail fast, count the hit
             self.quarantined_served += 1
             bad = sorted(self.alloc.quarantined.intersection(pages))
+            self._flight_dump("stale-block-row")
             raise RuntimeError(
                 f"block row for {rid} references quarantined pages {bad}")
         row[:len(pages)] = pages
@@ -593,22 +687,26 @@ class PagedEngine:
         L = req.cached_tokens
         match = req.prefix_match
         if self.cache is None or L <= 0:
-            logits, self.pools = self._prefill(
-                self.params, jnp.asarray(req.prompt[None]), self.pools,
-                jnp.asarray(row))
-            self.h2d_syncs += 1        # prompt + block row push
-            self.model_passes += 1
-            tok = int(jnp.argmax(logits, -1)[0, 0])
-            self.d2h_syncs += 1        # blocking first-token pull
+            with self._span("prefill",
+                            lambda: self._predict_prefill(req.prompt_len),
+                            rid=req.rid, tokens=req.prompt_len):
+                logits, self.pools = self._prefill(
+                    self.params, jnp.asarray(req.prompt[None]), self.pools,
+                    jnp.asarray(row))
+                self.h2d_syncs += 1    # prompt + block row push
+                self.model_passes += 1
+                tok = int(jnp.argmax(logits, -1)[0, 0])
+                self.d2h_syncs += 1    # blocking first-token pull
             self.prefill_tokens += req.prompt_len
             return tok
         if match is not None and match.cow_src is not None:
             # diverging inside a shared page: copy it into the request's
             # private page before any write can touch it
             dst = self.alloc.held[req.rid][L // self.page_size]
-            self.pools = self._copy_page(self.pools,
-                                         jnp.int32(match.cow_src),
-                                         jnp.int32(dst))
+            with self._span("cow_copy", self._predict_cow, rid=req.rid):
+                self.pools = self._copy_page(self.pools,
+                                             jnp.int32(match.cow_src),
+                                             jnp.int32(dst))
             self.cache.stats.cow_copies += 1
             self.cache.release_cow(match)
         suffix = np.asarray(req.prompt[L:], np.int32)
@@ -616,13 +714,15 @@ class PagedEngine:
         k = self._pow2_ceil(slen)
         padded = np.zeros((1, k), np.int32)
         padded[0, :slen] = suffix
-        logits, self.pools = self._suffix(
-            self.params, jnp.asarray(padded), self.pools, jnp.asarray(row),
-            jnp.int32(L), jnp.int32(slen))
-        self.h2d_syncs += 1            # suffix + block row push
-        self.model_passes += 1
-        tok = int(jnp.argmax(logits, -1)[0, 0])
-        self.d2h_syncs += 1            # blocking first-token pull
+        with self._span("prefill", lambda: self._predict_prefill(k),
+                        rid=req.rid, tokens=slen, cached=L):
+            logits, self.pools = self._suffix(
+                self.params, jnp.asarray(padded), self.pools,
+                jnp.asarray(row), jnp.int32(L), jnp.int32(slen))
+            self.h2d_syncs += 1        # suffix + block row push
+            self.model_passes += 1
+            tok = int(jnp.argmax(logits, -1)[0, 0])
+            self.d2h_syncs += 1        # blocking first-token pull
         self.prefill_tokens += slen
         return tok
 
@@ -639,9 +739,10 @@ class PagedEngine:
                 and match.cow_src is not None:
             dst = self.alloc.held[req.rid][req.cached_tokens
                                            // self.page_size]
-            self.pools = self._copy_page(self.pools,
-                                         jnp.int32(match.cow_src),
-                                         jnp.int32(dst))
+            with self._span("cow_copy", self._predict_cow, rid=req.rid):
+                self.pools = self._copy_page(self.pools,
+                                             jnp.int32(match.cow_src),
+                                             jnp.int32(dst))
             self.cache.stats.cow_copies += 1
             self.cache.release_cow(match)
 
@@ -658,18 +759,21 @@ class PagedEngine:
         w = self._pow2_ceil(n)
         padded = np.zeros((1, w), np.int32)
         padded[0, :n] = seg
-        logits, self.pools = self._chunk(
-            self.params, jnp.asarray(padded), self.pools, jnp.asarray(row),
-            jnp.int32(start), jnp.int32(n))
-        self.h2d_syncs += 1            # chunk + block row push
-        self.model_passes += 1
-        self.chunk_dispatches += 1
+        final = start + n == req.prompt_len
+        with self._span("chunk_prefill", lambda: self._predict_prefill(w),
+                        rid=req.rid, tokens=n, start=start):
+            logits, self.pools = self._chunk(
+                self.params, jnp.asarray(padded), self.pools,
+                jnp.asarray(row), jnp.int32(start), jnp.int32(n))
+            self.h2d_syncs += 1        # chunk + block row push
+            self.model_passes += 1
+            self.chunk_dispatches += 1
+            tok = None
+            if final:
+                tok = int(jnp.argmax(logits, -1)[0, 0])
+                self.d2h_syncs += 1    # blocking first-token pull
         self.prefill_tokens += n
-        if start + n == req.prompt_len:
-            tok = int(jnp.argmax(logits, -1)[0, 0])
-            self.d2h_syncs += 1        # blocking first-token pull
-            return tok
-        return None
+        return tok
 
     def _chunk_round(self, max_window: Optional[int]) -> List[Request]:
         """One chunk round: ask the scheduler for this window's budgeted
@@ -841,10 +945,12 @@ class PagedEngine:
             else:
                 self._push(force=not self.fused)
                 d_bt, d_act = self.d_block, self.d_active
-            toks, d_tok, d_pos, self.pools = self._scan(
-                self.params, self.d_tokens, self.pools, d_bt, self.d_pos,
-                d_act, k=kk)
-            tok_np = np.asarray(toks).reshape(self.max_batch, kk)
+            with self._span("scan", lambda: self._predict_scan(kk),
+                            k=kk, slots=len(scan_slots)):
+                toks, d_tok, d_pos, self.pools = self._scan(
+                    self.params, self.d_tokens, self.pools, d_bt,
+                    self.d_pos, d_act, k=kk)
+                tok_np = np.asarray(toks).reshape(self.max_batch, kk)
             self.d2h_syncs += 1
             self.decode_steps += kk
             self.model_passes += kk
@@ -879,25 +985,32 @@ class PagedEngine:
                 padded = np.zeros((1, W), np.int32)
                 padded[0, 0] = req.tokens[-1]
                 padded[0, 1:m + 1] = d
-                logits, self.pools = self._verify(
-                    self.params, jnp.asarray(padded), self.pools,
-                    jnp.asarray(self.block_tables[slot]),
-                    jnp.int32(req.pos), jnp.int32(m + 1))
-                self.h2d_syncs += 1       # draft + block row push
-                greedy = np.asarray(jnp.argmax(logits[0, :m + 1], -1),
-                                    np.int32)
-                self.d2h_syncs += 1       # blocking verdict pull
+                with self._span("draft_verify",
+                                lambda: self._predict_prefill(W),
+                                rid=req.rid, k=K, width=W):
+                    logits, self.pools = self._verify(
+                        self.params, jnp.asarray(padded), self.pools,
+                        jnp.asarray(self.block_tables[slot]),
+                        jnp.int32(req.pos), jnp.int32(m + 1))
+                    self.h2d_syncs += 1   # draft + block row push
+                    greedy = np.asarray(jnp.argmax(logits[0, :m + 1], -1),
+                                        np.int32)
+                    self.d2h_syncs += 1   # blocking verdict pull
                 out = self.spec.accept(d, greedy)   # updates stats
             else:
-                (emit_d, n_emit_d, m_d, self.d_hist,
-                 self.pools) = self._spec_step(
-                    self.params, self.d_hist, self.pools, self.d_block,
-                    jnp.int32(slot), jnp.int32(req.pos), jnp.int32(K),
-                    W=self._pow2_ceil(K + 1), max_n=self.spec.max_n,
-                    min_n=self.spec.min_n)
-                emit_np = np.asarray(emit_d)   # blocking verdict pull
-                n_emit, m = int(n_emit_d), int(m_d)
-                self.d2h_syncs += 1
+                W = self._pow2_ceil(K + 1)
+                with self._span("draft_verify",
+                                lambda: self._predict_prefill(W),
+                                rid=req.rid, k=K, width=W):
+                    (emit_d, n_emit_d, m_d, self.d_hist,
+                     self.pools) = self._spec_step(
+                        self.params, self.d_hist, self.pools, self.d_block,
+                        jnp.int32(slot), jnp.int32(req.pos), jnp.int32(K),
+                        W=W, max_n=self.spec.max_n,
+                        min_n=self.spec.min_n)
+                    emit_np = np.asarray(emit_d)   # blocking verdict pull
+                    n_emit, m = int(n_emit_d), int(m_d)
+                    self.d2h_syncs += 1
                 out = [int(t) for t in emit_np[:n_emit]]
                 st.drafted += m
                 st.accepted += n_emit - 1
@@ -999,19 +1112,22 @@ class PagedEngine:
             self._refresh_slots()
             active = dict(self.sched.running)
             t_dec = time.time()
-            if self.fused:
-                self._push()
-                toks, self.d_tokens, self.d_pos, self.pools = self._scan(
-                    self.params, self.d_tokens, self.pools, self.d_block,
-                    self.d_pos, self.d_active, k=k)
-            else:
-                # legacy per-step path: push the whole bundle and pull
-                # one token per scheduler step — O(1 syncs per token)
-                self._push(force=True)
-                toks, _, self.pools = self._serve(
-                    self.params, self.d_tokens, self.pools, self.d_block,
-                    self.d_pos)
-            tok_np = np.asarray(toks)      # blocks: decode-only timing
+            with self._span("scan", lambda: self._predict_scan(k),
+                            k=k, slots=len(active)):
+                if self.fused:
+                    self._push()
+                    toks, self.d_tokens, self.d_pos, self.pools = \
+                        self._scan(self.params, self.d_tokens, self.pools,
+                                   self.d_block, self.d_pos, self.d_active,
+                                   k=k)
+                else:
+                    # legacy per-step path: push the whole bundle and pull
+                    # one token per scheduler step — O(1 syncs per token)
+                    self._push(force=True)
+                    toks, _, self.pools = self._serve(
+                        self.params, self.d_tokens, self.pools,
+                        self.d_block, self.d_pos)
+                tok_np = np.asarray(toks)  # blocks: decode-only timing
             self.d2h_syncs += 1
             self.decode_time_s += time.time() - t_dec
             tok_np = tok_np.reshape(self.max_batch, k)
@@ -1039,6 +1155,10 @@ class PagedEngine:
                     and self._slot_sig[slot] is not None:
                 self._clear_slot(slot)
         self.peak_pages = max(self.peak_pages, self.alloc.pages_in_use)
+        if self.tracer is not None:
+            # per-node occupancy counter track (Perfetto stacked counters)
+            self.tracer.counter_sample(self.sched.step_idx,
+                                       self.alloc.occupancy_by_node())
         return finished
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
@@ -1056,10 +1176,12 @@ class PagedEngine:
 
     # -- observability -----------------------------------------------------
     def metrics(self) -> dict:
+        from repro.serving.telemetry import HistogramDigest
         fin = self.sched.finished
         dt = max(time.time() - self.t0, 1e-9)
-        ttft = [r.first_token_step - r.arrived_step for r in fin
-                if r.first_token_step is not None]
+        ttft_d = HistogramDigest.of(
+            r.first_token_step - r.arrived_step for r in fin
+            if r.first_token_step is not None)
         emitted = self.tokens_emitted
         out = {
             "finished": len(fin),
@@ -1086,9 +1208,9 @@ class PagedEngine:
             # (a fused K-scan is K passes; a K+1-wide verify is ONE)
             "model_passes": self.model_passes,
             "dispatches_per_token": self.model_passes / max(emitted, 1),
-            "ttft_steps_mean": float(np.mean(ttft)) if ttft else 0.0,
-            "ttft_steps_p95": float(np.percentile(ttft, 95)) if ttft else 0.0,
-            "ttft_steps_p99": float(np.percentile(ttft, 99)) if ttft else 0.0,
+            "ttft_steps_mean": ttft_d.mean,
+            "ttft_steps_p95": ttft_d.percentile(95),
+            "ttft_steps_p99": ttft_d.percentile(99),
             "pages_in_use": self.alloc.pages_in_use,
             "peak_pages": self.peak_pages,
             "page_occupancy": self.peak_pages / max(self.alloc.n_pages - 1,
@@ -1096,7 +1218,8 @@ class PagedEngine:
             "preemptions": sum(r.preemptions for r in self.sched.all_requests),
             "prefill_tokens": self.prefill_tokens,
         }
-        rec = self.sched.recovery_steps
+        # recovery tail from the registry's streaming digest (observed at
+        # note_first_token; same numpy semantics in the exact regime)
         out.update({
             # fault plane (repro.serving.faults): quarantine footprint,
             # recovery work, and the reset -> first-token latency tail
@@ -1109,10 +1232,10 @@ class PagedEngine:
             "tokens_recomputed": self.tokens_recomputed,
             "transient_rejections": self.sched.transient_rejections,
             "quarantined_served": self.quarantined_served,
-            "recovery_steps_p50": float(np.percentile(rec, 50))
-            if rec else 0.0,
-            "recovery_steps_p99": float(np.percentile(rec, 99))
-            if rec else 0.0,
+            "recovery_steps_p50": self.registry.percentile(
+                "recovery_steps", 50),
+            "recovery_steps_p99": self.registry.percentile(
+                "recovery_steps", 99),
         })
         if self.sched.chunked:
             out.update({

@@ -31,6 +31,7 @@ from typing import List, Set
 import numpy as np
 
 from repro.runtime.health import HeartbeatMonitor, StragglerDetector
+from repro.serving.telemetry import MetricsRegistry, counter_attr
 
 KINDS = ("fail", "join", "slow", "transient")
 
@@ -160,10 +161,17 @@ class FaultPlane:
     the same state machines a wall-clock deployment would run, just fed
     synthetic observations derived from the plan."""
 
+    # registry-backed (the engine's registry when installed through
+    # PagedEngine.install_faults, so a warmup reset covers it)
+    _transients_used = counter_attr("fault_transients_used")
+
     def __init__(self, plan: FaultPlan, n_nodes: int, *,
                  epoch: int = 0, heartbeat_steps: float = 2.0,
                  straggler_ratio: float = 1.5, straggler_patience: int = 2,
-                 base_step_s: float = 1.0):
+                 base_step_s: float = 1.0,
+                 registry: MetricsRegistry = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
         self.plan = plan
         self.n_nodes = n_nodes
         self.epoch = epoch            # plan step 0 == scheduler step epoch

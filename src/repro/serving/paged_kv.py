@@ -72,6 +72,9 @@ class PageAllocator:
     # the node restores) and the set of currently-failed nodes
     quarantined: Set[int] = field(default_factory=set)
     failed_nodes: Set[int] = field(default_factory=set)
+    # telemetry: occupancy/capacity exported as live gauge callables on
+    # the owning engine's MetricsRegistry (or a private one)
+    registry: Optional[object] = None
 
     def __post_init__(self):
         assert self.n_pages > 1, "need at least one page beyond the null page"
@@ -79,6 +82,18 @@ class PageAllocator:
         # LIFO free lists per owner node; page 0 is never handed out
         for p in range(self.n_pages - 1, NULL_PAGE, -1):
             self._free_by_node[self.owner(p)].append(p)
+        if self.registry is None:
+            from repro.serving.telemetry import MetricsRegistry
+            self.registry = MetricsRegistry()
+        # registered as callables: the registry snapshot samples the
+        # allocator live instead of caching stale occupancy
+        self.registry.register_gauge("pages_in_use",
+                                     lambda: self.pages_in_use)
+        self.registry.register_gauge("free_pages", lambda: self.free_pages)
+        self.registry.register_gauge("pages_quarantined_now",
+                                     lambda: self.pages_quarantined)
+        self.registry.register_gauge("allocatable_pages",
+                                     lambda: self.allocatable_pages)
 
     # -- the striping rule (one source of truth) ---------------------------
     def owner(self, page: int) -> int:

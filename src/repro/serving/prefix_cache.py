@@ -52,6 +52,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.paged_kv import PageAllocator
+from repro.serving.telemetry import MetricsRegistry, counter_attr
 
 
 class RadixNode:
@@ -95,15 +96,30 @@ class PrefixMatch:
         return self.length > 0
 
 
-@dataclass
 class PrefixCacheStats:
-    lookups: int = 0
-    hits: int = 0
-    tokens_cached: int = 0       # prefill tokens served from shared pages
-    cow_copies: int = 0
-    inserts: int = 0             # nodes grafted into the tree
-    evictions: int = 0           # nodes evicted (LRU, refcount-0)
-    invalidations: int = 0       # nodes dropped by node-failure quarantine
+    """Cache counters, registry-backed: each attribute is one
+    ``prefix_*`` slot in a :class:`~repro.serving.telemetry
+    .MetricsRegistry` (the owning engine's, so one reset covers the
+    cache too), exposed under the historical attribute names."""
+
+    lookups = counter_attr("prefix_lookups")
+    hits = counter_attr("prefix_hits")
+    tokens_cached = counter_attr("prefix_tokens_cached")
+    cow_copies = counter_attr("prefix_cow_copies")
+    inserts = counter_attr("prefix_inserts")         # nodes grafted
+    evictions = counter_attr("prefix_evictions")     # LRU, refcount-0
+    invalidations = counter_attr("prefix_invalidations")  # node failure
+
+    def __init__(self, registry=None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        self.lookups = 0
+        self.hits = 0
+        self.tokens_cached = 0   # prefill tokens served from shared pages
+        self.cow_copies = 0
+        self.inserts = 0
+        self.evictions = 0
+        self.invalidations = 0
 
     @property
     def hit_rate(self) -> float:
@@ -113,13 +129,13 @@ class PrefixCacheStats:
 class PrefixCache:
     """Radix-tree prefix index over token IDs on a striped page pool."""
 
-    def __init__(self, alloc: PageAllocator):
+    def __init__(self, alloc: PageAllocator, registry=None):
         self.alloc = alloc
         self.page_size = alloc.page_size
         self.root = RadixNode((), -1, None)     # sentinel, owns no page
         self._nodes: Dict[int, RadixNode] = {}  # page -> node
         self._clock = 0
-        self.stats = PrefixCacheStats()
+        self.stats = PrefixCacheStats(registry)
 
     # -- bookkeeping -------------------------------------------------------
     def _touch(self, node: RadixNode) -> None:

@@ -76,6 +76,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.serving.paged_kv import PageAllocator
 from repro.serving.slo import DEFAULT_SLO, get_slo
+from repro.serving.telemetry import MetricsRegistry, counter_attr
 
 
 @dataclass
@@ -127,7 +128,21 @@ class StepPlan:
 
 
 class ContinuousBatchScheduler:
-    """Admission + page-pressure preemption over ``max_batch`` slots."""
+    """Admission + page-pressure preemption over ``max_batch`` slots.
+
+    ``registry`` (a :class:`~repro.serving.telemetry.MetricsRegistry`)
+    is the single store behind the counter attributes below — the
+    engine shares its own so one ``registry.reset()`` covers both;
+    standalone schedulers get a private one.  ``tracer`` (optional
+    :class:`~repro.serving.telemetry.StepTracer`) receives a
+    request-lifecycle event at every state transition.
+    """
+
+    # registry-backed counters (pinned by tests under these names)
+    chunk_rounds = counter_attr()
+    chunk_tasks = counter_attr()
+    chunk_preemptions = counter_attr()   # preempted while half-prefilled
+    transient_rejections = counter_attr()
 
     def __init__(self, allocator: PageAllocator, max_batch: int,
                  prefill_cost_s: Optional[Callable[[int], float]] = None,
@@ -135,7 +150,11 @@ class ContinuousBatchScheduler:
                  prefill_budget: float = 2.0,
                  prefix_cache=None,
                  chunked: bool = False,
-                 chunk_tokens: int = 0):
+                 chunk_tokens: int = 0,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
+        self.registry = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer
         self.alloc = allocator
         self.max_batch = max_batch
         self.prefill_cost_s = prefill_cost_s
@@ -155,10 +174,10 @@ class ContinuousBatchScheduler:
         self.shed: List[Request] = []    # dropped by pool-shrink degradation
         self.step_idx = 0
         self._next_seq = 0
-        # chunk telemetry (pinned by tests, surfaced via engine metrics)
+        # seed the registry keys (descriptors write through)
         self.chunk_rounds = 0
         self.chunk_tasks = 0
-        self.chunk_preemptions = 0       # preempted while half-prefilled
+        self.chunk_preemptions = 0
         # fault plane: an injected transient-dispatch gate (request, step)
         # -> bool, and capped exponential backoff for its rejections
         self.transient_gate: Optional[Callable[[Request, int], bool]] = None
@@ -166,6 +185,14 @@ class ContinuousBatchScheduler:
         self.backoff_cap = 8
         self.transient_rejections = 0
         self.recovery_steps: List[int] = []   # fault-reset -> first-token
+
+    def _trace(self, req: Request, state: str) -> None:
+        """Emit one lifecycle transition to the flight recorder (no-op
+        without a tracer; never read back — tracing cannot perturb
+        scheduling)."""
+        if self.tracer is not None:
+            self.tracer.request_event(req.rid, state, self.step_idx,
+                                      tenant=req.tenant)
 
     # -- submission --------------------------------------------------------
     def submit(self, req: Request):
@@ -180,6 +207,7 @@ class ContinuousBatchScheduler:
         req.deadline_step = get_slo(req.slo).deadline(req.arrived_step)
         req.arrived_wall = time.time()
         self.waiting.append(req)
+        self._trace(req, "queued")
         self._sort_waiting()
 
     def _edf_key(self, r: Request):
@@ -270,6 +298,7 @@ class ContinuousBatchScheduler:
         req.cached_tokens, req.prefix_match = 0, None
         req.preemptions += 1
         self.waiting.append(req)
+        self._trace(req, "preempted")
         self._sort_waiting()
         plan.preempted.append(req)
 
@@ -286,6 +315,10 @@ class ContinuousBatchScheduler:
         self._preempt(req, plan)
         req.recoveries += 1
         req.recovered_step = self.step_idx
+        # lifecycle: the generic "preempted" span _preempt opened closes
+        # immediately and "recovered" runs until re-admission, so a trace
+        # distinguishes page-pressure eviction from fault recovery
+        self._trace(req, "recovered")
         return plan
 
     def shed_infeasible(self, capacity: int) -> List[Request]:
@@ -317,6 +350,7 @@ class ContinuousBatchScheduler:
             req.state, req.slot = "shed", None
             req.finished_step = self.step_idx
             self.shed.append(req)
+            self._trace(req, "shed")
         return doomed
 
     def _grow_or_preempt(self, plan: StepPlan):
@@ -411,6 +445,9 @@ class ContinuousBatchScheduler:
             req.state = "running"
             req.pos = req.prompt_len
             self.running[req.slot] = req
+            # lifecycle: admission starts the prefill; "running" begins
+            # at note_first_token when its first token actually lands
+            self._trace(req, "prefilling")
             plan.admitted.append(req)
             spent += cost
 
@@ -440,6 +477,7 @@ class ContinuousBatchScheduler:
             req.prefilled = req.cached_tokens
             req.pos = req.prefilled
             self.prefilling[req.slot] = req
+            self._trace(req, "prefilling")
             plan.admitted.append(req)
 
     # -- chunked prefill ----------------------------------------------------
@@ -619,9 +657,14 @@ class ContinuousBatchScheduler:
         req.tokens.append(token)
         req.first_token_step = self.step_idx
         req.first_token_wall = time.time()
+        self._trace(req, "running")
         if req.recovered_step is not None:
-            # recovery latency: fault reset -> the recompute's first token
-            self.recovery_steps.append(self.step_idx - req.recovered_step)
+            # recovery latency: fault reset -> the recompute's first token.
+            # The list is the raw record (pinned by tests); the registry
+            # digest is the streaming percentile view metrics() reports.
+            steps = self.step_idx - req.recovered_step
+            self.recovery_steps.append(steps)
+            self.registry.observe("recovery_steps", steps)
             req.recovered_step = None
         self._maybe_finish(req)
 
@@ -676,6 +719,7 @@ class ContinuousBatchScheduler:
         req.finished_step = self.step_idx
         req.finished_wall = time.time()
         self.finished.append(req)
+        self._trace(req, "finished")
         return True
 
     # -- invariants (pinned by tests) --------------------------------------
