@@ -15,7 +15,11 @@ fault-injection trace: survivor token identity, goodput retained,
 recovery percentiles) and ``BENCH_obs.json`` (flight recorder off vs
 on on the overload trace: token identity, tracing overhead ratio, the
 predicted-vs-measured model-error rollup, a schema-validated trace
-excerpt) into ``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
+excerpt) and ``BENCH_tp.json`` (the pinned workload replayed at every
+serving layout — 1x1 vs striped 1x2/2x2 meshes in forced-device
+subprocesses: token bit-identity across layouts, predicted
+interconnect cost per window, and the measured remote page fraction
+against the (n-1)/n stripe model) into ``--json-dir``.  ``--only PATTERN`` filters sections by substring (an
 unknown pattern is an error listing the valid titles) — the CI
 perf-smoke job runs ``--only micro --json`` and validates the files
 with ``scripts/check_bench.py``.
@@ -130,6 +134,11 @@ def main() -> None:
              lambda d: f"tokens_match={d['tokens_match']}, "
                        f"overhead_ratio={d['overhead_ratio']:.3f}, "
                        f"spans={d['on']['spans_recorded']}"),
+            ("BENCH_tp.json", st.bench_tp_comparison,
+             lambda d: f"tokens_match={d['tokens_match']}, "
+                       f"layouts={[l['layout'] for l in d['layouts']]}, "
+                       f"remote_frac_ratio="
+                       f"{d['layouts'][-1]['remote_frac_ratio']:.3f}"),
         ]
         for fname, bench_fn, summarize in comparisons:
             try:

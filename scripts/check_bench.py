@@ -71,11 +71,24 @@ that ``benchmarks/run.py --json`` emits.
   (predicted_s/predicted_j/measured_s), and the ``model_error`` rollup
   must be finite.
 
+* ``BENCH_tp.json`` (swallow.bench.tp/v1): the pinned prefix-sharing
+  workload replayed at every serving layout — the 1x1 single-device
+  baseline plus striped (data, model) meshes, each in a forced-device
+  subprocess.  ``tokens_match`` must be true per layout and overall
+  (striping the page pools is a placement transform — greedy tokens are
+  bit-identical across meshes), every striped layout must price
+  interconnect traffic (``predicted_comms_s`` / ``comms_bytes`` > 0 —
+  the §V link model applied per dispatch window), and the measured
+  remote page fraction must track the predicted (n-1)/n stripe model:
+  ``remote_frac_ratio`` within ``PERF_SMOKE_MAX_TP_MODEL_ERROR``
+  (default 0.25) of 1.0.  All gated values ride the deterministic step
+  clock and allocator state, so they are host-independent.
+
 Run from the repo root:
     python benchmarks/run.py --only micro --json
     python scripts/check_bench.py BENCH_micro.json BENCH_serve.json \
         BENCH_prefix.json BENCH_spec.json BENCH_slo.json \
-        BENCH_chaos.json BENCH_obs.json
+        BENCH_chaos.json BENCH_obs.json BENCH_tp.json
 """
 from __future__ import annotations
 
@@ -358,6 +371,59 @@ def check_chaos(doc: dict) -> list:
     return errs
 
 
+REQUIRED_TP_KEYS = ("predicted_s", "measured_s", "predicted_comms_s",
+                    "comms_bytes", "measured_remote_frac", "steps",
+                    "cow_copies", "preemptions")
+
+
+def check_tp(doc: dict) -> list:
+    errs = []
+    if doc.get("schema") != "swallow.bench.tp/v1":
+        errs.append(f"bad schema: {doc.get('schema')!r}")
+    layouts = doc.get("layouts")
+    if not isinstance(layouts, list) or len(layouts) < 2:
+        errs.append("layouts: need the 1x1 baseline plus at least one "
+                    "striped mesh")
+        return errs
+    for blk in layouts:
+        tag = blk.get("layout", "?")
+        for key in REQUIRED_TP_KEYS:
+            if not _finite_pos(blk.get(key)):
+                errs.append(f"{tag}.{key}: non-finite {blk.get(key)!r}")
+        if blk.get("tokens_match") is not True:
+            errs.append(f"{tag}: tokens_match is not true — sharding the "
+                        "page pools changed the emitted tokens")
+    if doc.get("tokens_match") is not True:
+        errs.append("tokens_match is not true: some layout diverged from "
+                    "the 1x1 baseline")
+    if not any(blk.get("model", 1) > 1 for blk in layouts):
+        errs.append("no striped layout (model > 1) in the sweep")
+    if not errs:
+        # the §V stripe model: measured remote page fraction vs the
+        # predicted (n-1)/n, gated as a ratio around 1.0
+        max_err = float(os.environ.get("PERF_SMOKE_MAX_TP_MODEL_ERROR",
+                                       "0.25"))
+        for blk in layouts:
+            if blk.get("model", 1) <= 1:
+                continue
+            tag = blk["layout"]
+            ratio = blk.get("remote_frac_ratio")
+            if not _finite_pos(ratio):
+                errs.append(f"{tag}.remote_frac_ratio: non-finite "
+                            f"{ratio!r}")
+            elif abs(ratio - 1.0) > max_err:
+                errs.append(f"{tag}.remote_frac_ratio {ratio:.3f} "
+                            f"deviates from the (n-1)/n stripe model by "
+                            f"more than {max_err}")
+            if blk.get("predicted_comms_s", 0.0) <= 0.0:
+                errs.append(f"{tag}.predicted_comms_s is 0: the striped "
+                            "run priced no interconnect traffic")
+            if blk.get("comms_bytes", 0.0) <= 0.0:
+                errs.append(f"{tag}.comms_bytes is 0: the striped run "
+                            "priced no wire bytes")
+    return errs
+
+
 REQUIRED_OBS_KEYS = ("tokens", "steps", "tok_per_s", "wall_s")
 
 
@@ -423,7 +489,7 @@ def main() -> None:
     paths = sys.argv[1:] or ["BENCH_micro.json", "BENCH_serve.json",
                              "BENCH_prefix.json", "BENCH_spec.json",
                              "BENCH_slo.json", "BENCH_chaos.json",
-                             "BENCH_obs.json"]
+                             "BENCH_obs.json", "BENCH_tp.json"]
     failures = []
     for path in paths:
         try:
@@ -445,6 +511,9 @@ def main() -> None:
             errs = check_chaos(doc)
         elif "obs" in schema or "obs" in os.path.basename(path):
             errs = check_obs(doc)
+        elif "tp" in schema \
+                or os.path.basename(path).startswith("BENCH_tp"):
+            errs = check_tp(doc)
         else:
             errs = check_serve(doc)
         for e in errs:

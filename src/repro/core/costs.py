@@ -141,6 +141,57 @@ def comm_events(cfg: ModelConfig, shape: ShapeConfig,
     return events
 
 
+def serving_comm_events(cfg: ModelConfig, layout: Layout, *,
+                        n_tokens: int, n_merges: int = 1
+                        ) -> List[CommEvent]:
+    """The extra collectives paged-KV serving adds on top of
+    :func:`comm_events` when the page pools are striped over the model
+    axis (paper §V applied to §III-A's ``address % n`` store).
+
+    * ``kv_stripe_write`` — every decoded/prefilled token appends one KV
+      entry to the page owning its slot; under uniform page placement
+      ``(M-1)/M`` of those writes leave the producing node, exactly the
+      paper's remote-fraction model.  Modelled as an all-to-all of the
+      per-token KV bytes (``2 * n_kv_heads * head_dim * n_layers`` bf16
+      words for K and V) so ``wire_bytes_per_device`` carries the
+      (M-1)/M factor.
+    * ``decode_stats_merge`` — the sharded paged-attention kernel merges
+      per-stripe online-softmax partials ``(m, l, acc)`` with an
+      all-reduce over the model axis, once per decode dispatch
+      (``n_merges``) per layer.
+    """
+    M = layout.model
+    if M <= 1:
+        return []
+    kv_bytes_per_token = 2.0 * cfg.kv_dim * cfg.n_layers * ACT_BYTES
+    stats_bytes = (float(n_tokens) * cfg.n_kv_heads
+                   * (cfg.n_heads // cfg.n_kv_heads)
+                   * (cfg.head_dim + 2) * 4.0)  # f32 acc + m + l
+    return [
+        CommEvent("kv_stripe_write", "all_to_all", M,
+                  float(n_tokens) * kv_bytes_per_token),
+        CommEvent("decode_stats_merge", "all_reduce", M, stats_bytes,
+                  count=n_merges * cfg.n_layers),
+    ]
+
+
+def serving_comm_cost(cfg: ModelConfig, layout: Layout,
+                      mode: str = "circuit", *, n_tokens: int,
+                      n_merges: int = 1, link: LinkSpec = LinkSpec()
+                      ) -> Tuple[float, float]:
+    """(seconds, wire bytes per device) the serving collectives add under
+    ``layout`` — the §V link model priced on the stripe traffic."""
+    secs = 0.0
+    wire = 0.0
+    for ev in serving_comm_events(cfg, layout, n_tokens=n_tokens,
+                                  n_merges=n_merges):
+        secs += ev.count * ring_collective_time(
+            ev.bytes_per_device, ev.group, kind=ev.kind, link=link,
+            mode=mode)
+        wire += ev.wire_bytes_per_device()
+    return secs, wire
+
+
 # ---------------------------------------------------------------------------
 # The estimate
 # ---------------------------------------------------------------------------
@@ -239,5 +290,33 @@ def rank_layouts(config: ModelConfig, shape: Optional[ShapeConfig] = None,
         feasible = [l for l in lays if B % (l.data * l.pod) == 0]
         lays = feasible or lays
     ests = [estimate(config, lay, mode, shape, link) for lay in lays]
+    ests.sort(key=lambda e: e.step_time_s)
+    return ests
+
+
+def rank_serving_layouts(config: ModelConfig,
+                         shape: Optional[ShapeConfig] = None,
+                         n_chips: int = 1, mode: str = "circuit",
+                         link: LinkSpec = LinkSpec(),
+                         max_model: Optional[int] = None
+                         ) -> List[CostEstimate]:
+    """:func:`rank_layouts` with the paged-serving stripe traffic priced
+    in (``serving_comm_events``): each estimate's ``step_time_s`` and
+    ``ici_s`` gain the per-decode-step KV stripe write + partials merge,
+    recorded under ``breakdown["serving_comm_s"]``, then the candidates
+    are re-sorted.  ``--layout auto`` on the paged engine ranks with
+    this so the §V link model arbitrates serving placement too."""
+    ests = rank_layouts(config, shape, n_chips, mode, link, max_model)
+    for est in ests:
+        n_tokens = est.shape.global_batch  # one token/sequence/decode step
+        secs, wire = serving_comm_cost(
+            config, est.layout, mode, n_tokens=n_tokens, n_merges=1,
+            link=link)
+        est.step_time_s += secs
+        est.ici_s += secs
+        est.ici_bytes_per_chip += wire
+        est.breakdown["serving_comm_s"] = secs
+        est.events = est.events + tuple(serving_comm_events(
+            config, est.layout, n_tokens=n_tokens, n_merges=1))
     ests.sort(key=lambda e: e.step_time_s)
     return ests

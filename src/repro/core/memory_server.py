@@ -33,6 +33,23 @@ def striped_owner(address, n_nodes: int):
     return address % n_nodes
 
 
+def stripe_slab_index(address, n_nodes: int, size: int):
+    """Slab (physical) row of ``address`` under the stripe layout.
+
+    Word/page ``a`` lives on node ``a % n`` at local offset ``a // n``;
+    laying node stripes contiguous (node ``d`` owns rows
+    ``[d*size/n, (d+1)*size/n)``) makes a ``NamedSharding`` over the
+    leading axis place each stripe physically on its owner device —
+    host-side ``striped_owner`` accounting and device placement agree.
+    Identity when ``n_nodes == 1``; ``stripe_slab_index(0, ...) == 0``
+    always (the serving engine's null page stays row 0 on node 0).
+    Requires ``size % n_nodes == 0``.
+    """
+    node = address % n_nodes
+    local = address // n_nodes
+    return node * (size // n_nodes) + local
+
+
 @dataclass
 class StripedStore:
     """address space striped over devices along one mesh axis."""
@@ -55,16 +72,21 @@ class StripedStore:
     # Stripe layout: word w lives on node w % n at local offset w // n.
     # jnp layout trick: reshape (n, size/n) puts node stripes contiguous.
     def _to_slab_index(self, addr):
-        node = addr % self.n
-        local = addr // self.n
-        return node * (self.size // self.n) + local
+        return stripe_slab_index(addr, self.n, self.size)
 
     def read(self, addresses):
         """Gather a batch of words (collective when owners are remote)."""
         return self.slab[self._to_slab_index(addresses)]
 
     def write(self, addresses, values):
-        self.slab = self.slab.at[self._to_slab_index(addresses)].set(values)
+        out = self.slab.at[self._to_slab_index(addresses)].set(values)
+        if self.env is not None:
+            # .at[].set rebinds the slab through a scatter whose output
+            # sharding XLA may resolve to replicated — re-pin the stripe
+            # so a write never silently decays the placement
+            out = jax.device_put(
+                out, NamedSharding(self.env.mesh, P(self.axis)))
+        self.slab = out
         return self.slab
 
     def traffic_model(self, n_accesses: int,

@@ -354,16 +354,19 @@ class NOS:
         wall seconds, with the measured/predicted ratio that says how
         honest the model is."""
         hdr = (f"{'job/phase':<24} {'count':>6} {'pred_s':>10} "
-               f"{'meas_s':>10} {'meas/pred':>9} {'pred_J':>10}")
+               f"{'meas_s':>10} {'meas/pred':>9} {'pred_J':>10} "
+               f"{'comm_s':>9}")
         rows = [hdr, "-" * len(hdr)]
         for j in self.jobs.values():
             if not (j.measured_s or j.model_error):
                 continue
             ratio = (j.measured_s / j.predicted_s
                      if j.predicted_s else float("nan"))
+            comm = sum(r.get("predicted_comms_s", 0.0)
+                       for r in (j.model_error or {}).values())
             rows.append(f"{j.name:<24} {'':>6} {j.predicted_s:>10.4f} "
                         f"{j.measured_s:>10.4f} {ratio:>9.2f} "
-                        f"{j.predicted_j:>10.3f}")
+                        f"{j.predicted_j:>10.3f} {comm:>9.4f}")
             for phase in sorted(j.model_error or ()):
                 r = j.model_error[phase]
                 pr = (r["measured_s"] / r["predicted_s"]
@@ -371,7 +374,8 @@ class NOS:
                 rows.append(f"  {phase:<22} {int(r.get('count', 0)):>6} "
                             f"{r.get('predicted_s', 0.0):>10.4f} "
                             f"{r.get('measured_s', 0.0):>10.4f} "
-                            f"{pr:>9.2f} {r.get('predicted_j', 0.0):>10.3f}")
+                            f"{pr:>9.2f} {r.get('predicted_j', 0.0):>10.3f} "
+                            f"{r.get('predicted_comms_s', 0.0):>9.4f}")
         return "\n".join(rows)
 
     def serving_table(self) -> str:

@@ -111,15 +111,28 @@ def decode_attention(q, k, v, pos, *, scale=None, softcap=None,
     return out.reshape(B, H, hd)
 
 
-def _paged_dec_kernel(bt_ref, pos_ref, q_ref, *refs, scale, softcap,
-                      page_size, pages_per_blk, n_blocks):
+def _paged_dec_kernel(*args, scale, softcap, page_size, pages_per_blk,
+                      n_blocks, masked, partials):
     """Grid (B, Kv, n_blocks); each block sweeps ``pages_per_blk`` pages
     (block_t = pages_per_blk * page_size cache slots) with one online
-    softmax carried in VMEM scratch.  refs unpack as pages_per_blk k
-    page refs, pages_per_blk v page refs, the output, then scratch."""
+    softmax carried in VMEM scratch.  Scalar-prefetch operands are the
+    block table, per-sequence pos, and (when ``masked``) a page
+    ownership mask; the remaining refs unpack as the q ref,
+    pages_per_blk k page refs, pages_per_blk v page refs, the
+    output(s), then scratch.  ``partials`` emits the raw online-softmax
+    state (acc, m, l) instead of the normalized output — the sharded
+    caller merges per-stripe partials with psums."""
     m_ = pages_per_blk
+    if masked:
+        bt_ref, pos_ref, pm_ref, q_ref, *refs = args
+    else:
+        bt_ref, pos_ref, q_ref, *refs = args
+        pm_ref = None
     k_refs, v_refs = refs[:m_], refs[m_:2 * m_]
-    o_ref, m_ref, l_ref, acc_ref = refs[2 * m_:]
+    if partials:
+        o_acc_ref, o_m_ref, o_l_ref, m_ref, l_ref, acc_ref = refs[2 * m_:]
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs[2 * m_:]
     b = pl.program_id(0)
     blk = pl.program_id(2)
 
@@ -132,8 +145,13 @@ def _paged_dec_kernel(bt_ref, pos_ref, q_ref, *refs, scale, softcap,
     pos = pos_ref[b]
     for i in range(m_):
         t_start = (blk * m_ + i) * page_size
+        live = t_start <= pos
+        if masked:
+            # an unowned page's slot in the safe table points at local
+            # row 0 — skip it entirely, the merge recovers exactness
+            live = live & (pm_ref[b, blk * m_ + i] != 0)
 
-        @pl.when(t_start <= pos)
+        @pl.when(live)
         def _compute(i=i, t_start=t_start):
             q = q_ref[0, 0].astype(jnp.float32)            # (G, hd)
             k = k_refs[i][0, :, 0].astype(jnp.float32)     # (ps, hd)
@@ -158,13 +176,19 @@ def _paged_dec_kernel(bt_ref, pos_ref, q_ref, *refs, scale, softcap,
 
     @pl.when(blk == n_blocks - 1)
     def _finish():
-        o_ref[0, 0, ...] = (acc_ref[...]
-                            / jnp.maximum(l_ref[...], 1e-37)[:, None]
-                            ).astype(o_ref.dtype)
+        if partials:
+            o_acc_ref[0, 0, ...] = acc_ref[...]
+            o_m_ref[0, 0, ...] = m_ref[...]
+            o_l_ref[0, 0, ...] = l_ref[...]
+        else:
+            o_ref[0, 0, ...] = (acc_ref[...]
+                                / jnp.maximum(l_ref[...], 1e-37)[:, None]
+                                ).astype(o_ref.dtype)
 
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
                            scale=None, softcap=None, block_t=None,
+                           page_mask=None, partials=False,
                            interpret=True):
     """q (B,H,hd); k_pages/v_pages (P,ps,Kv,hd); block_tables (B,nmax)
     int32 physical page ids; pos (B,) int32 per-sequence last valid slot.
@@ -180,6 +204,13 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
     invocation — fewer grid steps against the same scattered pool.  The
     block table is padded with null pages when nmax doesn't divide.
     ``None`` keeps the one-page-per-step schedule.
+
+    ``page_mask`` (B,nmax) int32 marks which table entries this caller
+    owns (striped pools: a shard passes its local safe table plus the
+    ownership mask; unowned entries are skipped, not attended).
+    ``partials=True`` returns the raw online-softmax state
+    ``(acc (B,Kv,G,hd) f32, m (B,Kv,G) f32, l (B,Kv,G) f32)`` instead of
+    the normalized (B,H,hd) output, for cross-stripe psum merging.
     """
     B, H, hd = q.shape
     ps, Kv = k_pages.shape[1], k_pages.shape[2]
@@ -187,49 +218,72 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
     G = H // Kv
     scale = hd ** -0.5 if scale is None else scale
     m_ = 1 if block_t is None else max(1, block_t // ps)
+    masked = page_mask is not None
     qg = q.reshape(B, Kv, G, hd)
     bt = jnp.asarray(block_tables, jnp.int32)
+    pm = None if page_mask is None \
+        else jnp.asarray(page_mask, jnp.int32)
     if nmax % m_:
         pad = m_ - nmax % m_
         # pad with the reserved null page (id 0); t_start > pos masks it
         bt = jnp.pad(bt, ((0, 0), (0, pad)), constant_values=0)
+        if masked:
+            pm = jnp.pad(pm, ((0, 0), (0, pad)), constant_values=0)
         nmax += pad
     n_blocks = nmax // m_
     pos_arr = jnp.asarray(pos, jnp.int32).reshape(B)
 
     kernel = functools.partial(_paged_dec_kernel, scale=scale,
                                softcap=softcap, page_size=ps,
-                               pages_per_blk=m_, n_blocks=n_blocks)
+                               pages_per_blk=m_, n_blocks=n_blocks,
+                               masked=masked, partials=partials)
 
     def page_spec(i):
         # the block-index table drives the page DMA: page i of block p
-        # of sequence b is physical page bt[b, p*m_+i]
+        # of sequence b is physical page bt[b, p*m_+i] (pref[0] is the
+        # table whatever the scalar-prefetch arity)
         return pl.BlockSpec(
             (1, ps, 1, hd),
-            lambda b, kv, p, bt, sl, i=i: (bt[b, p * m_ + i], 0, kv, 0))
+            lambda b, kv, p, *pref, i=i: (pref[0][b, p * m_ + i], 0, kv, 0))
+
+    def head_spec(shape):
+        return pl.BlockSpec(shape, lambda b, kv, p, *pref: (b, kv) +
+                            (0,) * (len(shape) - 2))
+
+    if partials:
+        out_specs = [head_spec((1, 1, G, hd)), head_spec((1, 1, G)),
+                     head_spec((1, 1, G))]
+        out_shape = [jax.ShapeDtypeStruct((B, Kv, G, hd), jnp.float32),
+                     jax.ShapeDtypeStruct((B, Kv, G), jnp.float32),
+                     jax.ShapeDtypeStruct((B, Kv, G), jnp.float32)]
+    else:
+        out_specs = head_spec((1, 1, G, hd))
+        out_shape = jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=3 if masked else 2,
         grid=(B, Kv, n_blocks),
         in_specs=(
-            [pl.BlockSpec((1, 1, G, hd),
-                          lambda b, kv, p, bt, sl: (b, kv, 0, 0))]
+            [head_spec((1, 1, G, hd))]
             + [page_spec(i) for i in range(m_)]      # k pages
             + [page_spec(i) for i in range(m_)]),    # v pages
-        out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, kv, p, bt, sl: (b, kv, 0, 0)),
+        out_specs=out_specs,
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
     )
+    scalars = (bt, pos_arr, pm) if masked else (bt, pos_arr)
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        out_shape=out_shape,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
-    )(bt, pos_arr, qg, *([k_pages] * m_), *([v_pages] * m_))
+    )(*scalars, qg, *([k_pages] * m_), *([v_pages] * m_))
+    if partials:
+        acc, m, l = out
+        return acc, m, l
     return out.reshape(B, H, hd)

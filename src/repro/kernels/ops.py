@@ -38,12 +38,15 @@ def decode_attention(q, k, v, pos, *, scale=None, softcap=None,
                                  block_t=block_t, interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "softcap", "block_t"))
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "block_t",
+                                             "partials"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, pos, *,
-                           scale=None, softcap=None, block_t=None):
+                           scale=None, softcap=None, block_t=None,
+                           page_mask=None, partials=False):
     return _dec.paged_decode_attention(q, k_pages, v_pages, block_tables,
                                        pos, scale=scale, softcap=softcap,
-                                       block_t=block_t,
+                                       block_t=block_t, page_mask=page_mask,
+                                       partials=partials,
                                        interpret=_interpret())
 
 

@@ -122,11 +122,14 @@ def run_dense(args, cfg, mesh, params=None):
     return outputs, stats
 
 
-def run_paged(args, cfg, n_nodes: int = 1, params=None):
+def run_paged(args, cfg, n_nodes: int = 1, params=None, mesh=None):
     """Paged continuous-batching path.  Returns (tokens, stats, engine).
 
     ``n_nodes`` is the page-striping width (the model-axis extent the
-    cost engine prices and the allocator stripes over)."""
+    cost engine prices and the allocator stripes over).  With ``mesh``
+    the striping is literal: the engine places each KV page pool over
+    the mesh's model axis (NamedSharding on the page axis) and decode
+    runs the shard_map owner-partials merge."""
     import jax
     import numpy as np
     from repro.models import lm
@@ -138,9 +141,11 @@ def run_paged(args, cfg, n_nodes: int = 1, params=None):
     # auto pool: exact worst-case demand of a full batch + the null page
     n_pages = args.pages or (
         args.batch * (-(-max_len // args.page_size)) + 1)
+    if n_nodes > 1 and n_pages % n_nodes:
+        n_pages += n_nodes - n_pages % n_nodes   # stripe divisibility
     eng = PagedEngine(cfg, params, max_batch=args.batch,
                       page_size=args.page_size, n_pages=n_pages,
-                      max_len=max_len, n_nodes=n_nodes,
+                      max_len=max_len, n_nodes=n_nodes, mesh=mesh,
                       link_mode=args.link_mode,
                       prefill_budget=args.prefill_budget,
                       fused=args.fused, max_window=args.window,
@@ -325,6 +330,12 @@ def main():
                     help="flight-recorder ring size (spans kept; "
                          "oldest evicted first)")
     args = ap.parse_args()
+    if args.prompt_len < 1:
+        import sys
+        print(f"error: --prompt-len must be >= 1 (got {args.prompt_len}): "
+              "an empty prompt has no KV to prefill and no position to "
+              "decode from", file=sys.stderr)
+        raise SystemExit(2)
     if args.spec_k != "auto":
         args.spec_k = int(args.spec_k)
 
@@ -344,8 +355,12 @@ def main():
     if args.layout == "auto":
         decode_shape = ShapeConfig("serve", args.prompt_len + args.gen,
                                    args.batch, "decode")
+        # serving=True prices the striped-KV traffic (§V link model on
+        # the (n-1)/n remote write fraction + decode stats merge) on top
+        # of the transformer collectives
         best, ranked = autotune_layout(cfg, decode_shape,
-                                       mode=args.link_mode)
+                                       mode=args.link_mode,
+                                       serving=args.engine == "paged")
         predicted = best
         print(f"[cost-engine] {len(ranked)} candidate layouts for "
               f"{best.layout.n_chips} chips ({args.link_mode} mode):")
@@ -355,15 +370,19 @@ def main():
         print(f"[cost-engine] predicted decode step "
               f"{best.step_time_s * 1e3:.3f} ms "
               f"({best.tokens_per_s:.0f} tok/s)")
-        if args.engine == "dense":       # paged strips by model degree,
-            mesh = make_layout_mesh(best.layout)  # no mesh to build
-    elif args.data * args.model > 1 and args.engine == "dense":
-        mesh = make_test_mesh(args.data, args.model)
+        mesh = make_layout_mesh(best.layout)
+    elif args.data * args.model > 1:
+        import jax
+        if args.engine == "dense" \
+                or len(jax.devices()) >= args.data * args.model:
+            mesh = make_test_mesh(args.data, args.model)
+        # else: paged on a short host keeps host-side striping only
+        # (allocator accounting without device placement)
 
     if args.engine == "paged":
         n_nodes = (predicted.layout.model if predicted is not None
                    else max(args.model, 1))
-        outputs, m, eng = run_paged(args, cfg, n_nodes=n_nodes)
+        outputs, m, eng = run_paged(args, cfg, n_nodes=n_nodes, mesh=mesh)
         tokens = sum(len(t) for t in outputs.values())
         print(f"[paged] served {m['finished']} requests, {tokens} tokens "
               f"in {m['seconds']:.2f}s "

@@ -382,6 +382,93 @@ def paged_cache_update(pool: PagedAttnCache, k_new, v_new, block_tables,
                           v=pool.v.at[page, slot].set(v_new))
 
 
+def _paged_shard_axes(env, n_pages: int):
+    """The mesh axis the page pools stripe over, or None when the
+    single-device path applies (no env, trivial axis, or a page count
+    the stripe cannot divide)."""
+    if env is None:
+        return None
+    axes = env.resolve("pages")
+    axes = (axes,) if isinstance(axes, str) else tuple(axes or ())
+    if len(axes) != 1:
+        return None
+    n = env.mesh.shape[axes[0]]
+    if n <= 1 or n_pages % n:
+        return None
+    return axes
+
+
+def attend_decode_paged_sharded(q, pool: PagedAttnCache, block_tables,
+                                pos, *, scale, softcap, n_kv: int, env,
+                                axes, impl=None):
+    """Striped-pool decode via shard_map (pages sharded over "model").
+
+    Each stripe owner attends over only the pages whose physical slab
+    rows fall inside its contiguous shard ``[j*P/n, (j+1)*P/n)`` (the
+    ``stripe_slab_index`` layout: logical page p lives on node p % n),
+    then the per-stripe online-softmax partials (m, l, acc) merge with
+    (B,Kv,G)-sized psums — the split-T decode idiom applied to the page
+    axis, so the pool bytes never leave their owner node.  Block-table
+    entries arriving here are already *physical* slab rows (the engine
+    translates at the device boundary), so ownership is a range test.
+    Exactness: stripes a sequence doesn't touch contribute m = NEG_INF,
+    and exp(NEG_INF - m_global) underflows to exactly 0.0 — the merge
+    adds nothing, matching the single-device masked softmax on the
+    valid slots.
+    """
+    from repro.models.moe import _shard_map
+    B, _, H, hd = q.shape
+    Pn, ps = pool.k.shape[0], pool.k.shape[1]
+    Kv = n_kv
+    n = env.mesh.shape[axes[0]]
+    L = Pn // n
+    nmax = block_tables.shape[1]
+    T = nmax * ps
+
+    def body(q_l, k_l, v_l, bt_l, pos_l):
+        j = jax.lax.axis_index(axes[0])
+        local = bt_l - j * L
+        mine = (local >= 0) & (local < L)          # (B, nmax)
+        safe = jnp.where(mine, local, 0)
+        if impl == "pallas":
+            from repro.kernels import ops as kops
+            acc, m, l = kops.paged_decode_attention(
+                q_l.reshape(B, H, hd), k_l.reshape(L, ps, Kv, hd),
+                v_l.reshape(L, ps, Kv, hd), safe, pos_l,
+                scale=scale, softcap=softcap,
+                page_mask=mine.astype(jnp.int32), partials=True)
+        else:
+            k = k_l[safe].reshape(B, T, Kv, hd)
+            v = v_l[safe].reshape(B, T, Kv, hd)
+            qg = q_l.reshape(B, Kv, H // Kv, hd)
+            s = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                           preferred_element_type=jnp.float32) * scale
+            s = nn.softcap(s, softcap)
+            valid = (jnp.arange(T)[None, :] <= pos_l[:, None]) \
+                & jnp.repeat(mine, ps, axis=1)
+            s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+            m = s.max(-1)                                   # (B,Kv,G)
+            p = jnp.exp(s - m[..., None])
+            l = p.sum(-1)
+            acc = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
+                             preferred_element_type=jnp.float32)
+        m_g = jax.lax.pmax(m, axes)
+        corr = jnp.exp(m - m_g)
+        l_g = jax.lax.psum(l * corr, axes)
+        acc_g = jax.lax.psum(acc * corr[..., None], axes)
+        o = acc_g / jnp.maximum(l_g[..., None], 1e-37)
+        return o.astype(q_l.dtype).reshape(B, 1, H * hd)
+
+    from jax.sharding import PartitionSpec
+    pool_spec = env.spec("pages", None, None)
+    repl = PartitionSpec()
+    return _shard_map(
+        body, mesh=env.mesh,
+        in_specs=(repl, pool_spec, pool_spec, repl, repl),
+        out_specs=repl, check_vma=False)(q, pool.k, pool.v,
+                                         block_tables, pos)
+
+
 def attend_decode_paged(q, pool: PagedAttnCache, block_tables, pos, *,
                         scale, softcap, n_kv: int, impl=None):
     """q (B,1,H,hd); pool pages (P,ps,Kv*hd); pos (B,) int32.
@@ -389,7 +476,16 @@ def attend_decode_paged(q, pool: PagedAttnCache, block_tables, pos, *,
     Gathers the sequence's pages through the block table and runs the
     same masked decode attention as the dense path — identical arithmetic
     on the valid slots, so paged and dense decode agree token-for-token.
+    Under a mesh with a non-trivial "pages" stripe the owner-partial
+    shard_map path runs instead (same math, per-stripe partials merged).
     """
+    from repro.parallel.sharding import current_env
+    env = current_env()
+    axes = _paged_shard_axes(env, pool.k.shape[0])
+    if axes is not None:
+        return attend_decode_paged_sharded(
+            q, pool, block_tables, pos, scale=scale, softcap=softcap,
+            n_kv=n_kv, env=env, axes=axes, impl=impl)
     B, _, H, hd = q.shape
     ps = pool.k.shape[1]
     Kv = n_kv

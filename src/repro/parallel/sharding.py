@@ -54,7 +54,23 @@ DEFAULT_RULES: Dict[str, Axis] = {
     "fsdp_dense": None,
     "tp": "model",
     "stage": "pod",
+    # paged-KV serving: the page axis of the KV pools is striped over the
+    # TP axis with the paper's address%n rule (core/memory_server
+    # .stripe_slab_index maps logical page -> physical slab row so the
+    # NamedSharding over this axis places every stripe on its owner node)
+    "pages": "model",
 }
+
+# Serving rule table: ONLY the paged-KV pools are sharded.  Decode
+# activations are batch=1-per-request and tiny; striping them over the
+# training TP rules would either fail divisibility (data axis vs
+# batch 1) or force weight gathers per token.  The paper's serving
+# story is the *store* that is distributed (C4 nodes-as-storage): KV
+# pages live on their striped_owner node, parameters and activations
+# replicate, and the decode kernel's owner-partials merge is the only
+# cross-node collective.
+SERVING_RULES: Dict[str, Axis] = dict(
+    {k: None for k in DEFAULT_RULES}, pages="model")
 
 
 @dataclass(frozen=True)
@@ -263,7 +279,8 @@ def compat_shard_map(f, *, mesh, in_specs, out_specs, check_vma=False):
 # ---------------------------------------------------------------------------
 def autotune_layout(cfg, shape=None, n_chips: Optional[int] = None,
                     mode: str = "circuit", link=None,
-                    max_model: Optional[int] = None):
+                    max_model: Optional[int] = None,
+                    serving: bool = False):
     """Pick the (data, model) mesh factorization the cost engine scores
     fastest for ``cfg`` at ``shape``.
 
@@ -272,13 +289,19 @@ def autotune_layout(cfg, shape=None, n_chips: Optional[int] = None,
     :class:`~repro.core.costs.Layout`) and ``ranked`` is every candidate,
     fastest first.  ``n_chips`` defaults to the visible device count.
     Pure host-side arithmetic except that default — no arrays are placed.
+
+    ``serving=True`` prices the paged-KV stripe traffic on top of the
+    transformer collectives (:func:`repro.core.costs.rank_serving_layouts`
+    — the §V link model applied to the (n-1)/n remote fraction of KV
+    writes plus the per-window decode stats merge).
     """
     from repro.core import costs as costs_mod
     if n_chips is None:
         n_chips = len(jax.devices())
     link = link or costs_mod.LinkSpec()
-    ranked = costs_mod.rank_layouts(cfg, shape, n_chips, mode, link,
-                                    max_model)
+    rank = (costs_mod.rank_serving_layouts if serving
+            else costs_mod.rank_layouts)
+    ranked = rank(cfg, shape, n_chips, mode, link, max_model)
     return ranked[0], ranked
 
 

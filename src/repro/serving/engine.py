@@ -84,6 +84,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.memory_server import stripe_slab_index
 from repro.serving.paged_kv import NULL_PAGE, PageAllocator
 from repro.serving.scheduler import ContinuousBatchScheduler, Request
 from repro.serving.spec_decode import NGramSpec, SpecStats
@@ -91,14 +92,17 @@ from repro.serving.telemetry import MetricsRegistry, StepTracer, counter_attr
 
 
 @functools.lru_cache(maxsize=8)
-def _jitted_steps(cfg):
+def _jitted_steps(cfg, mesh=None):
     """One set of jitted step functions per (hashable, frozen) config —
     engines constructed with the same config share compile caches
     instead of re-tracing per instance (a large win for the test suite
     and for on/off A-B benchmark runs).  Donation is per-call, so
     sharing the jitted callables across engines is safe: each engine
     donates its own pools.  Bounded so a long-lived process sweeping
-    many configs does not retain compiled executables forever."""
+    many configs does not retain compiled executables forever.
+    ``mesh`` (hashable) keys the cache too: the same config traced with
+    striped pools compiles different (shard_map) programs than the
+    single-device engine, and the two must never share executables."""
     import jax
     from repro import steps as steps_mod
     return {
@@ -174,13 +178,35 @@ class PagedEngine:
                  spec_proposer: str = "device",
                  chunked_prefill: bool = False, chunk_tokens: int = 0,
                  fault_plan=None, trace: bool = False,
-                 trace_capacity: int = 4096):
+                 trace_capacity: int = 4096, mesh=None):
         import jax.numpy as jnp
         from repro.models import lm, modules as nn
 
         assert lm.paged_decodable(cfg), \
             f"{cfg.name} is not paged-decodable (attention-only, causal)"
         assert spec_proposer in ("device", "host")
+        # mesh: a jax Mesh whose "model" axis stripes the page pools
+        # (page p lives on node p % M via core/memory_server
+        # .stripe_slab_index — the host allocator's striped_owner
+        # accounting and the device placement agree by construction).
+        # The "data" axis, when present, just replicates engine work.
+        self.mesh = mesh
+        self._stripe = 1
+        if mesh is not None and "model" in getattr(mesh, "axis_names", ()):
+            self._stripe = int(mesh.shape["model"])
+        if self._stripe > 1:
+            if n_nodes == 1:
+                n_nodes = self._stripe
+            elif n_nodes != self._stripe:
+                raise ValueError(
+                    f"n_nodes={n_nodes} disagrees with the mesh's model "
+                    f"degree {self._stripe}: the host allocator's stripe "
+                    "and the device stripe must be the same partition")
+            if n_pages % self._stripe:
+                raise ValueError(
+                    f"n_pages={n_pages} not divisible by the stripe "
+                    f"degree {self._stripe}: every node must own an "
+                    "equal contiguous slab shard")
         # the registry must exist before any counter_attr assignment below
         self.registry = MetricsRegistry()
         self.tracer = StepTracer(capacity=trace_capacity) if trace else None
@@ -232,7 +258,21 @@ class PagedEngine:
 
         self.pools = lm.init_paged_caches(cfg, n_pages=n_pages,
                                           page_size=page_size)
-        steps = _jitted_steps(cfg)
+        if self._stripe > 1:
+            # place each pool leaf's page axis (third-from-last) over the
+            # mesh: node d holds slab rows [d*P/M, (d+1)*P/M) — exactly
+            # the pages stripe_slab_index maps to it
+            import jax
+            from repro.parallel.sharding import SERVING_RULES, use_sharding
+            with use_sharding(mesh, SERVING_RULES) as env:
+                self.pools = jax.device_put(
+                    self.pools,
+                    jax.tree.map(
+                        lambda a: env.sharding(
+                            *(((None,) * (a.ndim - 3))
+                              + ("pages", None, None))),
+                        self.pools))
+        steps = _jitted_steps(cfg, mesh if self._stripe > 1 else None)
         self._prefill = steps["prefill"]
         self._serve = steps["serve"]
         self._scan = steps["scan"]
@@ -299,6 +339,8 @@ class PagedEngine:
         # joules across the fleet) per prefill-shaped width, memoized —
         # the cost engine prices each width once
         self._pred_cache: Dict[int, tuple] = {}
+        # predicted stripe-interconnect cost per (tokens, merges) shape
+        self._comms_cache: Dict[tuple, tuple] = {}
         self.faults = None
         if fault_plan is not None:
             self.install_faults(fault_plan)
@@ -352,10 +394,28 @@ class PagedEngine:
         return cost
 
     # -- predicted-vs-measured attribution (telemetry spans) ---------------
+    def _serving_comms(self, n_tokens: int, n_merges: int) -> tuple:
+        """(predicted seconds, predicted wire bytes/device) of the stripe
+        interconnect traffic one dispatch implies — the §V link model on
+        the (M-1)/M remote fraction of ``n_tokens`` KV writes plus
+        ``n_merges`` per-layer decode-partials merges.  (0, 0) on a
+        single stripe.  Memoized per shape."""
+        if self._stripe <= 1:
+            return (0.0, 0.0)
+        key = (int(n_tokens), int(n_merges))
+        hit = self._comms_cache.get(key)
+        if hit is None:
+            from repro.core import costs
+            hit = self._comms_cache[key] = costs.serving_comm_cost(
+                self.cfg, costs.Layout(data=1, model=self._stripe),
+                self.link_mode, n_tokens=key[0], n_merges=key[1])
+        return hit
+
     def _predict_prefill(self, n_tokens: int) -> tuple:
-        """(predicted seconds, predicted joules) for one prefill-shaped
-        dispatch of ``n_tokens`` — prices prefill, suffix prefill,
-        chunk slices and spec verify widths.  Memoized per width."""
+        """(predicted seconds, predicted joules[, comms seconds, comms
+        bytes]) for one prefill-shaped dispatch of ``n_tokens`` — prices
+        prefill, suffix prefill, chunk slices and spec verify widths.
+        Memoized per width; the comms tail appears only under a stripe."""
         n = max(int(n_tokens), 1)
         hit = self._pred_cache.get(n)
         if hit is None:
@@ -363,15 +423,23 @@ class PagedEngine:
             est = self._estimate(
                 ShapeConfig("serve_prefill", n, 1, "prefill"),
                 self.link_mode, self.n_nodes)
-            hit = self._pred_cache[n] = (
-                est.step_time_s, est.energy.total_j * self.n_nodes)
+            hit = (est.step_time_s, est.energy.total_j * self.n_nodes)
+            if self._stripe > 1:
+                hit = hit + self._serving_comms(n, 0)
+            self._pred_cache[n] = hit
         return hit
 
     def _predict_scan(self, k: int) -> tuple:
-        """(seconds, joules) for a fused K-step decode window — K times
-        the admission-priced decode step."""
-        return (k * self.sched.decode_cost_s,
+        """(seconds, joules[, comms seconds, comms bytes]) for a fused
+        K-step decode window — K times the admission-priced decode step
+        (each step writes one KV entry per slot and merges the stripes'
+        decode partials once)."""
+        base = (k * self.sched.decode_cost_s,
                 k * self.decode_estimate.energy.total_j * self.n_nodes)
+        if self._stripe > 1:
+            cs, cb = self._serving_comms(self.max_batch, 1)
+            base = base + (k * cs, k * cb)
+        return base
 
     def _predict_cow(self) -> tuple:
         """(seconds, joules) for one device page copy: read + write one
@@ -394,7 +462,13 @@ class PagedEngine:
         and the cost engine's (seconds, joules) prediction."""
         if self.tracer is None:
             return self._NULLCTX
-        ps, pj = predfn() if predfn is not None else (0.0, 0.0)
+        vals = predfn() if predfn is not None else (0.0, 0.0)
+        ps, pj = vals[0], vals[1]
+        if len(vals) >= 4:
+            # striped engine: the predicted interconnect share rides the
+            # span so rollup_dispatch_events can attribute it per phase
+            extra = dict(extra, predicted_comms_s=vals[2],
+                         comms_bytes=vals[3])
         return self.tracer.dispatch(phase, self.sched.step_idx,
                                     predicted_s=ps, predicted_j=pj, **extra)
 
@@ -416,7 +490,16 @@ class PagedEngine:
     def submit(self, prompt, gen: int, *, tenant: str = "default",
                rid: Optional[str] = None, slo: str = "standard") -> Request:
         prompt = np.asarray(prompt, np.int32)
-        assert prompt.ndim == 1 and prompt.shape[0] + gen <= self.max_len
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            # a request must carry at least one token: prefill needs a
+            # position to produce the first logit, and the allocator's
+            # pages_for(0) == 0 means an empty prompt would occupy a
+            # scheduler slot while owning no pages at all
+            raise ValueError(
+                "empty prompt: zero-length requests are rejected at "
+                "submit (a prompt needs >= 1 token to prefill a first "
+                "logit)")
+        assert prompt.shape[0] + gen <= self.max_len
         rid = rid or f"r{self._n_submitted}"
         self._n_submitted += 1
         key = tuple(int(t) for t in prompt) if self.cache is not None \
@@ -478,6 +561,30 @@ class PagedEngine:
                 raise RuntimeError(
                     f"request {req.rid} still references quarantined "
                     f"pages {sorted(bad)} after recovery")
+
+    # -- stripe boundary (logical pages -> physical slab rows) -------------
+    def _phys(self, pages):
+        """Translate logical page ids to physical slab rows at the device
+        boundary.  The host side — allocator, scheduler, prefix cache,
+        fault plane — reasons entirely in logical ids (``striped_owner``
+        accounting); arrays crossing to the device carry slab rows so the
+        NamedSharding over the page axis places every page on its owner
+        node.  Identity on a single stripe, and NULL_PAGE (0) maps to
+        row 0 on node 0 always — no special case anywhere."""
+        if self._stripe == 1:
+            return pages
+        return stripe_slab_index(np.asarray(pages), self._stripe,
+                                 self.alloc.n_pages)
+
+    def _use_env(self):
+        """The sharding context every device dispatch runs under: the
+        engine's mesh when the pools are striped (so the traced steps see
+        the "pages" rule and take the shard_map decode path), else a
+        no-op."""
+        if self._stripe > 1:
+            from repro.parallel.sharding import SERVING_RULES, use_sharding
+            return use_sharding(self.mesh, SERVING_RULES)
+        return contextlib.nullcontext()
 
     # -- host mirror maintenance -------------------------------------------
     def _block_row(self, rid: str) -> np.ndarray:
@@ -549,7 +656,7 @@ class PagedEngine:
         jnp = self._jnp
         self.d_tokens = jnp.asarray(self.tokens)
         self.d_pos = jnp.asarray(self.pos)
-        self.d_block = jnp.asarray(self.block_tables)
+        self.d_block = jnp.asarray(self._phys(self.block_tables))
         self.d_active = jnp.asarray(self.active)
         self.h2d_syncs += 1
         self._dirty = False
@@ -561,7 +668,7 @@ class PagedEngine:
         steady-state speculation syncs nothing but page growth."""
         if not self._dirty_block:
             return
-        self.d_block = self._jnp.asarray(self.block_tables)
+        self.d_block = self._jnp.asarray(self._phys(self.block_tables))
         self.h2d_syncs += 1
         self._dirty_block = False
 
@@ -638,7 +745,12 @@ class PagedEngine:
     def warmup_windows(self):
         """Compile every scan bucket (and, with speculation on, every
         verify bucket) against inactive slots / null rows — null-page
-        writes are masked by design — so trace timing is steady-state."""
+        writes are masked by design — so trace timing is steady-state.
+        Null rows need no stripe translation: pi(0) == 0."""
+        with self._use_env():
+            self._warmup_windows_impl()
+
+    def _warmup_windows_impl(self):
         jnp = self._jnp
         if self.fused or self.spec is not None:
             zeros_tok = jnp.zeros((self.max_batch, 1), jnp.int32)
@@ -692,7 +804,7 @@ class PagedEngine:
                             rid=req.rid, tokens=req.prompt_len):
                 logits, self.pools = self._prefill(
                     self.params, jnp.asarray(req.prompt[None]), self.pools,
-                    jnp.asarray(row))
+                    jnp.asarray(self._phys(row)))
                 self.h2d_syncs += 1    # prompt + block row push
                 self.model_passes += 1
                 tok = int(jnp.argmax(logits, -1)[0, 0])
@@ -704,9 +816,9 @@ class PagedEngine:
             # private page before any write can touch it
             dst = self.alloc.held[req.rid][L // self.page_size]
             with self._span("cow_copy", self._predict_cow, rid=req.rid):
-                self.pools = self._copy_page(self.pools,
-                                             jnp.int32(match.cow_src),
-                                             jnp.int32(dst))
+                self.pools = self._copy_page(
+                    self.pools, jnp.int32(self._phys(match.cow_src)),
+                    jnp.int32(self._phys(dst)))
             self.cache.stats.cow_copies += 1
             self.cache.release_cow(match)
         suffix = np.asarray(req.prompt[L:], np.int32)
@@ -718,7 +830,8 @@ class PagedEngine:
                         rid=req.rid, tokens=slen, cached=L):
             logits, self.pools = self._suffix(
                 self.params, jnp.asarray(padded), self.pools,
-                jnp.asarray(row), jnp.int32(L), jnp.int32(slen))
+                jnp.asarray(self._phys(row)), jnp.int32(L),
+                jnp.int32(slen))
             self.h2d_syncs += 1        # suffix + block row push
             self.model_passes += 1
             tok = int(jnp.argmax(logits, -1)[0, 0])
@@ -740,9 +853,9 @@ class PagedEngine:
             dst = self.alloc.held[req.rid][req.cached_tokens
                                            // self.page_size]
             with self._span("cow_copy", self._predict_cow, rid=req.rid):
-                self.pools = self._copy_page(self.pools,
-                                             jnp.int32(match.cow_src),
-                                             jnp.int32(dst))
+                self.pools = self._copy_page(
+                    self.pools, jnp.int32(self._phys(match.cow_src)),
+                    jnp.int32(self._phys(dst)))
             self.cache.stats.cow_copies += 1
             self.cache.release_cow(match)
 
@@ -764,7 +877,8 @@ class PagedEngine:
                         rid=req.rid, tokens=n, start=start):
             logits, self.pools = self._chunk(
                 self.params, jnp.asarray(padded), self.pools,
-                jnp.asarray(row), jnp.int32(start), jnp.int32(n))
+                jnp.asarray(self._phys(row)), jnp.int32(start),
+                jnp.int32(n))
             self.h2d_syncs += 1        # chunk + block row push
             self.model_passes += 1
             self.chunk_dispatches += 1
@@ -940,7 +1054,7 @@ class PagedEngine:
                     act[s] = 0
                 self.d_tokens = jnp.asarray(self.tokens)
                 self.d_pos = jnp.asarray(self.pos)
-                d_bt, d_act = jnp.asarray(bt), jnp.asarray(act)
+                d_bt, d_act = jnp.asarray(self._phys(bt)), jnp.asarray(act)
                 self.h2d_syncs += 1
             else:
                 self._push(force=not self.fused)
@@ -990,7 +1104,7 @@ class PagedEngine:
                                 rid=req.rid, k=K, width=W):
                     logits, self.pools = self._verify(
                         self.params, jnp.asarray(padded), self.pools,
-                        jnp.asarray(self.block_tables[slot]),
+                        jnp.asarray(self._phys(self.block_tables[slot])),
                         jnp.int32(req.pos), jnp.int32(m + 1))
                     self.h2d_syncs += 1   # draft + block row push
                     greedy = np.asarray(jnp.argmax(logits[0, :m + 1], -1),
@@ -1068,7 +1182,15 @@ class PagedEngine:
         """Plan, prefill admissions, decode one fused window (or one
         step when ``fused=False``).  ``max_window`` additionally caps
         this window (e.g. to the next trace arrival).  Returns requests
-        finished this window."""
+        finished this window.
+
+        Under a striped mesh the whole step runs inside the sharding
+        env, so every dispatch resolves the ``pages`` axis and routes
+        paged attention through the shard_map owner-partial merge."""
+        with self._use_env():
+            return self._step_impl(max_window)
+
+    def _step_impl(self, max_window: Optional[int]) -> List[Request]:
         jnp = self._jnp
         if self.faults is not None:
             # watchdog tick BEFORE planning: detections quarantine pages

@@ -78,6 +78,14 @@ class PageAllocator:
 
     def __post_init__(self):
         assert self.n_pages > 1, "need at least one page beyond the null page"
+        if self.n_nodes > self.n_pages - 1:
+            # a node whose stripe holds zero allocatable pages starves its
+            # controller and skews conservation accounting (the paper's
+            # striping assumes every node owns part of the address space)
+            raise ValueError(
+                f"n_nodes={self.n_nodes} > allocatable pages "
+                f"{self.n_pages - 1}: every node needs at least one page "
+                f"in its stripe (raise n_pages or lower n_nodes)")
         self._free_by_node = [[] for _ in range(self.n_nodes)]
         # LIFO free lists per owner node; page 0 is never handed out
         for p in range(self.n_pages - 1, NULL_PAGE, -1):
@@ -113,7 +121,13 @@ class PageAllocator:
         return len(self.refcount)
 
     def pages_for(self, n_tokens: int) -> int:
-        return -(-max(n_tokens, 1) // self.page_size)
+        """Pages needed to hold ``n_tokens`` KV entries.  Zero tokens
+        need zero pages — a zero-length request is allocation-free, and
+        the engine rejects empty prompts at submit anyway (a prompt must
+        hold at least one token to prefill a first logit)."""
+        if n_tokens <= 0:
+            return 0
+        return -(-n_tokens // self.page_size)
 
     def refcount_of(self, page: int) -> int:
         return self.refcount.get(page, 0)

@@ -549,11 +549,17 @@ def rollup_dispatch_events(events: Iterable[Dict[str, Any]]
             continue
         row = acc.setdefault(ev["name"], {
             "count": 0, "predicted_s": 0.0, "measured_s": 0.0,
-            "predicted_j": 0.0})
+            "predicted_j": 0.0, "predicted_comms_s": 0.0,
+            "comms_bytes": 0.0})
         row["count"] += 1
         row["predicted_s"] += float(args.get("predicted_s", 0.0))
         row["measured_s"] += float(args.get("measured_s", 0.0))
         row["predicted_j"] += float(args.get("predicted_j", 0.0))
+        # striped-serving interconnect attribution (§V link model): spans
+        # dispatched under a mesh carry the window's predicted stripe
+        # traffic; single-device spans simply contribute 0
+        row["predicted_comms_s"] += float(args.get("predicted_comms_s", 0.0))
+        row["comms_bytes"] += float(args.get("comms_bytes", 0.0))
     for row in acc.values():
         row["err_ratio"] = (row["measured_s"] / row["predicted_s"]
                             if row["predicted_s"] > 0 else float("inf"))
@@ -564,7 +570,7 @@ def format_model_error(report: Dict[str, Dict[str, float]]) -> str:
     """Fixed-width per-phase attribution table (the §IV 'measured vs
     modeled' view)."""
     hdr = (f"{'phase':<14} {'count':>6} {'pred_s':>10} {'meas_s':>10} "
-           f"{'meas/pred':>9} {'pred_J':>10}")
+           f"{'meas/pred':>9} {'pred_J':>10} {'comm_s':>9}")
     lines = [hdr, "-" * len(hdr)]
     for phase in sorted(report):
         r = report[phase]
@@ -573,7 +579,8 @@ def format_model_error(report: Dict[str, Dict[str, float]]) -> str:
             f"{phase:<14} {int(r['count']):>6} {r['predicted_s']:>10.4f} "
             f"{r['measured_s']:>10.4f} "
             f"{ratio if math.isfinite(ratio) else float('nan'):>9.2f} "
-            f"{r['predicted_j']:>10.3f}")
+            f"{r['predicted_j']:>10.3f} "
+            f"{r.get('predicted_comms_s', 0.0):>9.4f}")
     return "\n".join(lines)
 
 

@@ -63,6 +63,26 @@ def make_serve_step(cfg: ModelConfig, impl: Optional[str] = None):
     return serve_step
 
 
+def constrain_paged_pools(pools):
+    """Pin the page-axis stripe of every KV pool leaf.
+
+    No-op without a mesh.  Every pool-returning step ends with this so
+    the scatters/gathers inside never let GSPMD resolve the output pools
+    to a different (e.g. replicated) layout — the device-side analogue
+    of ``StripedStore.write`` re-pinning its slab.  The page axis is
+    third-from-last in both unstacked (P, ps, F) and scan-stacked
+    (C, P, ps, F) leaves.
+    """
+    env = current_env()
+    if env is None:
+        return pools
+
+    def pin(a):
+        spec = ((None,) * (a.ndim - 3)) + ("pages", None, None)
+        return jax.lax.with_sharding_constraint(a, env.sharding(*spec))
+    return jax.tree.map(pin, pools)
+
+
 def make_paged_prefill_step(cfg: ModelConfig, impl: Optional[str] = None):
     """Prefill ONE sequence straight into the paged KV pools.
 
@@ -76,7 +96,8 @@ def make_paged_prefill_step(cfg: ModelConfig, impl: Optional[str] = None):
         pools = lm.paged_from_prefill(cfg, pools, raw, block_row)
         h_last = nn.rmsnorm(h[:, -1:], params["final_norm"]["scale"],
                             cfg.norm_eps)
-        return lm.head_logits(params, cfg, h_last), pools
+        return lm.head_logits(params, cfg, h_last), \
+            constrain_paged_pools(pools)
     return prefill_paged
 
 
@@ -90,7 +111,7 @@ def make_paged_serve_step(cfg: ModelConfig):
         logits, pools = lm.decode_step_paged(params, cfg, tokens, pools,
                                              block_tables, pos)
         next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return next_tok, logits, pools
+        return next_tok, logits, constrain_paged_pools(pools)
     return serve_paged
 
 
@@ -105,8 +126,9 @@ def make_paged_suffix_prefill(cfg: ModelConfig):
     engine buckets it to powers of two).
     """
     def suffix_prefill(params, tokens, pools, block_row, start, n_valid):
-        return lm.prefill_suffix_paged(params, cfg, tokens, pools,
-                                       block_row, start, n_valid)
+        logits, pools = lm.prefill_suffix_paged(params, cfg, tokens, pools,
+                                                block_row, start, n_valid)
+        return logits, constrain_paged_pools(pools)
     return suffix_prefill
 
 
@@ -128,8 +150,9 @@ def make_chunk_prefill(cfg: ModelConfig):
     of one per length.
     """
     def chunk_prefill(params, tokens, pools, block_row, start, n_valid):
-        return lm.chunk_prefill_paged(params, cfg, tokens, pools,
-                                      block_row, start, n_valid)
+        logits, pools = lm.chunk_prefill_paged(params, cfg, tokens, pools,
+                                               block_row, start, n_valid)
+        return logits, constrain_paged_pools(pools)
     return chunk_prefill
 
 
@@ -146,8 +169,9 @@ def make_verify_window(cfg: ModelConfig):
     buckets it to powers of two).
     """
     def verify_window(params, tokens, pools, block_row, start, n_valid):
-        return lm.verify_window_paged(params, cfg, tokens, pools,
-                                      block_row, start, n_valid)
+        logits, pools = lm.verify_window_paged(params, cfg, tokens, pools,
+                                               block_row, start, n_valid)
+        return logits, constrain_paged_pools(pools)
     return verify_window
 
 
@@ -213,7 +237,7 @@ def make_spec_draft_verify(cfg: ModelConfig):
         new_row = jnp.where((rel >= 0) & (rel < n_emit), src, row)
         history = jax.lax.dynamic_update_index_in_dim(history, new_row,
                                                       slot, 0)
-        return emitted, n_emit, m, history, pools
+        return emitted, n_emit, m, history, constrain_paged_pools(pools)
     return draft_verify
 
 
@@ -230,8 +254,9 @@ def make_page_copy():
     Jit with the pools donated; src/dst are traced scalars (one compile).
     """
     def copy_page(pools, src, dst):
-        return jax.tree.map(
+        pools = jax.tree.map(
             lambda a: a.at[..., dst, :, :].set(a[..., src, :, :]), pools)
+        return constrain_paged_pools(pools)
     return copy_page
 
 
@@ -246,8 +271,9 @@ def make_paged_serve_scan(cfg: ModelConfig):
     """
     def serve_scan(params, tokens, pools, block_tables, pos, active, *,
                    k: int):
-        return lm.decode_window_paged(params, cfg, tokens, pools,
-                                      block_tables, pos, active, k)
+        emitted, last, pos, pools = lm.decode_window_paged(
+            params, cfg, tokens, pools, block_tables, pos, active, k)
+        return emitted, last, pos, constrain_paged_pools(pools)
     return serve_scan
 
 

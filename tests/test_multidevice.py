@@ -50,6 +50,38 @@ def test_sharded_loss_matches_local():
     assert "OK" in out
 
 
+def test_striped_store_write_keeps_placement():
+    """``StripedStore.write`` goes through ``.at[].set`` — a scatter whose
+    output sharding XLA may resolve to replicated.  The store re-pins the
+    stripe after every write; this asserts the slab still carries the
+    P("model") placement (and round-trips values) afterwards."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.core.memory_server import StripedStore, stripe_slab_index
+        from repro.parallel.sharding import use_sharding
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(1, 4)
+        with use_sharding(mesh):
+            st = StripedStore(size=64)
+            want = NamedSharding(mesh, P("model"))
+            assert st.slab.sharding.is_equivalent_to(want, st.slab.ndim), \\
+                st.slab.sharding
+            addrs = jnp.array([0, 5, 17, 63])
+            st.write(addrs, jnp.array([1., 2., 3., 4.]))
+            # the write must not decay the stripe to replicated
+            assert st.slab.sharding.is_equivalent_to(want, st.slab.ndim), \\
+                st.slab.sharding
+            assert jnp.array_equal(st.read(addrs),
+                                   jnp.array([1., 2., 3., 4.]))
+            # host rule and device placement agree: slab row of address a
+            # is the stripe permutation, and row 0 stays row 0
+            assert int(stripe_slab_index(0, st.n, st.size)) == 0
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
 def test_lattice_allreduce_and_pipeline():
     out = run_py("""
         import jax, jax.numpy as jnp

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from conftest import dense_oracle, get_tiny_model, seeded_prompts
+from conftest import dense_oracle, get_tiny_model, make_engine, \
+    seeded_prompts
 from repro.core.memory_server import striped_owner
 from repro.serving import (ContinuousBatchScheduler, NULL_PAGE,
                            PageAllocator, PagedEngine, Request)
@@ -47,6 +48,66 @@ def test_allocator_alloc_grow_free_roundtrip():
     assert a.free_pages == 8
     assert a.alloc("r1", 3) is not None and a.grow("r1", 2)
     assert len(a.held["r1"]) == 5
+
+
+def test_allocator_rejects_degenerate_stripe():
+    """A stripe wider than the allocatable pool leaves some node owning
+    zero pages — its controller starves and conservation accounting
+    skews — so construction must fail loudly, not limp along."""
+    with pytest.raises(ValueError, match="at least one page"):
+        PageAllocator(n_pages=3, page_size=4, n_nodes=3)
+    with pytest.raises(ValueError, match="at least one page"):
+        PageAllocator(n_pages=2, page_size=4, n_nodes=8)
+    # boundary: n_nodes == n_pages - 1 is the thinnest legal stripe —
+    # every node owns exactly one allocatable page
+    a = PageAllocator(n_pages=4, page_size=4, n_nodes=3)
+    pages = a.alloc("r", 3)
+    assert sorted(a.owner(p) for p in pages) == [0, 1, 2]
+    assert a.check_conservation()
+
+
+def test_pages_for_zero_tokens_is_zero():
+    a = PageAllocator(n_pages=9, page_size=4, n_nodes=2)
+    assert a.pages_for(0) == 0
+    assert a.pages_for(-3) == 0
+    assert a.pages_for(1) == 1
+    assert a.pages_for(4) == 1
+    assert a.pages_for(5) == 2
+
+
+def test_engine_rejects_empty_prompt_at_submit():
+    """Zero-length (and non-1-D) prompts are rejected AT SUBMIT with a
+    ValueError — not deep in prefill — and the rejection leaves the
+    engine fully serviceable."""
+    cfg, params = get_tiny_model()
+    eng = make_engine(cfg, params)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(np.zeros((0,), np.int32), 4)
+    with pytest.raises(ValueError):
+        eng.submit(np.zeros((2, 3), np.int32), 4)
+    # the failed submits left no residue: a real request still serves
+    p = seeded_prompts(cfg, 1, 8, seed=5)[0]
+    eng.submit(p, 3, rid="ok")
+    fin = eng.run()
+    assert len(fin) == 1 and len(fin[0].tokens) == 3
+    assert eng.alloc.check_conservation()
+
+
+def test_serve_cli_exits_2_on_empty_prompt():
+    """--prompt-len 0 must exit with status 2 (CLI usage error) before
+    any engine work, with the reason on stderr."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.serve", "--tiny",
+         "--engine", "paged", "--prompt-len", "0", "--gen", "4"],
+        capture_output=True, text=True, env=env, timeout=120)
+    assert r.returncode == 2, (r.returncode, r.stderr)
+    assert "--prompt-len" in r.stderr
 
 
 def test_allocator_reserve_is_best_effort_capacity():

@@ -198,6 +198,66 @@ def test_adaptive_spec_preemption_and_rollback_stay_exact():
     assert eng.alloc.check_conservation() and eng.alloc.pages_in_use == 0
 
 
+def test_mesh_axis_matches_dense_oracle():
+    """The mesh axis of the cube: the pinned trace replayed at 1x1 (no
+    mesh), 1x2 and 2x2 — striped KV pools with the shard_map
+    owner-partials decode merge — in a forced-4-device subprocess (jax
+    pins the device count at first init, so the main pytest process
+    cannot host this).  Every layout must emit greedy tokens
+    bit-identical to the dense oracle computed in the same subprocess,
+    including the prefix-cache COW composition (shared prompts diverging
+    mid-page on device-sharded pools) and a forced-preemption pool
+    (victim recompute re-pushes translated block rows)."""
+    import os
+    from test_multidevice import run_py
+    tests_dir = os.path.dirname(os.path.abspath(__file__))
+    out = run_py(f"""
+        import sys
+        sys.path.insert(0, {tests_dir!r})
+        import numpy as np
+        from conftest import (dense_oracle, get_tiny_model, make_engine,
+                              seeded_prompts)
+        from repro.launch.mesh import make_test_mesh
+
+        cfg, params = get_tiny_model()
+        shared = seeded_prompts(cfg, 2, 12, shared=9, seed=21)
+        loops = seeded_prompts(cfg, 2, 12, motif=4, seed=33)
+        plain = seeded_prompts(cfg, 2, 12, seed=45)
+        prompts = [shared[0], loops[0], plain[0], shared[1], loops[1],
+                   plain[1]]
+        gens = [10, 14, 8, 11, 13, 9]
+        max_len = max(p.shape[0] + g for p, g in zip(prompts, gens))
+        dense = dense_oracle(cfg, params, prompts, gens, max_len)
+
+        def replay(mesh, n_pages, **kw):
+            eng = make_engine(cfg, params, max_batch=2, page_size=4,
+                              n_pages=n_pages, max_len=max_len,
+                              max_window=4, mesh=mesh, **kw)
+            for i, (p, g) in enumerate(zip(prompts, gens)):
+                eng.submit(np.asarray(p), g, rid=f"r{{i}}")
+            eng.run()
+            return eng, {{r.rid: list(r.tokens)
+                          for r in eng.sched.finished}}
+
+        for d, m in ((1, 1), (1, 2), (2, 2)):
+            mesh = make_test_mesh(d, m) if d * m > 1 else None
+            # prefix-cache COW on striped pools (divergence mid-page)
+            eng, toks = replay(mesh, 26, prefix_cache=True)
+            assert toks == dense, (d, m, "prefix")
+            assert eng.cache.stats.cow_copies >= 1, (d, m)
+            assert eng.metrics()["prefix_hits"] >= 1, (d, m)
+            # forced preemption: pool too small for the working set
+            eng, toks = replay(mesh, 12, prefill_budget=0.0)
+            assert toks == dense, (d, m, "preempt")
+            assert eng.metrics()["preemptions"] >= 1, (d, m)
+            assert eng.alloc.check_conservation()
+            assert eng.alloc.pages_in_use == 0
+            print(f"{{d}}x{{m}} OK")
+        print("OK")
+    """, devices=4)
+    assert "OK" in out
+
+
 def test_chunked_midprefill_preemption_recomputes_through_cache():
     """The forced composition trace: a half-prefilled CHUNKED request is
     preempted by a decoding tenant's page growth, then recomputes
